@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding: timed SKR-vs-GMRES dataset runs and CSV
+emission. Scales are CPU-sized (paper's full 72-thread Xeon runs are out of
+scope for this box) — speedup RATIOS are the reproduced quantity."""
+from __future__ import annotations
+
+import dataclasses
+import io
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.skr import SKRConfig, SKRGenerator
+from repro.pde.registry import get_family
+from repro.solvers.types import KrylovConfig
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    mean_time_s: float
+    mean_iters: float
+    hit_maxiter: int
+    num: int
+    extra: Optional[dict] = None
+
+
+def run_sequence(family_name: str, *, nx: int, num: int, tol: float,
+                 precond: str, solver: str, m: int = 40, k: int = 15,
+                 maxiter: int = 10_000, sort_method: str = "greedy",
+                 seed: int = 0, warmup: int = 1):
+    """One (dataset × precond × tol × solver) cell. `solver` ∈ {skr, gmres}.
+    A warmup solve triggers all JIT compiles before timing starts."""
+    fam = get_family(family_name, nx=nx, ny=nx)
+    if solver == "gmres":
+        cfg = SKRConfig(krylov=KrylovConfig(m=m, k=0, tol=tol,
+                                            maxiter=maxiter),
+                        sort_method="none", precond=precond)
+    else:
+        cfg = SKRConfig(krylov=KrylovConfig(m=m, k=k, tol=tol,
+                                            maxiter=maxiter),
+                        sort_method=sort_method, precond=precond)
+    gen = SKRGenerator(fam, cfg)
+    if warmup:
+        gen.generate(jax.random.PRNGKey(seed + 999), warmup)
+    t0 = time.perf_counter()
+    res = gen.generate(jax.random.PRNGKey(seed), num)
+    wall = time.perf_counter() - t0
+    s = res.stats
+    return res, RunResult(
+        name=f"{family_name}/{precond}/{tol:g}/{solver}",
+        mean_time_s=wall / num,
+        mean_iters=s.mean_iterations,
+        hit_maxiter=s.num_hit_maxiter,
+        num=num,
+    )
+
+
+class CSV:
+    def __init__(self, header: List[str]):
+        self.buf = io.StringIO()
+        self.header = header
+        print(",".join(header), file=self.buf)
+
+    def row(self, *vals):
+        print(",".join(str(v) for v in vals), file=self.buf)
+
+    def emit(self, title: str):
+        print(f"\n### {title}")
+        print(self.buf.getvalue().rstrip())

@@ -1,0 +1,44 @@
+"""Paper Fig. 11/12: accuracy-vs-cost convergence curves. For a tolerance
+ladder we record mean iterations and mean time per system for both solvers —
+the data behind the log-accuracy convergence plot, including the superlinear
+high-precision tail the paper fits slopes to (App. D.5.1/D.5.2)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CSV, run_sequence
+
+NX = 20
+NUM = 12
+TOLS = (1e-2, 1e-4, 1e-6, 1e-8, 1e-10)
+
+
+def run(quick: bool = False):
+    tols = TOLS[:3] if quick else TOLS
+    num = 8 if quick else NUM
+    csv = CSV(["tol", "gmres_iters", "skr_iters", "gmres_ms", "skr_ms"])
+    rows = {"gmres": [], "skr": []}
+    for tol in tols:
+        _, g = run_sequence("helmholtz", nx=NX, num=num, tol=tol,
+                            precond="jacobi", solver="gmres")
+        _, s = run_sequence("helmholtz", nx=NX, num=num, tol=tol,
+                            precond="jacobi", solver="skr")
+        rows["gmres"].append((tol, g.mean_iters))
+        rows["skr"].append((tol, s.mean_iters))
+        csv.row(f"{tol:g}", f"{g.mean_iters:.1f}", f"{s.mean_iters:.1f}",
+                f"{g.mean_time_s * 1e3:.2f}", f"{s.mean_time_s * 1e3:.2f}")
+    csv.emit("Fig 11/12 — convergence ladder (iterations & time vs accuracy)")
+
+    # high-precision slope fit (last 3 points), as in App. D.5
+    for name, r in rows.items():
+        pts = r[-3:]
+        if len(pts) >= 2:
+            x = np.array([p[1] for p in pts])
+            y = np.log10([p[0] for p in pts])
+            slope = np.polyfit(x, y, 1)[0]
+            print(f"high-precision slope[{name}]: {slope:.3e} "
+                  f"log10(tol)/iter (more negative = faster convergence)")
+
+
+if __name__ == "__main__":
+    run()

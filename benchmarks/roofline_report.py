@@ -1,0 +1,56 @@
+"""§Roofline report: aggregates the dry-run JSONs (results/dryrun_pod,
+results/dryrun_multipod) into the per-(arch × shape × mesh) roofline table —
+three terms, dominant bottleneck, MODEL_FLOPS ratio, HBM fit."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import CSV
+
+DIRS = ("results/dryrun_pod", "results/dryrun_multipod")
+
+
+def load_records(dirs=DIRS):
+    recs = []
+    for d in dirs:
+        for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+            with open(fn) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = False):
+    recs = load_records()
+    if not recs:
+        print("### Roofline report: no dry-run results found "
+              "(run python -m repro.launch.dryrun --all first)")
+        return
+    csv = CSV(["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+               "collective_s", "dominant", "useful_flops",
+               "bytes_per_chip_GB", "fits_16GB"])
+    for r in recs:
+        if r["status"] != "ok":
+            csv.row(r["arch"], r["shape"], r["mesh"], r["status"],
+                    "-", "-", "-", "-", "-", "-", "-")
+            continue
+        roof = r["roofline"]
+        csv.row(r["arch"], r["shape"], r["mesh"], "ok",
+                f"{roof['compute_s']:.3e}", f"{roof['memory_s']:.3e}",
+                f"{roof['collective_s']:.3e}", roof["dominant"],
+                f"{(roof['useful_flops_ratio'] or 0):.2f}",
+                f"{r.get('bytes_per_chip', 0) / 1e9:.1f}",
+                r.get("fits_v5e_hbm"))
+    csv.emit("Roofline — per (arch × shape × mesh) from the compiled dry-run")
+
+    ok = [r for r in recs if r["status"] == "ok"]
+    by_dom = {}
+    for r in ok:
+        by_dom.setdefault(r["roofline"]["dominant"], []).append(r)
+    print("\ndominant-term census:",
+          {k: len(v) for k, v in sorted(by_dom.items())})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure:
+
+  table1_speedup       Table 1  (SKR vs GMRES, dataset × precond × tol)
+  table2_sort_ablation Table 2  (sort ablation + δ metric)
+  convergence_fig11    Fig 11/12 (accuracy-vs-cost ladders + slope fits)
+  stability_fig13      Fig 13   (max-iteration saturation fractions)
+  parallel_e22         Table 31 (chunk-parallel SKR)
+  table33_no_training  Table 33 (FNO on SKR vs GMRES data)
+  roofline_report      §Roofline (aggregates dry-run artifacts)
+
+``python -m benchmarks.run [--quick] [--only NAME]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (convergence_fig11, parallel_e22, roofline_report,
+                        stability_fig13, table1_speedup,
+                        table2_sort_ablation, table33_no_training)
+
+BENCHES = [
+    ("table1_speedup", table1_speedup.run),
+    ("table2_sort_ablation", table2_sort_ablation.run),
+    ("convergence_fig11", convergence_fig11.run),
+    ("stability_fig13", stability_fig13.run),
+    ("parallel_e22", parallel_e22.run),
+    ("table33_no_training", table33_no_training.run),
+    ("roofline_report", roofline_report.run),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grids/tols for CI-speed runs")
+    ap.add_argument("--only", default=None,
+                    choices=[n for n, _ in BENCHES])
+    args = ap.parse_args(argv)
+
+    for name, fn in BENCHES:
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        fn(quick=args.quick)
+        print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,30 @@
+"""Paper Fig. 13: stability — fraction of systems hitting the max-iteration
+cap without converging, per solver, under a tight cap (the paper uses 1e4 on
+n=1e4 Darcy; we scale the cap down with the grid)."""
+from __future__ import annotations
+
+from benchmarks.common import CSV, run_sequence
+
+NX = 24
+NUM = 16
+CAP = 450          # tight cap so GMRES visibly saturates on hard systems
+TOLS = (1e-5, 1e-8)
+
+
+def run(quick: bool = False):
+    tols = TOLS[:1] if quick else TOLS
+    num = 8 if quick else NUM
+    csv = CSV(["tol", "solver", "hit_maxiter", "num", "fraction"])
+    for tol in tols:
+        for solver in ("gmres", "skr"):
+            _, r = run_sequence("darcy", nx=NX, num=num, tol=tol,
+                                precond="none", solver=solver,
+                                maxiter=CAP)
+            csv.row(f"{tol:g}", solver, r.hit_maxiter, r.num,
+                    f"{r.hit_maxiter / r.num:.2f}")
+    csv.emit(f"Fig 13 — stability under maxiter cap {CAP} "
+             "(lower fraction = more stable; SKR should dominate)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,92 @@
+"""Paper Table 2: sort ablation — SKR with vs without sorting, reporting
+time, iterations and the δ(Q,C) subspace distance (Eq. 5).
+
+Setting adapted to CPU scale: Helmholtz + Jacobi (the small-grid setting
+where sorting's effect is visible, mirroring the paper's Darcy/SOR/1e-8 at
+n=1e4). δ is computed against the k=4 smallest invariant subspace of the
+RIGHT-PRECONDITIONED operator A·M⁻¹ (the operator GCRO-DR actually
+deflates), averaged over consecutive pairs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.linalg
+
+from benchmarks.common import CSV
+from repro.core.metrics import delta_subspace, orthonormalize
+from repro.core.skr import SKRConfig, SKRGenerator, _problem_op_of
+from repro.pde.registry import get_family
+from repro.solvers.precond import make_preconditioner
+from repro.solvers.types import KrylovConfig
+
+NX = 20
+NUM = 16
+TOL = 1e-8
+FAMILY = "helmholtz"
+PRECOND = "jacobi"
+K_TARGET = 4
+
+
+def _precond_dense(pre, n):
+    eye = np.eye(n)
+    cols = [np.asarray(pre.apply(jnp.asarray(eye[:, i]))) for i in range(n)]
+    return np.stack(cols, axis=1)
+
+
+def _small_inv_subspace(m, k):
+    evals, evecs = scipy.linalg.eig(m)
+    order = np.argsort(np.abs(evals))
+    chosen = set(order[:k].tolist())
+    for i in order[:k]:
+        if abs(evals[i].imag) > 0:
+            chosen.add(int(np.argmin(np.abs(evals - np.conj(evals[i])))))
+    idx = sorted(chosen)
+    basis = np.concatenate([np.real(evecs[:, idx]),
+                            np.imag(evecs[:, idx])], axis=1)
+    return orthonormalize(basis)
+
+
+def _mean_delta(fam, res, num):
+    batch = fam.sample_batch(jax.random.PRNGKey(0), num)
+    snaps = dict(res.recycle_snapshots)
+    order = res.order.tolist()
+    deltas = []
+    for pos in range(len(order) - 1):
+        i, nxt = order[pos], order[pos + 1]
+        if i not in snaps:
+            continue
+        op_next = _problem_op_of(batch, int(nxt))
+        am = op_next.to_dense() @ _precond_dense(
+            make_preconditioner(PRECOND, op_next), NX * NX)
+        q = _small_inv_subspace(am, K_TARGET)
+        deltas.append(delta_subspace(q, snaps[i]))
+    return float(np.mean(deltas)) if deltas else float("nan")
+
+
+def run(quick: bool = False):
+    fam = get_family(FAMILY, nx=NX, ny=NX)
+    kc = KrylovConfig(m=30, k=10, tol=TOL, maxiter=10_000)
+    csv = CSV(["variant", "mean_time_s", "mean_iters", "delta_k4",
+               "chain_len"])
+    num = 8 if quick else NUM
+    # nosort first so one-time JIT compiles never favor the sorted variant
+    for variant, sort_method in (("SKR(random-order)", "random"),
+                                 ("SKR(nosort)", "none"),
+                                 ("SKR(sort)", "greedy")):
+        cfg = SKRConfig(krylov=kc, sort_method=sort_method, precond=PRECOND,
+                        record_recycle=True)
+        gen = SKRGenerator(fam, cfg)
+        gen.generate(jax.random.PRNGKey(99), 2)  # warm both cycle shapes
+        res = gen.generate(jax.random.PRNGKey(0), num)
+        csv.row(variant, f"{res.stats.mean_time_s:.4f}",
+                f"{res.stats.mean_iterations:.1f}",
+                f"{_mean_delta(fam, res, num):.3f}",
+                f"{res.chain_len:.1f}")
+    csv.emit(f"Table 2 — sort ablation ({FAMILY}, {PRECOND}, tol {TOL:g}): "
+             "sort lowers δ and chain length; iteration effect is modest "
+             "at n=400 (paper: 9.2% at n=1e4)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Paper App. E.3 (Table 33): dataset validity — FNO trained on the SKR-
+generated dataset vs the GMRES-generated dataset shows identical training
+dynamics (relative-L2 at epochs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CSV
+from repro.core.skr import SKRConfig, generate_dataset, \
+    generate_dataset_baseline
+from repro.operators import FNOConfig, fno_apply, fno_init
+from repro.operators.fno import add_coords, relative_l2
+from repro.pde.registry import get_family
+from repro.solvers.types import KrylovConfig
+from repro.train.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+NX = 20
+NUM = 24
+STEPS = 120
+CHECK = (0, 30, 60, 90, 119)
+
+
+def run(quick: bool = False):
+    num = 12 if quick else NUM
+    steps = 40 if quick else STEPS
+    checks = [c for c in CHECK if c < steps] + [steps - 1]
+    kc = KrylovConfig(m=30, k=10, tol=1e-8, maxiter=10_000)
+    fam = get_family("darcy", nx=NX, ny=NX)
+    key = jax.random.PRNGKey(0)
+    ds = {
+        "SKR": generate_dataset(fam, key, num,
+                                SKRConfig(krylov=kc, precond="jacobi")),
+        "GMRES": generate_dataset_baseline(fam, key, num, kc,
+                                           precond="jacobi"),
+    }
+    cfg = FNOConfig(modes=6, width=16, n_blocks=2)
+    csv = CSV(["dataset"] + [f"step{c}" for c in sorted(set(checks))])
+    for name, d in ds.items():
+        params = fno_init(jax.random.PRNGKey(1), cfg)
+        x = add_coords(jnp.asarray(d.inputs))
+        y = jnp.asarray(d.solutions)[..., None]
+        scale = jnp.maximum(jnp.std(y), 1e-9)
+
+        hist = {}
+
+        def loss_fn(p, batch):
+            pred = fno_apply(p, cfg, batch["x"])
+            return jnp.mean((pred - batch["y"]) ** 2)
+
+        tr = Trainer(loss_fn, params, optimizer=adamw(2e-3),
+                     cfg=TrainerConfig(log_every=0))
+
+        def batches(i):
+            return {"x": x, "y": y / scale}
+
+        state, losses = tr.run(batches, steps)
+        rel = relative_l2(fno_apply(state["params"], cfg, x) * scale, y)
+        vals = [f"{losses[c]:.4f}" for c in sorted(set(checks))]
+        csv.row(name, *vals)
+        print(f"{name}: final relative-L2 {float(rel):.4f}")
+    csv.emit("Table 33 — FNO training on SKR vs GMRES data "
+             "(identical dynamics expected)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Quickstart: the paper in 40 lines — generate a neural-operator training
+dataset for 2-D Darcy flow with SKR (sort + GCRO-DR recycling) and compare
+against independent GMRES solves.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+
+from repro.core.skr import SKRConfig, generate_dataset, \
+    generate_dataset_baseline
+from repro.pde.registry import get_family
+from repro.solvers.types import KrylovConfig
+
+
+def main():
+    fam = get_family("poisson", nx=24, ny=24)     # 576-unknown systems
+    kc = KrylovConfig(m=30, k=10, tol=1e-8, maxiter=10_000)
+    cfg = SKRConfig(krylov=kc, sort_method="greedy", precond="jacobi")
+    key = jax.random.PRNGKey(0)
+    n = 16
+
+    print(f"generating {n} Poisson systems ({fam.n} unknowns each)…")
+    # warm both pipelines (one-time XLA compiles, incl. the batched
+    # sampler at this exact batch size) before timing
+    generate_dataset(fam, jax.random.PRNGKey(7), n, cfg)
+    generate_dataset_baseline(fam, jax.random.PRNGKey(7), n, kc,
+                              precond="jacobi")
+
+    t0 = time.perf_counter()
+    skr = generate_dataset(fam, key, n, cfg)
+    t_skr = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    gm = generate_dataset_baseline(fam, key, n, kc, precond="jacobi")
+    t_gm = time.perf_counter() - t0
+
+    print(f"\n{'':14s}{'GMRES':>10s}{'SKR':>10s}{'ratio':>8s}")
+    print(f"{'mean iters':14s}{gm.stats.mean_iterations:10.1f}"
+          f"{skr.stats.mean_iterations:10.1f}"
+          f"{gm.stats.mean_iterations / skr.stats.mean_iterations:8.2f}x")
+    print(f"{'wall time':14s}{t_gm:9.2f}s{t_skr:9.2f}s"
+          f"{t_gm / t_skr:8.2f}x")
+    print(f"\ndataset: inputs {skr.solutions.shape} labels "
+          f"{skr.solutions.shape} (identical to GMRES within tol: "
+          f"{abs(skr.solutions - gm.solutions).max():.2e})")
+
+
+if __name__ == "__main__":
+    main()

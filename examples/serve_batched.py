@@ -1,0 +1,12 @@
+"""Batched LM serving example: wave-scheduled prefill + decode over a
+request queue (the serving-side driver; smoke-scale on CPU, the same step
+functions the decode_32k dry-run cells lower on the production mesh).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch tinyllama-1.1b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,36 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from the dry-run
+JSONs (run after a dry-run refresh)."""
+import glob
+import json
+import os
+import re
+
+rows = []
+for d in ("results/dryrun_pod", "results/dryrun_multipod"):
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rows.append(json.load(open(fn)))
+order = {"pod16x16": 0, "pods2x16x16": 1}
+rows.sort(key=lambda r: (order.get(r["mesh"], 2), r["arch"], r["shape"]))
+
+lines = ["| arch | shape | mesh | status | compute_s | memory_s | "
+         "collective_s | dominant | 6ND/HLO | GB/chip |",
+         "|---|---|---|---|---|---|---|---|---|---|"]
+for r in rows:
+    if r["status"] != "ok":
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                     f"{r['status']} | – | – | – | – | – | – |")
+        continue
+    ro = r["roofline"]
+    lines.append(
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+        f"{ro['compute_s']:.2e} | {ro['memory_s']:.2e} | "
+        f"{ro['collective_s']:.2e} | **{ro['dominant']}** | "
+        f"{ro['useful_flops_ratio'] or 0:.2f} | "
+        f"{r.get('bytes_per_chip', 0) / 1e9:.1f} |")
+table = "\n".join(lines)
+
+exp = open("EXPERIMENTS.md").read()
+start = exp.index("| arch | shape | mesh |")
+end = exp.index("\n\nDominant-term census")
+open("EXPERIMENTS.md", "w").write(exp[:start] + table + exp[end:])
+print(f"updated table with {len(rows)} rows")

@@ -1,0 +1,14 @@
+# repro — production-grade JAX framework implementing
+# "Accelerating Data Generation for Neural Operators via Krylov Subspace
+# Recycling" (SKR, ICLR 2024) as a first-class data-generation subsystem,
+# plus the full training/serving substrate (model zoo, distributed runtime,
+# fault tolerance, dry-run + roofline harness).
+#
+# Solvers require f64 on CPU for paper-parity tolerances (down to 1e-11).
+# The LM stack always passes explicit (bf16/f32) dtypes, so enabling x64
+# globally is safe and matches PETSc semantics.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import get_config, get_smoke_config, list_archs

@@ -1,0 +1,115 @@
+"""Config system: ModelConfig (architecture), ShapeConfig (workload cells)
+and the registry behind ``--arch``.
+
+Every assigned architecture gets one module in this package defining
+``CONFIG``; ``registry.py`` exposes them plus reduced smoke variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 1_000_000.0
+    window: Optional[int] = None     # sliding-window attention
+    act: str = "silu"                # silu → SwiGLU MLP; gelu → plain MLP
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    moe_impl: str = "dispatch"       # dispatch (capacity buckets) | dense
+    capacity_factor: float = 1.25
+    # --- MLA (minicpm3 / deepseek-style) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # --- recurrent / hybrid ---
+    block_pattern: Tuple[str, ...] = ("attn",)  # attn|mlstm|slstm|rec
+    d_rec: int = 0                  # RG-LRU width (recurrentgemma)
+    conv_width: int = 4
+    # --- encoder-decoder (whisper) ---
+    is_encdec: bool = False
+    n_enc_layers: int = 0
+    enc_positions: int = 1500        # stub frontend sequence length
+    # --- VLM (qwen2-vl) ---
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    # --- numerics / lowering ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    attn_chunk: int = 512            # kv-chunk for the jnp flash path
+    use_flash_kernel: bool = False   # Pallas kernel routing (TPU)
+    # --- shape applicability (DESIGN §3) ---
+    skip_shapes: Tuple[str, ...] = ()
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (total, incl. all experts)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        nq, nkv = self.n_heads, self.n_kv_heads
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.use_mla:
+            per_layer += d * self.q_lora_rank + self.q_lora_rank * nq * (
+                self.qk_nope_head_dim + self.qk_rope_head_dim)
+            per_layer += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+            per_layer += self.kv_lora_rank * nq * (self.qk_nope_head_dim + self.v_head_dim)
+            per_layer += nq * self.v_head_dim * d
+        else:
+            per_layer += d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+        if self.is_moe:
+            per_layer += d * self.n_experts  # router
+            per_layer += self.n_experts * 3 * d * self.moe_d_ff
+        elif self.d_ff > 0:
+            mults = 3 if self.act == "silu" else 2
+            per_layer += mults * d * self.d_ff
+        n_attn_layers = self.n_layers
+        return emb + per_layer * n_attn_layers
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        full = self.param_count()
+        inactive = self.n_layers * (self.n_experts - self.top_k) * 3 * self.d_model * self.moe_d_ff
+        return full - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

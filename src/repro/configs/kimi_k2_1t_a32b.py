@@ -1,0 +1,13 @@
+"""kimi-k2-1t-a32b [moe]: trillion-parameter MoE, 384 experts top-8,
+expert width 2048 [arXiv:2501.kimi2 paper-table]. EP over the model axis +
+FSDP over data. Full attention → long_500k skipped."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=2048, vocab=163840, head_dim=128,
+    n_experts=384, top_k=8, moe_d_ff=2048,
+    rope_theta=50_000.0, act="silu",
+    skip_shapes=("long_500k",),
+)

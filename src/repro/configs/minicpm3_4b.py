@@ -1,0 +1,13 @@
+"""minicpm3-4b [dense]: Multi-head Latent Attention [hf:openbmb/MiniCPM3-4B; hf].
+MLA compressed-KV cache (kv_lora_rank + rope dim per token)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b", family="dense",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=6400, vocab=73448,
+    use_mla=True, q_lora_rank=768, kv_lora_rank=256,
+    qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64,
+    tie_embeddings=True, rope_theta=10_000.0, act="silu",
+    skip_shapes=("long_500k",),
+)

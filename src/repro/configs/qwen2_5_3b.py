@@ -1,0 +1,11 @@
+"""qwen2.5-3b [dense]: GQA kv=2, QKV bias, tied embeddings
+[hf:Qwen/Qwen2.5-0.5B; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b", family="dense",
+    n_layers=36, d_model=2048, n_heads=16, n_kv_heads=2,
+    d_ff=11008, vocab=151936, head_dim=128,
+    qkv_bias=True, tie_embeddings=True, rope_theta=1_000_000.0, act="silu",
+    skip_shapes=("long_500k",),
+)

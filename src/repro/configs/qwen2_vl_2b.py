@@ -1,0 +1,13 @@
+"""qwen2-vl-2b [vlm]: M-RoPE (t/h/w sections 16/24/24), dynamic-resolution
+patch frontend STUBBED (input_specs provides position triples; patch embeds
+enter as tokens) [arXiv:2409.12191; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", family="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+    d_ff=8960, vocab=151936, head_dim=128,
+    qkv_bias=True, tie_embeddings=True,
+    mrope_sections=(16, 24, 24), rope_theta=1_000_000.0, act="silu",
+    skip_shapes=("long_500k",),
+)

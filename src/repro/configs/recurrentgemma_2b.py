@@ -1,0 +1,13 @@
+"""recurrentgemma-2b [hybrid]: RG-LRU + local attention, 2 recurrent blocks
+per 1 local-attn block (Griffin) [arXiv:2402.19427; hf]. O(window + state)
+memory ⇒ runs long_500k."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1,
+    d_ff=7680, vocab=256000, head_dim=256,
+    block_pattern=("rec", "rec", "attn"),
+    d_rec=2560, conv_width=4, window=2048,
+    rope_theta=10_000.0, act="gelu",
+)

@@ -1,0 +1,75 @@
+"""Registry behind ``--arch``: full configs + reduced smoke variants.
+
+Smoke variants keep the FAMILY structure (same block pattern, MoE/MLA/GQA
+topology) at toy width so one train step + one decode step run on CPU in
+seconds; full configs are only ever touched via ShapeDtypeStruct lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "whisper-base": "repro.configs.whisper_base",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {list_archs()}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config: small layers/width, few experts, tiny
+    vocab — runs a forward/train step on CPU asserting shapes + no NaNs."""
+    cfg = get_config(name)
+    pat = len(cfg.block_pattern)
+    reduced: Dict = dict(
+        n_layers=max(2, pat) if cfg.n_layers % max(2, pat) == 0 or pat == 1
+        else 2 * pat,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab=512,
+        attn_chunk=64,
+        remat=False,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    if cfg.is_moe:
+        reduced.update(n_experts=4, top_k=2, moe_d_ff=64)
+    if cfg.use_mla:
+        reduced.update(q_lora_rank=32, kv_lora_rank=16,
+                       qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+    if cfg.is_encdec:
+        reduced.update(n_enc_layers=2, enc_positions=24)
+    if cfg.mrope_sections is not None:
+        reduced.update(mrope_sections=(2, 3, 3))  # sums to head_dim 16 // 2
+    if cfg.d_rec:
+        reduced.update(d_rec=64)
+    if cfg.window:
+        reduced.update(window=32)
+    # keep pattern length dividing n_layers for the scan path
+    n_layers = reduced["n_layers"]
+    if n_layers % pat:
+        reduced["n_layers"] = pat * max(1, n_layers // pat)
+    return dataclasses.replace(cfg, **reduced)

@@ -1,0 +1,14 @@
+"""whisper-base [audio]: encoder-decoder backbone; conv frontend is a STUB
+(input_specs provides precomputed frame embeddings) [arXiv:2212.04356].
+32k decoder shapes exceed Whisper's trained 448 positions — lowered
+structurally per the assignment (DESIGN §3)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="encdec",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab=51865,
+    is_encdec=True, n_enc_layers=6, enc_positions=1500,
+    act="gelu",
+    skip_shapes=("long_500k",),
+)

@@ -1,0 +1,11 @@
+"""xlstm-125m [ssm]: alternating mLSTM/sLSTM blocks, d_ff=0 (blocks carry
+their own up/down projections) [arXiv:2405.04517]. O(1) recurrent state →
+runs long_500k."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m", family="ssm",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50304,
+    block_pattern=("mlstm", "slstm"),
+)

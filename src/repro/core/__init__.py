@@ -1,0 +1,17 @@
+"""core — the paper's primary contribution: SKR (Sorting + Krylov subspace
+Recycling) as a first-class, resumable, chunk-parallel data-generation
+pipeline for neural-operator training."""
+from repro.core.metrics import delta_subspace, smallest_invariant_subspace
+from repro.core.skr import (DataGenResult, SKRConfig, SKRGenerator,
+                            generate_dataset, generate_dataset_baseline,
+                            generate_dataset_chunked)
+from repro.core.sorting import (chain_length, greedy_sort, grouped_greedy_sort,
+                                hilbert_sort, sort_features)
+
+__all__ = [
+    "delta_subspace", "smallest_invariant_subspace",
+    "DataGenResult", "SKRConfig", "SKRGenerator",
+    "generate_dataset", "generate_dataset_baseline", "generate_dataset_chunked",
+    "chain_length", "greedy_sort", "grouped_greedy_sort", "hilbert_sort",
+    "sort_features",
+]

@@ -1,0 +1,63 @@
+"""Subspace metrics for the theory-facing ablation (paper §5.1 / Table 2).
+
+δ(Q, C) = ‖(I − Π_C) Π_Q‖₂ (Eq. 5) — the sine of the largest principal angle
+between Q and C. Theorem 1 bounds GCRO-DR convergence by γ/(1−δ): smaller δ
+between the recycled space C and the next system's target invariant subspace
+Q ⇒ faster convergence. Sorting exists to shrink δ.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def orthonormalize(m: np.ndarray) -> np.ndarray:
+    """SVD-based orthonormal basis of range(m) (rank-revealing: non-pivoted
+    QR mis-detects rank for dependent column sets like [Re V | Im V])."""
+    m = np.asarray(m, dtype=np.float64)
+    if m.size == 0:
+        return m.reshape(m.shape[0], 0)
+    u, s, _ = np.linalg.svd(m, full_matrices=False)
+    keep = s > 1e-10 * max(s.max(), 1e-300)
+    return u[:, keep]
+
+
+def delta_subspace(q_space: np.ndarray, c_space: np.ndarray) -> float:
+    """δ(Q, C) = ‖(I − Π_C) Π_Q‖₂ ∈ [0, 1]; 0 when Q ⊆ C."""
+    q = orthonormalize(q_space)
+    c = orthonormalize(c_space)
+    if q.shape[1] == 0:
+        return 0.0
+    if c.shape[1] == 0:
+        return 1.0
+    m = q - c @ (c.T @ q)
+    return float(np.linalg.norm(m, 2))
+
+
+def smallest_invariant_subspace(a_dense_or_op, k: int, n: int | None = None) -> np.ndarray:
+    """Q: invariant subspace of the k smallest-magnitude eigenvalues — the
+    space GCRO-DR tries to recycle (harmonic Ritz targets). Uses dense eig
+    for small n, shift-invert ARPACK otherwise."""
+    import scipy.sparse as sp
+    import scipy.sparse.linalg as spla
+
+    if isinstance(a_dense_or_op, np.ndarray):
+        a = a_dense_or_op
+        if a.shape[0] <= 1500:
+            evals, evecs = np.linalg.eig(a)
+            order = np.argsort(np.abs(evals))
+            # complete conjugate pairs so the REAL span stays A-invariant
+            chosen = set(order[:k].tolist())
+            for i in order[:k]:
+                if abs(evals[i].imag) > 0:
+                    conj = np.argmin(np.abs(evals - np.conj(evals[i])))
+                    chosen.add(int(conj))
+            idx = sorted(chosen)
+            basis = np.concatenate(
+                [np.real(evecs[:, idx]), np.imag(evecs[:, idx])], axis=1)
+            return orthonormalize(basis)
+        a = sp.csc_matrix(a)
+    else:
+        a = sp.csc_matrix(a_dense_or_op)
+    evals, evecs = spla.eigs(a, k=k, sigma=0.0, which="LM")
+    basis = np.concatenate([np.real(evecs), np.imag(evecs)], axis=1)
+    return orthonormalize(basis)

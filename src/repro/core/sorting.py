@@ -1,0 +1,168 @@
+"""The Sorting Algorithm (paper Algorithm 1 + the scalable variants of
+App. E.2.2).
+
+Orders a set of linear systems so consecutive systems have maximally similar
+parameter matrices P^(i) (Frobenius distance on flattened features), which is
+what makes the recycled subspace C_k relevant for the NEXT system. Per the
+paper's §5.2 analysis, sorting need not be optimal — a cheap greedy pass
+suffices because the recycled small-eigenvalue subspace is perturbation-
+robust.
+
+Variants:
+  greedy         O(N²) vectorized nearest-neighbor chain (Algorithm 1)
+  grouped_greedy O(N·G) — split into groups of ~group_size by a cheap 1-D
+                 projection, greedy inside each, concatenate (paper §4.1)
+  hilbert        FFT/PCA → 2-D → Hilbert-curve index (+greedy inside
+                 buckets) — the App. E.2.2 recipe for 10⁷-scale datasets;
+                 embarrassingly parallel across buckets
+  none / random  ablation baselines (Table 2)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pairwise_sq_dists(feats: np.ndarray) -> np.ndarray:
+    sq = np.sum(feats**2, axis=1)
+    d = sq[:, None] + sq[None, :] - 2.0 * feats @ feats.T
+    return np.maximum(d, 0.0)
+
+
+def greedy_sort(feats: np.ndarray, start: int = 0) -> np.ndarray:
+    """Algorithm 1: nearest-neighbor chain under Frobenius distance.
+
+    Vectorized O(N²) — each step is one masked argmin over a cached distance
+    row (no N×N matrix materialized beyond one row at a time)."""
+    feats = np.asarray(feats, dtype=np.float64)
+    n = feats.shape[0]
+    order = np.empty(n, dtype=np.int64)
+    used = np.zeros(n, dtype=bool)
+    order[0] = start
+    used[start] = True
+    cur = start
+    sq = np.sum(feats**2, axis=1)
+    for i in range(1, n):
+        d = sq + sq[cur] - 2.0 * (feats @ feats[cur])
+        d[used] = np.inf
+        cur = int(np.argmin(d))
+        order[i] = cur
+        used[cur] = True
+    return order
+
+
+def grouped_greedy_sort(feats: np.ndarray, group_size: int = 1000) -> np.ndarray:
+    """Paper §4.1 cost-saving strategy: partition by the leading principal
+    coordinate into contiguous groups, greedy-sort within each group (the
+    groups are independent ⇒ parallel across workers), concatenate."""
+    feats = np.asarray(feats, dtype=np.float64)
+    n = feats.shape[0]
+    if n <= group_size:
+        return greedy_sort(feats)
+    proj = _leading_projection(feats)
+    coarse = np.argsort(proj, kind="stable")
+    out = []
+    for g0 in range(0, n, group_size):
+        idx = coarse[g0: g0 + group_size]
+        local = greedy_sort(feats[idx])
+        out.append(idx[local])
+    return np.concatenate(out)
+
+
+def hilbert_sort(feats: np.ndarray, bits: int = 8, greedy_bucket: int = 256) -> np.ndarray:
+    """App. E.2.2: 'FFT dimension reduction + fractal division + greedy'.
+
+    Reduce to 2-D (two leading principal/Fourier coordinates), quantize to a
+    2^bits grid, order by Hilbert-curve index (locality-preserving), then
+    greedy-refine inside fixed-size buckets. Every stage is data-parallel
+    except the tiny per-bucket greedy."""
+    feats = np.asarray(feats, dtype=np.float64)
+    n = feats.shape[0]
+    xy = _reduce_2d(feats)
+    side = 1 << bits
+    q = np.empty((n, 2), dtype=np.int64)
+    for c in range(2):
+        v = xy[:, c]
+        lo, hi = v.min(), v.max()
+        q[:, c] = np.clip(((v - lo) / max(hi - lo, 1e-300) * (side - 1)), 0,
+                          side - 1).astype(np.int64)
+    h = hilbert_index(q[:, 0], q[:, 1], bits)
+    order = np.argsort(h, kind="stable")
+    if greedy_bucket and n > greedy_bucket:
+        out = []
+        for g0 in range(0, n, greedy_bucket):
+            idx = order[g0: g0 + greedy_bucket]
+            out.append(idx[greedy_sort(feats[idx])])
+        order = np.concatenate(out)
+    return order
+
+
+def hilbert_index(x: np.ndarray, y: np.ndarray, bits: int) -> np.ndarray:
+    """Vectorized xy→d Hilbert index (classic bit-twiddling, numpy)."""
+    d = np.zeros_like(x)
+    x = x.copy()
+    y = y.copy()
+    s = 1 << (bits - 1)
+    while s > 0:
+        rx = ((x & s) > 0).astype(np.int64)
+        ry = ((y & s) > 0).astype(np.int64)
+        d += s * s * ((3 * rx) ^ ry)
+        # rotate quadrant: where ry==0 (flip if rx==1, then swap x/y)
+        mask = ry == 0
+        flip = mask & (rx == 1)
+        x = np.where(flip, s - 1 - x, x)
+        y = np.where(flip, s - 1 - y, y)
+        xs = np.where(mask, y, x)
+        ys = np.where(mask, x, y)
+        x, y = xs, ys
+        s >>= 1
+    return d
+
+
+def sort_features(feats: np.ndarray, method: str = "greedy", **kw) -> np.ndarray:
+    method = method.lower()
+    n = np.asarray(feats).shape[0]
+    if method in ("none", "identity"):
+        return np.arange(n, dtype=np.int64)
+    if method == "random":
+        rng = np.random.default_rng(kw.get("seed", 0))
+        return rng.permutation(n)
+    if method == "greedy":
+        return greedy_sort(feats, start=kw.get("start", 0))
+    if method == "grouped":
+        return grouped_greedy_sort(feats, group_size=kw.get("group_size", 1000))
+    if method == "hilbert":
+        return hilbert_sort(feats, bits=kw.get("bits", 8),
+                            greedy_bucket=kw.get("greedy_bucket", 256))
+    raise KeyError(f"unknown sort method {method!r}")
+
+
+def chain_length(feats: np.ndarray, order: np.ndarray) -> float:
+    """Total Frobenius path length — the quantity greedy sorting minimizes
+    (lower ⇒ more consecutive similarity ⇒ better recycling)."""
+    f = np.asarray(feats, dtype=np.float64)[np.asarray(order)]
+    return float(np.sum(np.linalg.norm(np.diff(f, axis=0), axis=1)))
+
+
+# ---------------------------------------------------------------- helpers
+
+def _leading_projection(feats: np.ndarray) -> np.ndarray:
+    c = feats - feats.mean(0)
+    # one power-iteration pass is plenty for an ordering key
+    v = c.T @ c[:, 0] if c.shape[1] > 1 else np.ones(1)
+    v = v / max(np.linalg.norm(v), 1e-300)
+    for _ in range(3):
+        v = c.T @ (c @ v)
+        v = v / max(np.linalg.norm(v), 1e-300)
+    return c @ v
+
+
+def _reduce_2d(feats: np.ndarray) -> np.ndarray:
+    c = feats - feats.mean(0)
+    if c.shape[1] == 1:
+        return np.stack([c[:, 0], np.zeros_like(c[:, 0])], axis=1)
+    # two dominant right singular vectors via subspace iteration
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal((c.shape[1], 2))
+    for _ in range(5):
+        v, _ = np.linalg.qr(c.T @ (c @ v))
+    return c @ v

@@ -1,0 +1,6 @@
+"""Distributed runtime: mesh-aware sharding rules, logical-axis helpers and
+gradient compression."""
+from repro.distributed.sharding import (batch_axes, logical_to_spec,
+                                        param_specs, shard_act)
+
+__all__ = ["batch_axes", "logical_to_spec", "param_specs", "shard_act"]

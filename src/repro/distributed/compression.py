@@ -1,0 +1,87 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce, with error
+feedback (DESIGN §5).
+
+At 2+ pods the "pod" axis all-reduce crosses data-center network, ~10×
+slower than ICI — the classic mitigation is compress-before-reduce with an
+error-feedback accumulator so the bias is corrected on later steps
+(1-bit Adam / EF-SGD lineage).
+
+Two codecs:
+  * int8_ef  — per-tensor symmetric int8 quantization (32→8 bits, 4×)
+  * topk_ef  — magnitude top-k sparsification (k fraction kept)
+
+Both satisfy the error-feedback invariant tested by hypothesis in
+tests/test_compression.py:  decode(encode(g + e)) + e' == g + e  (exactly:
+residual carries what was dropped), so the compressed-SGD iterates track
+the uncompressed ones within O(lr·‖e‖).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- int8 EF
+
+def int8_encode(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decode(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_ef_step(g: jax.Array, err: jax.Array):
+    """Returns (decoded gradient to apply, new error residual)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = int8_encode(corrected)
+    dec = int8_decode(q, scale)
+    return dec, corrected - dec
+
+
+# ----------------------------------------------------------------- topk EF
+
+def topk_ef_step(g: jax.Array, err: jax.Array, frac: float = 0.1):
+    corrected = g.astype(jnp.float32) + err
+    flat = corrected.ravel()
+    k = max(int(flat.size * frac), 1)
+    thresh = jnp.sort(jnp.abs(flat))[-k]
+    mask = (jnp.abs(corrected) >= thresh).astype(jnp.float32)
+    dec = corrected * mask
+    return dec, corrected - dec
+
+
+# ------------------------------------------------------------- tree level
+
+def compress_tree(grads, err_tree, codec: str = "int8", frac: float = 0.1):
+    """Apply EF compression leaf-wise. Returns (grads', err')."""
+    if codec == "none":
+        return grads, err_tree
+
+    def leaf(g, e):
+        if codec == "int8":
+            d, ne = int8_ef_step(g, e)
+        elif codec == "topk":
+            d, ne = topk_ef_step(g, e, frac)
+        else:
+            raise ValueError(codec)
+        return d.astype(g.dtype), ne
+
+    pairs = jax.tree_util.tree_map(leaf, grads, err_tree)
+    outer = jax.tree_util.tree_structure(grads)
+    dec = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    del outer
+    return dec, err
+
+
+def init_error_tree(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN §4):
+
+  stencil_matvec — variable-coefficient 5-point stencil SpMV (solver inner loop)
+  dia_spmv       — banded/diagonal-format SpMV (general flattened operators)
+  fused_orthog   — fused CGS2 Gram-Schmidt (Arnoldi orthogonalization)
+  flash_attention— tiled online-softmax attention (LM prefill; beyond-paper)
+
+Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling, a jit'd
+dispatch wrapper in ops.py, and a pure-jnp oracle in ref.py. TPU is the
+compile target; CPU validation runs interpret=True (tests/test_kernels.py
+sweeps shapes × dtypes against the oracles).
+"""

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: DIA (diagonal-format) SpMV.
+
+General banded companion to the stencil kernel (used for flattened /
+non-stencil operators). The wrapper pre-pads x by the maximum |offset| so
+every in-kernel load is in range: per output tile the kernel reads one
+aligned x slice per diagonal and accumulates coeff·slice — unit-stride VPU
+work, no gather (DESIGN §4.1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(data_ref, xpad_ref, o_ref, *, offsets, pad, bn):
+    t = pl.program_id(0)
+    acc = jnp.zeros((bn,), o_ref.dtype)
+    base = t * bn
+    for d, off in enumerate(offsets):
+        xs = pl.load(xpad_ref, (pl.dslice(base + pad + off, bn),))
+        acc = acc + data_ref[d, :] * xs
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "interpret", "block_n"))
+def dia_spmv_pallas(offsets, data: jax.Array, x: jax.Array, *,
+                    interpret: bool = True, block_n: int = 1024) -> jax.Array:
+    """offsets: static tuple; data (ndiag, n); x (n,) → y (n,).
+
+    Zero-padding by max|offset| encodes the boundary (matches DIA semantics:
+    contributions from out-of-range columns vanish). Out-of-range data
+    entries must already be zero — true for all assemblers in pde/.
+    """
+    n = x.shape[0]
+    pad = max(1, max(abs(o) for o in offsets))
+    bn = min(block_n, n)
+    while n % bn:
+        bn -= 1
+    nt = n // bn
+    xpad = jnp.pad(x, (pad, pad))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, offsets=tuple(offsets), pad=pad, bn=bn),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((len(offsets), bn), lambda t: (0, t)),
+            # full padded x resident in VMEM (solver vectors are ≤ O(100k))
+            pl.BlockSpec((n + 2 * pad,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(data, xpad)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused CGS2 orthogonalization (the Arnoldi inner loop's
+second hot spot after the matvec).
+
+TPU adaptation (DESIGN §4.4): paper-faithful MGS is a chain of m dependent
+dot/axpy pairs — latency-bound. CGS2 reshapes the work into two matmul pairs
+(h = V·w; w −= Vᵀ·h, twice) with equivalent robustness (Giraud et al. 2005).
+This kernel fuses both passes into ONE launch: a 3-phase sequential grid
+with the projection coefficients held in VMEM scratch, so the intermediate
+half-orthogonalized vector never round-trips to HBM.
+
+  phase 0: accumulate h1 += V[:, tile] · w[tile]         (per column tile)
+  phase 1: w1[tile] = w[tile] − Vᵀh1; accumulate h2 += V · w1
+  phase 2: w2[tile] = w1[tile] − Vᵀh2; emit h = h1 + h2
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(v_ref, w_ref, mask_ref, wout_ref, h_ref, h1_s, h2_s):
+    phase = pl.program_id(0)
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+    v = v_ref[...]        # (m1, bn)
+    mask = mask_ref[...]  # (m1,)
+
+    @pl.when(jnp.logical_and(phase == 0, t == 0))
+    def _init():
+        h1_s[...] = jnp.zeros_like(h1_s)
+        h2_s[...] = jnp.zeros_like(h2_s)
+
+    @pl.when(phase == 0)
+    def _p0():
+        h1_s[...] += mask * (v @ w_ref[...])
+
+    @pl.when(phase == 1)
+    def _p1():
+        w1 = w_ref[...] - v.T @ h1_s[...]
+        wout_ref[...] = w1
+        h2_s[...] += mask * (v @ w1)
+
+    @pl.when(phase == 2)
+    def _p2():
+        wout_ref[...] = wout_ref[...] - v.T @ h2_s[...]
+        @pl.when(t == nt - 1)
+        def _emit():
+            h_ref[...] = h1_s[...] + h2_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def fused_orthog_pallas(v_basis: jax.Array, w: jax.Array, mask: jax.Array, *,
+                        interpret: bool = True, block_n: int = 2048):
+    """v_basis (m1, n), w (n,), mask (m1,) → (w_orth (n,), h (m1,))."""
+    m1, n = v_basis.shape
+    bn = min(block_n, n)
+    while n % bn:
+        bn -= 1
+    nt = n // bn
+
+    wout, h = pl.pallas_call(
+        _kernel,
+        grid=(3, nt),
+        in_specs=[
+            pl.BlockSpec((m1, bn), lambda p, t: (0, t)),
+            pl.BlockSpec((bn,), lambda p, t: (t,)),
+            pl.BlockSpec((m1,), lambda p, t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda p, t: (t,)),
+            pl.BlockSpec((m1,), lambda p, t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((m1,), w.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((m1,), w.dtype),
+            pltpu.VMEM((m1,), w.dtype),
+        ],
+        interpret=interpret,
+    )(v_basis, w, mask)
+    return wout, h

@@ -1,0 +1,73 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+Every op has a pure-jnp reference path (ref.py) — the default on CPU — and a
+Pallas path (`use_kernel=True`) compiled for TPU and validated on CPU via
+`interpret=True`. The solver/model layers call THESE wrappers so the kernel
+routing is a config flag, not a code change.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def stencil5_matvec(coeffs: jax.Array, x: jax.Array, *, use_kernel: bool = False,
+                    interpret: bool = True) -> jax.Array:
+    """(…, 5, nx, ny) coeffs × (…, nx, ny) field → (…, nx, ny)."""
+    if use_kernel:
+        from repro.kernels.stencil_matvec import stencil5_matvec_pallas
+
+        fn = functools.partial(stencil5_matvec_pallas, interpret=interpret)
+        if x.ndim > 2:  # batched: map over leading dims
+            for _ in range(x.ndim - 2):
+                fn = jax.vmap(fn)
+        return fn(coeffs, x)
+    return ref.stencil5_matvec(coeffs, x)
+
+
+def dia_spmv(dia, x: jax.Array, *, use_kernel: bool = False,
+             interpret: bool = True) -> jax.Array:
+    """DIA sparse matvec on flat (…, n) vectors."""
+    if use_kernel:
+        from repro.kernels.dia_spmv import dia_spmv_pallas
+
+        fn = functools.partial(dia_spmv_pallas, dia.offsets, interpret=interpret)
+        data = dia.data
+        if x.ndim > 1:
+            for _ in range(x.ndim - 1):
+                fn = jax.vmap(fn)
+        return fn(data, x)
+    return ref.dia_spmv(dia.offsets, dia.data, x)
+
+
+def fused_orthog(v_basis: jax.Array, w: jax.Array, mask: jax.Array, *,
+                 use_kernel: bool = False, interpret: bool = True):
+    """CGS2 projection: orthogonalize w against the masked rows of v_basis.
+
+    Returns (w_orth, h) with h the combined projection coefficients —
+    the Arnoldi inner-loop hot spot after the matvec (DESIGN §4.4).
+    """
+    if use_kernel:
+        from repro.kernels.fused_orthog import fused_orthog_pallas
+
+        return fused_orthog_pallas(v_basis, w, mask, interpret=interpret)
+    return ref.fused_orthog(v_basis, w, mask)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    use_kernel: bool = False, interpret: bool = True) -> jax.Array:
+    """Chunked-softmax attention (beyond-paper LM hot spot).
+
+    q: (B, Hq, Tq, D), k/v: (B, Hkv, Tk, D) — GQA broadcast when Hq > Hkv.
+    """
+    if use_kernel:
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=interpret)
+    return ref.flash_attention(q, k, v, causal=causal, window=window)

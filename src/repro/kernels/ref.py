@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernel
+tests assert against, and the default CPU execution path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stencil5_matvec(coeffs: jax.Array, x: jax.Array) -> jax.Array:
+    """y[i,j] = c·x[i,j] + n·x[i-1,j] + s·x[i+1,j] + w·x[i,j-1] + e·x[i,j+1]."""
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(1, 1), (1, 1)])
+    return (
+        coeffs[..., 0, :, :] * x
+        + coeffs[..., 1, :, :] * xp[..., :-2, 1:-1]
+        + coeffs[..., 2, :, :] * xp[..., 2:, 1:-1]
+        + coeffs[..., 3, :, :] * xp[..., 1:-1, :-2]
+        + coeffs[..., 4, :, :] * xp[..., 1:-1, 2:]
+    )
+
+
+def dia_spmv(offsets, data: jax.Array, x: jax.Array) -> jax.Array:
+    """y[i] = Σ_d data[d, i] · x[i + offsets[d]], zero-padded."""
+    n = data.shape[-1]
+    y = jnp.zeros(jnp.broadcast_shapes(data[..., 0, :].shape, x.shape), x.dtype)
+    for d, off in enumerate(offsets):
+        row = data[..., d, :]
+        if off == 0:
+            y = y + row * x
+        elif off > 0:
+            y = y.at[..., : n - off].add(row[..., : n - off] * x[..., off:])
+        else:
+            y = y.at[..., -off:].add(row[..., -off:] * x[..., : n + off])
+    return y
+
+
+def fused_orthog(v_basis: jax.Array, w: jax.Array, mask: jax.Array):
+    """Two-pass classical Gram-Schmidt (CGS2) against masked rows of v_basis.
+
+    v_basis: (m, n) row basis (rows beyond the active count are arbitrary,
+    masked out); w: (n,); mask: (m,) float {0,1}.
+    Returns (w_orth, h_total) — h_total: (m,) combined coefficients.
+    """
+    h1 = mask * (v_basis @ w)
+    w1 = w - v_basis.T @ h1
+    h2 = mask * (v_basis @ w1)
+    w2 = w1 - v_basis.T @ h2
+    return w2, h1 + h2
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None) -> jax.Array:
+    """Naive full-materialization attention oracle with GQA broadcast.
+
+    q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D). Tq may be < Tk (decode), in
+    which case query position i is at absolute position Tk - Tq + i.
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kq) / jnp.sqrt(d).astype(q.dtype)
+    tk = k.shape[2]
+    qpos = jnp.arange(tq) + (tk - tq)
+    kpos = jnp.arange(tk)
+    m = jnp.ones((tq, tk), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(m[None, None], scores, jnp.finfo(scores.dtype).min)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq)

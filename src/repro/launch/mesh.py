@@ -1,0 +1,39 @@
+"""Production mesh builders (DESIGN §5).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state. The dry-run (and only the dry-run) forces 512
+placeholder host devices before first jax init.
+
+Target hardware: TPU v5e pods, 16×16 = 256 chips/pod, 2 pods = 512 chips.
+Axes:
+    pod    inter-pod data parallelism (DCN-connected; gradient all-reduce)
+    data   intra-pod data parallel / FSDP weight-shard axis
+    model  tensor / expert / sequence parallel axis
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """8-device mesh for CPU integration tests (2×2×2 or 2×4)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_num_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

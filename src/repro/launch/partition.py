@@ -1,0 +1,116 @@
+"""Cell partitioning: build the in/out sharding trees for every step kind
+(train / prefill / decode) of an (architecture × shape × mesh) cell.
+
+Parameter sharding comes from distributed/sharding.py path rules (Megatron
+TP + FSDP hybrid).  KV/recurrent caches use a per-leaf heuristic:
+
+    dim == global_batch            → ("pod","data")     (DP)
+    largest remaining dim % model  → "model"            (seq- or channel-
+                                                         sharded cache)
+
+which covers GQA KV caches whose kv-head count (8, 4, 2, 1) does NOT divide
+the 16-wide model axis — there the 32k sequence dim shards instead (the
+vLLM-on-TPU posture), and recurrent states shard on channels.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import param_specs
+from repro.launch.mesh import mesh_batch_axes
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in mesh_batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_leaf_spec(shape: tuple, global_batch: int, mesh) -> P:
+    """Heuristic cache-leaf partition (see module docstring)."""
+    dp_axes = mesh_batch_axes(mesh)
+    dp = _dp_size(mesh)
+    model = mesh.shape.get("model", 1)
+    spec: list = [None] * len(shape)
+    used = set()
+    # 1) batch dim → dp
+    if dp > 1:
+        for i, s in enumerate(shape):
+            if s == global_batch and s % dp == 0:
+                spec[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                used.add(i)
+                break
+    # 2) largest remaining dim divisible by the model axis → "model"
+    if model > 1:
+        cands = [(s, i) for i, s in enumerate(shape)
+                 if i not in used and s % model == 0 and s >= model]
+        if cands:
+            _, i = max(cands)
+            spec[i] = "model"
+    return P(*spec)
+
+
+def cache_specs(cache_abs, global_batch: int, mesh):
+    return jax.tree_util.tree_map(
+        lambda l: cache_leaf_spec(tuple(l.shape), global_batch, mesh),
+        cache_abs)
+
+
+def batch_specs(batch_abs, global_batch: int, mesh):
+    """Input-batch sharding: shard any dim equal to global_batch over DP."""
+    dp_axes = mesh_batch_axes(mesh)
+    dp = _dp_size(mesh)
+
+    def leaf(l):
+        spec = [None] * len(l.shape)
+        if dp > 1:
+            for i, s in enumerate(l.shape):
+                if s == global_batch and s % dp == 0:
+                    spec[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map(leaf, batch_abs)
+
+
+def opt_specs_like(opt_abs, p_specs):
+    """Optimizer-state specs: mu/nu mirror the parameter specs; scalars
+    replicate. Works for train/optim.py adamw and sgd_fallback states."""
+    out = {}
+    for k, v in opt_abs.items():
+        if k in ("mu", "nu"):
+            out[k] = p_specs
+        else:
+            out[k] = jax.tree_util.tree_map(lambda _: P(), v)
+    return out
+
+
+def to_named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def logits_spec(mesh, global_batch: int, vocab: int) -> P:
+    dp_axes = mesh_batch_axes(mesh)
+    dp = _dp_size(mesh)
+    dp_entry = None
+    if dp_axes and dp > 1 and global_batch % dp == 0:
+        dp_entry = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    model = None
+    msize = mesh.shape.get("model", 1)
+    if msize > 1 and vocab % msize == 0:
+        model = "model"
+    return P(dp_entry, None, model)
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,210 @@
+"""Roofline terms from a compiled dry-run artifact (DESIGN §6).
+
+This container is CPU-only; TPU v5e is the TARGET. We therefore derive the
+three roofline terms structurally from the compiled module:
+
+    compute_s    = FLOPs_per_chip     / PEAK_FLOPS
+    memory_s     = bytes_per_chip     / HBM_BW
+    collective_s = coll_bytes_per_chip / LINK_BW
+
+Two XLA cost-analysis gotchas are handled here (verified experimentally,
+see EXPERIMENTS.md §Dry-run):
+
+  1. post-SPMD ``compiled.cost_analysis()`` reports PER-DEVICE numbers
+     (a (1024,2048)@(2048,512) matmul on 4 devices reports flops/4);
+  2. ``lax.scan``/while bodies are counted ONCE, not ×trip-count. We fix
+     flops/bytes by finite-difference calibration (lower the same cell at
+     n_rep=1 and n_rep=2 and extrapolate the linear model
+     cost(n) = base + body·n), and collective bytes by structurally parsing
+     the HLO: per-computation collective bytes, with while-body bytes
+     multiplied by the trip count recovered from the loop condition.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+HBM_PER_CHIP = 16e9     # v5e HBM capacity
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+# computation header:  `%region_0.52 (p: ...) -> ... {`  or  `ENTRY %main ...`
+# (parameter lists may contain nested parens/tuples — match greedily)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip()) if not line.startswith(" ") else None
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _collective_lines(lines: List[str]) -> Tuple[Dict[str, int], Dict[str, int]]:
+    bytes_by: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in lines:
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # async pair: count once on -start
+        nbytes = _shape_bytes(m.group(1))
+        if m.group(3) == "-start" and m.group(1).startswith("("):
+            nbytes //= 2  # async-start tuple carries (operand, result)
+        bytes_by[m.group(2)] += nbytes
+        counts[m.group(2)] += 1
+    return bytes_by, counts
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Trip count of a scan-lowered while: the bound constant compared
+    against the induction variable in the condition computation."""
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes_structural(hlo_text: str) -> Tuple[Dict[str, int],
+                                                        Dict[str, int], dict]:
+    """Per-device collective bytes with while-bodies ×trip-count."""
+    comps = _split_computations(hlo_text)
+    # computation -> multiplier (default 1; while bodies get trip count)
+    mult: Dict[str, int] = {name: 1 for name in comps}
+    whiles = []
+    for name, lines in comps.items():
+        for line in lines:
+            w = _WHILE_RE.search(line)
+            if w:
+                whiles.append((name, w.group(1), w.group(2)))
+    # propagate: body multiplier = parent multiplier × trip count
+    for _ in range(4):  # few passes handle nesting
+        for parent, cond, body in whiles:
+            trip = _trip_count(comps.get(cond, []))
+            if body in mult:
+                mult[body] = mult.get(parent, 1) * trip
+            if cond in mult:
+                mult[cond] = mult.get(parent, 1) * trip
+    total_bytes: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    total_counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for name, lines in comps.items():
+        b, c = _collective_lines(lines)
+        for k in COLLECTIVE_OPS:
+            total_bytes[k] += b[k] * mult.get(name, 1)
+            total_counts[k] += c[k] * mult.get(name, 1)
+    meta = {"whiles": [{"body": b, "trip": _trip_count(comps.get(c, []))}
+                       for _, c, b in whiles]}
+    return total_bytes, total_counts, meta
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: Dict[str, int]
+    collective_counts: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_flops_ratio: Optional[float] = None   # MODEL_FLOPS / (chips·flops)
+    calibration: Optional[dict] = None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def compute_roofline(flops_per_chip: float, bytes_per_chip: float,
+                     hlo_text: str, chips: int,
+                     model_flops: Optional[float] = None,
+                     calibration: Optional[dict] = None) -> RooflineTerms:
+    coll_bytes, coll_counts, _ = collective_bytes_structural(hlo_text)
+    coll_total = float(sum(coll_bytes.values()))
+    compute_s = flops_per_chip / PEAK_FLOPS
+    memory_s = bytes_per_chip / HBM_BW
+    collective_s = coll_total / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_flops = flops_per_chip * chips
+    ratio = (model_flops / total_flops) if (model_flops and total_flops) else None
+    return RooflineTerms(
+        chips=chips, flops_per_chip=flops_per_chip,
+        bytes_per_chip=bytes_per_chip,
+        collective_bytes_per_chip=coll_total,
+        collective_breakdown={k: v for k, v in coll_bytes.items() if v},
+        collective_counts={k: v for k, v in coll_counts.items() if v},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_flops_ratio=ratio, calibration=calibration)
+
+
+def extrapolate_linear(n1: int, c1: float, n2: int, c2: float,
+                       n_full: int) -> float:
+    """cost(n) = base + body·n fitted at (n1,c1),(n2,c2) → cost(n_full)."""
+    if n1 == n2:
+        return c1
+    body = (c2 - c1) / (n2 - n1)
+    base = c1 - body * n1
+    return max(base + body * n_full, 0.0)
+
+
+def model_flops_for(cfg, shape) -> Optional[float]:
+    """6·N·D (dense) / 6·N_active·D (MoE) per step; decode D = new tokens."""
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d          # forward only
+    d = shape.global_batch * 1      # decode: one token per sequence
+    return 2.0 * n * d

@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned LM architectures (decoder-only, MoE, MLA,
+xLSTM, RG-LRU hybrid, enc-dec) + shared layers. Uniform API in api.py."""

@@ -1,0 +1,137 @@
+"""Uniform model API consumed by the launcher, dry-run, trainer and server:
+
+    init_params(cfg, key)                  → params
+    loss_fn(params, cfg, batch)            → scalar loss
+    prefill_fn(params, cfg, batch)         → (logits, cache, [enc_out])
+    decode_fn(params, cfg, batch, cache)   → (logits, cache)
+    input_specs(cfg, shape, mesh=None)     → ShapeDtypeStruct pytrees
+                                             (weak-type-correct, shardable,
+                                             NO device allocation)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.is_encdec:
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    if cfg.is_encdec:
+        return encdec.loss_fn(params, cfg, batch)
+    return transformer.loss_fn(params, cfg, batch)
+
+
+def abstract_params(cfg: ModelConfig, key=None):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    k = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda kk: init_params(cfg, kk), k)
+
+
+# ----------------------------------------------------------- input specs
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((b, t), jnp.int32),
+            "labels": _sds((b, t), jnp.int32),
+        }
+        if cfg.mrope_sections is not None:
+            batch["positions"] = _sds((3, b, t), jnp.int32)
+        if cfg.is_encdec:
+            batch["enc_embeds"] = _sds((b, cfg.enc_positions, cfg.d_model),
+                                       jnp.dtype(cfg.dtype))
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((b, t), jnp.int32)}
+        if cfg.mrope_sections is not None:
+            batch["positions"] = _sds((3, b, t), jnp.int32)
+        if cfg.is_encdec:
+            batch["enc_embeds"] = _sds((b, cfg.enc_positions, cfg.d_model),
+                                       jnp.dtype(cfg.dtype))
+        return batch
+    # decode: one new token against a seq_len cache
+    batch = {
+        "token": _sds((b, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+    if cfg.mrope_sections is not None:
+        batch["positions"] = _sds((3, b, 1), jnp.int32)
+    if cfg.is_encdec:
+        batch["enc_out"] = _sds((b, cfg.enc_positions, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    if cfg.is_encdec:
+        return jax.eval_shape(
+            lambda: jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *encdec.init_dec_cache(cfg, batch, seq_len)))
+    return jax.eval_shape(lambda: transformer.init_cache(cfg, batch, seq_len))
+
+
+# ------------------------------------------------------- step functions
+
+def make_train_step(cfg: ModelConfig, optimizer=None):
+    """Returns train_step(state, batch) → (state, metrics). With no
+    optimizer, a plain SGD update keeps the dry-run graph faithful."""
+    from repro.train.optim import sgd_fallback
+
+    opt = optimizer or sgd_fallback(1e-3)
+
+    def train_step(state, batch):
+        params, opt_state, step = state
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch))(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+        return (params, opt_state, step + 1), {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: Optional[int] = None):
+    """cache_len > prompt length leaves decode head-room (serving); the
+    default sizes the cache to the prompt (the dry-run prefill cells)."""
+    def prefill_step(params, batch):
+        if cfg.is_encdec:
+            logits, cache, enc_out = encdec.prefill(
+                params, cfg, batch["tokens"], batch["enc_embeds"],
+                cache_len=cache_len)
+            return logits, cache, enc_out
+        return transformer.prefill(params, cfg, batch["tokens"],
+                                   batch.get("positions"),
+                                   cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch, cache):
+        if cfg.is_encdec:
+            return encdec.decode_step(params, cfg, batch["token"],
+                                      batch["pos"], cache, batch["enc_out"])
+        return transformer.decode_step(params, cfg, batch["token"],
+                                       batch["pos"], cache,
+                                       batch.get("positions"))
+
+    return decode_step

@@ -1,0 +1,222 @@
+"""GQA attention (optional QKV bias, sliding window, M-RoPE, cross-attn)
+with train / prefill / decode paths and a memory-O(T·chunk) jnp flash path
+(the XLA lowering twin of kernels/flash_attention.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.kernels import ops as kops
+from repro.models.common import dense_init
+from repro.models.rope import apply_mrope, apply_rope
+
+_NEG = -1e30
+
+
+def attn_init(key, cfg, dtype, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def _split_heads(x, n_heads, hd):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)  # (B,H,T,D)
+
+
+def _merge_heads(x):
+    b, h, t, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * d)
+
+
+def flash_jnp(q, k, v, *, causal: bool, window, chunk: int,
+              head_spec=("dp", "tp", None, None)):
+    """Blockwise online-softmax attention in pure jnp (lax.scan over KV
+    chunks): O(Tq·chunk) live memory — the 32k-prefill lowering path.
+
+    q/k/v arrive with EQUAL head counts (GQA k/v pre-expanded by the caller:
+    the grouped (hkv, group) einsum form shards catastrophically when the
+    factored dims don't divide the TP axis — EXPERIMENTS.md §Perf iter 1).
+    """
+    b, hq, tq, d = q.shape
+    tk, dk, dv = k.shape[2], k.shape[3], v.shape[3]
+    if tk <= chunk:
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+
+    tk_pad = -(-tk // chunk) * chunk
+    if tk_pad != tk:  # ragged tail (e.g. Whisper's 1500 encoder positions):
+        pad = [(0, 0), (0, 0), (0, tk_pad - tk), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    nc = tk_pad // chunk
+    kc = k.reshape(b, hq, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hq, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qpos = (jnp.arange(tq) + (tk - tq))[:, None]
+    qf = q.astype(jnp.float32)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        i, kb, vb = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                       kb.astype(jnp.float32)) * scale
+        s = shard_act(s, head_spec)
+        kpos = i * chunk + jnp.arange(chunk)[None, :]
+        mask = jnp.broadcast_to(kpos < tk, (tq, chunk))  # mask ragged pad
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None], s, _NEG)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p,
+                                       vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hq, tq, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros_like(m0)
+    a0 = jnp.zeros((b, hq, tq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nc), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)
+
+
+def store_prefill(dst, src, axis: int):
+    """Write prefill-computed k/v (length t along `axis`) into the allocated
+    cache `dst` (length s). s > t leaves head-room for decode; s < t is the
+    ring/window case (keep the last s positions at slot = pos % s)."""
+    t, s = src.shape[axis], dst.shape[axis]
+    if s == t:
+        return src.astype(dst.dtype)
+    if s < t:
+        sl = [slice(None)] * src.ndim
+        sl[axis] = slice(t - s, None)
+        last = src[tuple(sl)].astype(dst.dtype)
+        return jnp.roll(last, t % s, axis=axis)
+    idx = (jnp.zeros((), jnp.int32),) * src.ndim
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), idx)
+
+
+def attn_apply(p, cfg, x, *, positions=None, mode: str = "train",
+               cache=None, kv_source=None, causal: bool = True,
+               use_rope: bool = True):
+    """x (B,T,d). kv_source: encoder states for cross-attention (no cache
+    mutation, no rope). Returns (y, new_cache)."""
+    hd = cfg.resolved_head_dim
+    kv_in = kv_source if kv_source is not None else x
+
+    q = x @ p["wq"]
+    k = kv_in @ p["wk"]
+    v = kv_in @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _split_heads(q, cfg.n_heads, hd)
+    k = _split_heads(k, cfg.n_kv_heads, hd)
+    v = _split_heads(v, cfg.n_kv_heads, hd)
+    # Sharding strategy (EXPERIMENTS.md §Perf iter 1): head-TP when the
+    # query-head count divides the model axis, else sequence-parallel
+    # attention (q seq dim over "model", full k/v per shard).
+    from repro.distributed.sharding import axis_size
+    tp = axis_size("model")
+    head_tp = tp <= 1 or cfg.n_heads % tp == 0
+    qkv_spec = (("dp", "tp", None, None) if head_tp
+                else ("dp", None, "sq", None))
+    kv_full_spec = (("dp", "tp", None, None) if head_tp
+                    else ("dp", None, None, None))
+    q = shard_act(q, qkv_spec)
+
+    if use_rope and kv_source is None:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions[:, :, None, :], cfg.rope_theta,
+                            cfg.mrope_sections)
+            k = apply_mrope(k, positions[:, :, None, :], cfg.rope_theta,
+                            cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+            k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+
+    new_cache = cache
+    if mode == "decode" and kv_source is None:
+        # cache: {"k","v"} (B,Hkv,S,D). S == seq_len for full attention, or
+        # the window size (RING buffer) for sliding-window archs.
+        pos = positions.reshape(-1)[0]  # lockstep batch decode position
+        s_len = cache["k"].shape[2]
+        is_ring = cfg.window is not None and s_len <= cfg.window
+        wp = jnp.where(is_ring, pos % s_len, pos)
+        z = jnp.zeros((), wp.dtype)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (z, z, wp, z))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (z, z, wp, z))
+        new_cache = {"k": ck, "v": cv}
+        s = jnp.einsum("bhqd,bhkd->bhqk",
+                       q.astype(jnp.float32),
+                       _gqa_expand(ck, cfg).astype(jnp.float32))
+        s = s / jnp.sqrt(jnp.float32(hd))
+        kpos = jnp.arange(s_len)
+        if is_ring:
+            # ring slots hold exactly the last s_len positions; before the
+            # ring fills, slots beyond wp are empty
+            mask = (pos >= s_len) | (kpos <= wp)
+        else:
+            mask = kpos <= pos
+            if cfg.window is not None:
+                mask = mask & (kpos > pos - cfg.window)
+        s = jnp.where(mask[None, None, None, :], s, _NEG)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", w,
+                         _gqa_expand(cv, cfg).astype(jnp.float32)).astype(x.dtype)
+    else:
+        # expand GQA k/v to full query heads BEFORE the attention math: the
+        # grouped (hkv, group) form cannot shard over a TP axis the factors
+        # don't divide (§Perf iter 1); the cache still stores hkv heads.
+        ke = shard_act(_gqa_expand(k, cfg), kv_full_spec)
+        ve = shard_act(_gqa_expand(v, cfg), kv_full_spec)
+        if cfg.use_flash_kernel:
+            out = kops.flash_attention(q, ke, ve, causal=causal,
+                                       window=cfg.window, use_kernel=True)
+        else:
+            out = flash_jnp(q, ke, ve, causal=causal,
+                            window=cfg.window if kv_source is None else None,
+                            chunk=cfg.attn_chunk,
+                            head_spec=(("dp", "tp", None, None) if head_tp
+                                       else ("dp", None, "sq", None)))
+        if mode == "prefill" and kv_source is None:
+            if cache is not None:
+                new_cache = {"k": store_prefill(cache["k"], k, 2),
+                             "v": store_prefill(cache["v"], v, 2)}
+            else:
+                new_cache = {"k": k, "v": v}
+
+    y = _merge_heads(out) @ p["wo"]
+    return shard_act(y, ("dp", None, None)), new_cache
+
+
+def _gqa_expand(kv, cfg):
+    group = cfg.n_heads // cfg.n_kv_heads
+    if group == 1:
+        return kv
+    return jnp.repeat(kv, group, axis=1)
+
+
+def make_empty_cache(cfg, batch: int, seq_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    s = min(seq_len, cfg.window) if cfg.window else seq_len
+    shape = (batch, cfg.n_kv_heads, s, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

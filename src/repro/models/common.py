@@ -1,0 +1,118 @@
+"""Shared model primitives (functional, framework-free: params are nested
+dicts of arrays; every module is init(key,…) → params + apply(params,…))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(w, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if act == "silu":  # SwiGLU
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p, x, act: str):
+    h = x @ p["w_up"]
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard_act(h, ("dp", None, "tp"))
+    return h @ p["w_down"]
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed_apply(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token-level CE; logits (B,T,V) possibly vocab-sharded (reduction over
+    V is a local op + the usual psum GSPMD inserts)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def chunked_cross_entropy(hidden, head_w, labels, mask=None,
+                          chunk: int = 256):
+    """CE WITHOUT materializing the (B,T,V) f32 logits: lax.scan over
+    sequence chunks computes (B,chunk,V) logits, reduces to per-token NLL,
+    and rematerializes the chunk in the backward pass (jax.checkpoint).
+
+    Cuts the train-cell memory term — the f32 logit tensor is the largest
+    live buffer for big-vocab archs (EXPERIMENTS.md §Perf iter 5). hidden:
+    (B,T,d); head_w: (d,V); labels: (B,T)."""
+    b, t, d = hidden.shape
+    nc = t // chunk
+    rem = t - nc * chunk
+
+    @jax.checkpoint
+    def chunk_nll(h_c, y_c):
+        logits = (h_c @ head_w).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return lse - gold
+
+    parts = []
+    if nc > 0:
+        h_main = hidden[:, : nc * chunk].reshape(b, nc, chunk, d)
+        y_main = labels[:, : nc * chunk].reshape(b, nc, chunk)
+
+        def body(_, xs):
+            h_c, y_c = xs
+            return None, chunk_nll(h_c, y_c)
+
+        _, nll_main = jax.lax.scan(
+            body, None, (h_main.transpose(1, 0, 2, 3),
+                         y_main.transpose(1, 0, 2)))
+        parts.append(nll_main.transpose(1, 0, 2).reshape(b, nc * chunk))
+    if rem:
+        parts.append(chunk_nll(hidden[:, nc * chunk:],
+                               labels[:, nc * chunk:]))
+    nll = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,116 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Queries go through a low-rank bottleneck (q_lora_rank); keys/values are
+compressed into a small latent c_kv (kv_lora_rank) plus a shared rotary key
+k_rope. The decode cache stores ONLY (c_kv, k_rope) — (r + dr) floats/token
+instead of 2·H·D — MLA's serving superpower, preserved here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.common import dense_init, rmsnorm, rmsnorm_init
+from repro.models.rope import apply_rope
+
+_NEG = -1e30
+
+
+def mla_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, r_q, dtype),
+        "q_a_norm": rmsnorm_init(r_q, dtype),
+        "wq_b": dense_init(ks[1], r_q, h * (dn + dr), dtype),
+        "wkv_a": dense_init(ks[2], d, r_kv + dr, dtype),
+        "kv_a_norm": rmsnorm_init(r_kv, dtype),
+        "wkv_b": dense_init(ks[3], r_kv, h * (dn + dv), dtype),
+        "wo": dense_init(ks[4], h * dv, d, dtype),
+    }
+
+
+def _project_kv(p, cfg, c_kv):
+    """latent (B,S,r) → k_nope (B,H,S,dn), v (B,H,S,dv)."""
+    h, dn, dv = cfg.n_heads, cfg.qk_nope_head_dim, cfg.v_head_dim
+    kv = c_kv @ p["wkv_b"]
+    b, s, _ = kv.shape
+    kv = kv.reshape(b, s, h, dn + dv).transpose(0, 2, 1, 3)
+    return kv[..., :dn], kv[..., dn:]
+
+
+def mla_apply(p, cfg, x, *, positions, mode: str = "train", cache=None):
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    b, t, _ = x.shape
+
+    q = rmsnorm(p["q_a_norm"], x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(b, t, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    q_nope = shard_act(q_nope, ("dp", "tp", None, None))
+
+    kv_a = x @ p["wkv_a"]                       # (B,T,r+dr)
+    c_kv = rmsnorm(p["kv_a_norm"], kv_a[..., : cfg.kv_lora_rank])
+    k_rope = kv_a[..., cfg.kv_lora_rank:]       # (B,T,dr) shared across heads
+    k_rope = apply_rope(k_rope[:, None], positions[:, None, :],
+                        cfg.rope_theta)         # (B,1,T,dr)
+
+    new_cache = cache
+    if mode == "decode":
+        pos = positions.reshape(-1)[0]
+        z = jnp.zeros((), pos.dtype)
+        cc = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (z, pos, z))
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype),
+            (z, pos, z))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        k_nope, v = _project_kv(p, cfg, cc)     # (B,H,S,·) from latent
+        kr = cr[:, None]                        # (B,1,S,dr)
+        s_len = cc.shape[1]
+        mask = (jnp.arange(s_len) <= pos)[None, None, None, :]
+        scale_fix = jnp.sqrt(jnp.float32(dn + dr))
+        s = (jnp.einsum("bhqd,bhkd->bhqk", q_nope.astype(jnp.float32),
+                        k_nope.astype(jnp.float32))
+             + jnp.einsum("bhqd,bukd->bhqk", q_rope.astype(jnp.float32),
+                          kr.astype(jnp.float32))) / scale_fix
+        s = jnp.where(mask, s, _NEG)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", w,
+                         v.astype(jnp.float32)).astype(x.dtype)
+    else:
+        k_nope, v = _project_kv(p, cfg, c_kv)
+        if mode == "prefill":
+            if cache is not None:
+                from repro.models.attention import store_prefill
+
+                new_cache = {
+                    "c_kv": store_prefill(cache["c_kv"], c_kv, 1),
+                    "k_rope": store_prefill(cache["k_rope"], k_rope[:, 0], 1),
+                }
+            else:
+                new_cache = {"c_kv": c_kv, "k_rope": k_rope[:, 0]}
+        # Fold the shared rotary key into per-head keys and route through the
+        # memory-O(T·chunk) flash path (dk = dn+dr, dv independent).
+        from repro.models.attention import flash_jnp
+
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)        # (B,H,T,dn+dr)
+        kr_b = jnp.broadcast_to(k_rope, (b, h, t, dr))
+        k_full = jnp.concatenate([k_nope, kr_b], axis=-1)
+        out = flash_jnp(q_full, k_full, v, causal=True, window=None,
+                        chunk=cfg.attn_chunk)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, h * dv)
+    return shard_act(out @ p["wo"], ("dp", None, None)), new_cache
+
+
+def make_mla_cache(cfg, batch: int, seq_len: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq_len, cfg.qk_rope_head_dim), dtype),
+    }

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer (Mixtral 8×top-2, Kimi-K2 384×top-8).
+
+Two implementations, selectable via cfg.moe_impl (the §Perf MoE hillclimb
+compares them):
+
+  "dense"    — reference: every expert runs on every token, outputs combined
+               by the (T,E) gate matrix. Correct, simple, FLOP cost inflated
+               by E/top_k — the roofline baseline.
+  "dispatch" — production: capacity-bucketed scatter → per-expert batched
+               matmul → gather. Experts shard over the `model` axis (EP);
+               the token→expert scatter is where GSPMD inserts the all-to-
+               all. FLOP cost ∝ top_k (+ capacity slack).
+
+Routing: softmax-after-topk gates (Mixtral convention) + load-balance
+auxiliary loss (Switch-style) returned for the train loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.common import dense_init
+
+
+def moe_init(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    return {
+        "w_router": dense_init(ks[0], d, e, jnp.float32),  # router in f32
+        "w_experts_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                           * scale).astype(dtype),
+        "w_experts_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                         * scale).astype(dtype),
+        "w_experts_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                           * (1.0 / jnp.sqrt(f))).astype(dtype),
+    }
+
+
+def _route(p, cfg, xf):
+    """xf (N,d) → gates (N,k), idx (N,k), aux load-balance loss."""
+    logits = xf.astype(jnp.float32) @ p["w_router"]       # (N,E)
+    gates_k, idx = jax.lax.top_k(logits, cfg.top_k)
+    gates = jax.nn.softmax(gates_k, axis=-1)              # Mixtral: softmax over top-k
+    # Switch aux loss: E · Σ_e f_e · P_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.zeros((cfg.n_experts,), jnp.float32)
+    frac = frac.at[idx.reshape(-1)].add(1.0) / (idx.size)
+    aux = cfg.n_experts * jnp.sum(frac * probs.mean(0))
+    return gates, idx, aux
+
+
+def moe_apply(p, cfg, x):
+    """x (B,T,d) → (y (B,T,d), aux_loss)."""
+    b, t, d = x.shape
+    xf = x.reshape(b * t, d)
+    gates, idx, aux = _route(p, cfg, xf)
+
+    if cfg.moe_impl == "dense":
+        y = _dense_moe(p, cfg, xf, gates, idx)
+    else:
+        y = _dispatch_moe(p, cfg, xf, gates, idx)
+    return y.reshape(b, t, d).astype(x.dtype), aux
+
+
+def _ep_spec(e: int):
+    """Expert-parallel activation spec: experts over the model axis when
+    divisible (kimi: 384/16); otherwise shard the capacity dim over model
+    (mixtral: 8 experts < 16-wide axis — replicating experts and gathering
+    the (E,cap,f) hidden costs ~600 GB/chip, EXPERIMENTS.md §Perf iter 3)."""
+    from repro.distributed.sharding import axis_size
+
+    tp = axis_size("model")
+    if tp <= 1 or e % tp == 0:
+        return ("tp", None, None)
+    return (None, "sq", None)
+
+
+def _expert_mlp(p, h):
+    """h (E,C,d) → (E,C,d): per-expert SwiGLU, batched over experts.
+
+    The hidden keeps f sharded over the fsdp axis (matching the expert
+    weights) — pinning f replicated forced a 300 GB/chip gather
+    (EXPERIMENTS.md §Perf iter 3b)."""
+    e_spec = _ep_spec(h.shape[0])
+    hidden_spec = (e_spec[0], e_spec[1], "fsdp")
+    up = jnp.einsum("ecd,edf->ecf", h, p["w_experts_up"])
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["w_experts_gate"]))
+    hidden = shard_act(up * gate, hidden_spec)
+    return jnp.einsum("ecf,efd->ecd", hidden, p["w_experts_down"])
+
+
+def _dense_moe(p, cfg, xf, gates, idx):
+    n, d = xf.shape
+    e = cfg.n_experts
+    # combine (N,E): gate where selected, 0 elsewhere
+    comb = jnp.zeros((n, e), gates.dtype).at[
+        jnp.arange(n)[:, None], idx].set(gates)
+    # every expert on every token
+    h = jnp.broadcast_to(xf[None], (e, n, d))
+    out = _expert_mlp(p, h.astype(xf.dtype))               # (E,N,d)
+    return jnp.einsum("ne,end->nd", comb, out.astype(jnp.float32))
+
+
+def _bucket_positions(flat_e, e: int):
+    """Rank of each (token, choice) within its expert bucket.
+
+    Sort-based (argsort + searchsorted): O(N log N) and ~275× fewer
+    HLO-counted flops than the one-hot + cumsum formulation, which also
+    materializes an (N·k, E) int32 tensor (EXPERIMENTS.md §Perf iter 2)."""
+    nk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(e))
+    pos_sorted = jnp.arange(nk) - first[sorted_e]
+    return jnp.zeros(nk, jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+
+
+def _dispatch_moe(p, cfg, xf, gates, idx):
+    n, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(n * k / e * cfg.capacity_factor), 4)
+
+    flat_e = idx.reshape(-1)                                # (N·k,)
+    pos_in_e = _bucket_positions(flat_e, e)
+    keep = pos_in_e < cap
+    flat_gate = gates.reshape(-1) * keep                    # dropped → 0 gate
+
+    buf = jnp.zeros((e, cap, d), xf.dtype)
+    tok = jnp.repeat(jnp.arange(n), k)
+    buf = buf.at[flat_e, jnp.where(keep, pos_in_e, cap - 1)].add(
+        xf[tok] * keep[:, None].astype(xf.dtype))
+    buf = shard_act(buf, _ep_spec(e))       # EP (or bucket-slot) sharding
+
+    out_buf = _expert_mlp(p, buf)                           # (E,cap,d)
+
+    y = out_buf[flat_e, jnp.where(keep, pos_in_e, cap - 1)]  # (N·k, d)
+    y = y.astype(jnp.float32) * flat_gate[:, None]
+    return jax.ops.segment_sum(y, tok, num_segments=n)

@@ -1,0 +1,100 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427): temporal
+conv1d + RG-LRU (Real-Gated Linear Recurrent Unit).
+
+The RG-LRU recurrence h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t) is a
+DIAGONAL linear recurrence → training/prefill uses jax.lax.associative_scan
+(log-depth, TPU-friendly); decode is one elementwise update on a (B, d_rec)
+state + a (B, conv_width, d) conv ring — why recurrentgemma-2b runs the
+long_500k cell with O(1) memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.common import dense_init
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    dr = cfg.d_rec or d
+    w = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_rec_in": dense_init(ks[0], d, 2 * dr, dtype),   # (x branch, gate branch)
+        "conv_w": (jax.random.normal(ks[1], (w, dr), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_input_gate": dense_init(ks[2], dr, dr, dtype),
+        "w_a_gate": dense_init(ks[3], dr, dr, dtype),
+        "a_param": jnp.log(jnp.expm1(  # softplus⁻¹ so σ-param init ≈ 0.95^c
+            jnp.full((dr,), 0.65, jnp.float32))),
+        "w_rec_out": dense_init(ks[4], dr, d, dtype),
+    }
+
+
+def _conv1d(p, x, state=None):
+    """Causal depthwise conv, width w. x (B,T,dr). state (B,w-1,dr) carries
+    the last w-1 inputs for decode."""
+    w = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * p["conv_w"][i] for i in range(w))
+    new_state = xp[:, -(w - 1):]
+    return out + p["conv_b"], new_state
+
+
+def _gates(p, xc):
+    i_t = jax.nn.sigmoid(xc @ p["w_input_gate"])
+    r_t = jax.nn.sigmoid(xc @ p["w_a_gate"]).astype(jnp.float32)
+    log_a = -_C * r_t * jax.nn.softplus(p["a_param"])       # log a_t ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return i_t, a, beta
+
+
+def rglru_apply(p, cfg, x, *, mode: str = "train", cache=None):
+    b, t, d = x.shape
+    dr = cfg.d_rec or d
+    up = x @ p["w_rec_in"]
+    xb, gb = up[..., :dr], up[..., dr:]
+    xb = shard_act(xb, ("dp", None, "tp"))
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _conv1d(p, xb, conv_state)
+    i_t, a, beta = _gates(p, xc)
+    gated = (i_t * xc).astype(jnp.float32) * beta
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((b, dr), jnp.float32)
+    if mode == "decode":
+        h = a[:, 0] * h0 + gated[:, 0]
+        hs = h[:, None]
+        new_h = h
+    else:
+        # associative scan over the diagonal recurrence (log-depth)
+        def combine(c1, c2):
+            a1, y1 = c1
+            a2, y2 = c2
+            return a1 * a2, a2 * y1 + y2
+
+        _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        # fold the carried state h0 into every step: h_t += (∏_{s≤t} a_s)·h0
+        a_cum = jnp.cumprod(a, axis=1)
+        hs = hs + a_cum * h0[:, None]
+        new_h = hs[:, -1]
+
+    out = hs.astype(x.dtype) * jax.nn.gelu(gb)
+    y = out @ p["w_rec_out"]
+    new_cache = {"h": new_h, "conv": new_conv.astype(jnp.float32)}
+    return shard_act(y, ("dp", None, None)), new_cache
+
+
+def make_rglru_cache(cfg, batch: int, dtype):
+    dr = cfg.d_rec or cfg.d_model
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), jnp.float32)}

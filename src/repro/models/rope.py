@@ -1,0 +1,45 @@
+"""Rotary position embeddings: standard RoPE + Qwen2-VL M-RoPE (3-D
+temporal/height/width sections, arXiv:2409.12191)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return inv.astype(dtype)  # (half,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., T, D) with positions (..., T) → rotated x. Pairing is
+    (x[..., :D/2], x[..., D/2:]) halves (NeoX / llama convention)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., T, half)
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """M-RoPE: positions3 (3, ..., T) = (t, h, w) indices; the frequency
+    bands split into `sections` (in half-dim units), each band using the
+    position of its modality axis."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(d, theta)  # (half,)
+    # pick which modality drives each frequency band
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)  # (half,)
+    pos = jnp.take(positions3, sec_id, axis=0)  # (half, ..., T) gathered per band
+    pos = jnp.moveaxis(pos, 0, -1)              # (..., T, half)
+    ang = pos.astype(jnp.float32) * inv
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

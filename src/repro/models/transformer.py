@@ -1,0 +1,267 @@
+"""Decoder-only LM assembly: config-driven block stacking (attention / MoE /
+mLSTM / sLSTM / RG-LRU patterns), scan-over-layers lowering, KV-cache
+serving paths.
+
+Layer iteration strategy (DESIGN §6): when n_layers divides by the block
+pattern, per-pattern-position params are STACKED and the stack is lax.scan'd
+(small HLO, fast compile — what the dry-run lowers). Otherwise a python loop
+unrolls (hybrid archs with ragged patterns).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_act
+from repro.models import attention as attn
+from repro.models import mla, moe, rglru, xlstm
+from repro.models.common import (cross_entropy, dense_init, embed_apply,
+                                 embed_init, mlp_apply, mlp_init, rmsnorm,
+                                 rmsnorm_init)
+
+AUX_COEF = 0.01
+
+
+# ------------------------------------------------------------------ blocks
+
+def block_init(key, cfg: ModelConfig, kind: str, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind == "attn":
+        if cfg.use_mla:
+            p["attn"] = mla.mla_init(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+        if cfg.is_moe:
+            p["moe"] = moe.moe_init(ks[1], cfg, dtype)
+            p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        elif cfg.d_ff > 0:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+            p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+    elif kind == "mlstm":
+        p["core"] = xlstm.mlstm_init(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["core"] = xlstm.slstm_init(ks[0], cfg, dtype)
+    elif kind == "rec":
+        p["core"] = rglru.rglru_init(ks[0], cfg, dtype)
+        if cfg.d_ff > 0:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+            p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def block_apply(p, cfg: ModelConfig, kind: str, x, *, positions, mode,
+                cache):
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln1"], x)
+    if kind == "attn":
+        if cfg.use_mla:
+            y, new_cache = mla.mla_apply(p["attn"], cfg, h, positions=positions,
+                                         mode=mode, cache=cache)
+        else:
+            y, new_cache = attn.attn_apply(p["attn"], cfg, h, positions=positions,
+                                           mode=mode, cache=cache)
+        x = x + y
+        if cfg.is_moe:
+            m, aux = moe.moe_apply(p["moe"], cfg, rmsnorm(p["ln2"], x))
+            x = x + m
+        elif cfg.d_ff > 0:
+            x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+    elif kind in ("mlstm", "slstm"):
+        fn = xlstm.mlstm_apply if kind == "mlstm" else xlstm.slstm_apply
+        y, new_cache = fn(p["core"], cfg, h, mode=mode, cache=cache)
+        x = x + y
+    elif kind == "rec":
+        y, new_cache = rglru.rglru_apply(p["core"], cfg, h, mode=mode, cache=cache)
+        x = x + y
+        if cfg.d_ff > 0:
+            x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def make_block_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                     dtype):
+    if kind == "attn":
+        if cfg.use_mla:
+            return mla.make_mla_cache(cfg, batch, seq_len, dtype)
+        return attn.make_empty_cache(cfg, batch, seq_len, dtype)
+    if kind in ("mlstm", "slstm"):
+        return xlstm.make_xlstm_cache(cfg, kind, batch, dtype)
+    if kind == "rec":
+        return rglru.make_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------- assembly
+
+def _layer_kinds(cfg: ModelConfig):
+    pat = cfg.block_pattern
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def _use_scan(cfg: ModelConfig) -> bool:
+    return cfg.scan_layers and cfg.n_layers % len(cfg.block_pattern) == 0
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+
+    if _use_scan(cfg):
+        pat = cfg.block_pattern
+        n_rep = cfg.n_layers // len(pat)
+        blocks = []
+        for pos, kind in enumerate(pat):
+            per_rep = [block_init(keys[2 + r * len(pat) + pos], cfg, kind, dtype)
+                       for r in range(n_rep)]
+            blocks.append(jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per_rep))
+        params["blocks"] = blocks
+    else:
+        kinds = _layer_kinds(cfg)
+        params["layers"] = [block_init(keys[2 + i], cfg, kinds[i], dtype)
+                            for i in range(cfg.n_layers)]
+    return params
+
+
+def _forward(params, cfg: ModelConfig, tokens, *, positions, mode,
+             caches=None):
+    """Shared forward: returns (hidden (B,T,d), new_caches, aux)."""
+    x = embed_apply(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x = shard_act(x, ("dp", None, None))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if _use_scan(cfg):
+        pat = cfg.block_pattern
+        n_rep = cfg.n_layers // len(pat)
+
+        def rep_body(carry, xs):
+            x, aux = carry
+            layer_params, layer_caches = xs
+            new_caches = []
+            for pos, kind in enumerate(pat):
+                cache_p = layer_caches[pos] if layer_caches is not None else None
+                fn = partial(block_apply, cfg=cfg, kind=kind,
+                             positions=positions, mode=mode)
+                if cfg.remat and mode == "train":
+                    fn = jax.checkpoint(
+                        lambda p_, x_, c_, _f=fn: _f(p_, x=x_, cache=c_))
+                    x, nc, a = fn(layer_params[pos], x, cache_p)
+                else:
+                    x, nc, a = fn(layer_params[pos], x=x, cache=cache_p)
+                aux = aux + a
+                new_caches.append(nc)
+            return (x, aux), tuple(new_caches)
+
+        xs = (tuple(params["blocks"]),
+              tuple(caches) if caches is not None else None)
+        if caches is None:
+            # scan needs a concrete xs pytree: params only
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, lp: rep_body(c, (lp, None)), (x, aux_total),
+                tuple(params["blocks"]))
+            new_caches = None
+        else:
+            (x, aux_total), new_caches = jax.lax.scan(
+                rep_body, (x, aux_total), xs)
+    else:
+        kinds = _layer_kinds(cfg)
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            cache_i = caches[i] if caches is not None else None
+            fn = partial(block_apply, cfg=cfg, kind=kind,
+                         positions=positions, mode=mode)
+            if cfg.remat and mode == "train":
+                # mirror the scanned path so unrolled calibration lowers the
+                # same per-layer graph (roofline FD, launch/dryrun.py)
+                fn = jax.checkpoint(
+                    lambda p_, x_, c_, _f=fn: _f(p_, x=x_, cache=c_))
+                x, nc, a = fn(params["layers"][i], x, cache_i)
+            else:
+                x, nc, a = fn(params["layers"][i], x=x, cache=cache_i)
+            aux_total = aux_total + a
+            new_caches.append(nc)
+        if caches is None:
+            new_caches = None
+
+    x = rmsnorm(params["final_norm"], x)
+    return x, new_caches, aux_total
+
+
+def _logits(params, cfg: ModelConfig, hidden):
+    if cfg.tie_embeddings:
+        logits = hidden @ params["embed"].T
+    else:
+        logits = hidden @ params["lm_head"]
+    return shard_act(logits, ("dp", None, "tp"))
+
+
+# ------------------------------------------------------------- public API
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jax.Array:
+    tokens = batch["tokens"]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
+                                     tokens.shape)
+    hidden, _, aux = _forward(params, cfg, tokens, positions=positions,
+                              mode="train")
+    # chunked CE: never materializes the (B,T,V) f32 logits (§Perf iter 5)
+    from repro.models.common import chunked_cross_entropy
+
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ce = chunked_cross_entropy(hidden[:, :-1], head,
+                               batch["labels"][:, 1:], batch.get("mask"))
+    return ce + AUX_COEF * aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    kinds = _layer_kinds(cfg)
+    if _use_scan(cfg):
+        pat = cfg.block_pattern
+        n_rep = cfg.n_layers // len(pat)
+        caches = []
+        for kind in pat:
+            one = make_block_cache(cfg, kind, batch, seq_len, dtype)
+            caches.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape).copy(), one))
+        return tuple(caches)
+    return [make_block_cache(cfg, k, batch, seq_len, dtype) for k in kinds]
+
+
+def prefill(params, cfg: ModelConfig, tokens, positions=None,
+            cache_len=None):
+    """Prefill: forward over the prompt, returning (last-token logits, cache).
+    cache_len > prompt length leaves head-room for subsequent decode."""
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
+                                     tokens.shape)
+    caches = init_cache(cfg, tokens.shape[0], cache_len or tokens.shape[1])
+    hidden, new_caches, _ = _forward(params, cfg, tokens, positions=positions,
+                                     mode="prefill", caches=caches)
+    return _logits(params, cfg, hidden[:, -1:]), new_caches
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, caches, positions=None):
+    """One decode step. token (B,1); pos scalar int32; caches from
+    init_cache/prefill. Returns (logits (B,1,V), new caches)."""
+    if positions is None:
+        positions = jnp.broadcast_to(pos[None, None], token.shape)
+    hidden, new_caches, _ = _forward(params, cfg, token, positions=positions,
+                                     mode="decode", caches=caches)
+    return _logits(params, cfg, hidden), new_caches

@@ -1,0 +1,180 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, fully
+parallelizable) and sLSTM (scalar memory with exponential gating).
+
+d_ff = 0 in the assigned config: the blocks carry their own up/down
+projections (pre-up-projection architecture, §4 of the paper), so there is
+no separate MLP.
+
+Decode is O(1)-state: mLSTM carries (C (H,dh,dh), n (H,dh), m (H)); sLSTM
+carries (c, n, m, h_prev) — no KV cache at any context length, which is why
+xlstm-125m runs the long_500k cell.
+
+Training/prefill runs a chunked recurrence: lax.scan over chunks with the
+exact sequential update inside (simple, correct; the chunkwise-parallel
+formulation is a documented TODO — FLOP structure is identical).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.common import dense_init, rmsnorm, rmsnorm_init
+
+
+def _heads(cfg):
+    h = cfg.n_heads
+    dh = (cfg.d_model * 2) // h  # blocks operate at 2× up-projected width
+    return h, dh
+
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    du = h * dh
+    ks = jax.random.split(key, 8)
+    return {
+        "w_rec_in": dense_init(ks[0], d, 2 * du, dtype),   # up-proj (x, gate)
+        "wq": dense_init(ks[1], du, du, dtype),
+        "wk": dense_init(ks[2], du, du, dtype),
+        "wv": dense_init(ks[3], du, du, dtype),
+        "w_if": dense_init(ks[4], du, 2 * h, dtype),       # input/forget gates
+        "skip_scale": jnp.ones((du,), dtype),
+        "out_norm": rmsnorm_init(du, dtype),
+        "w_rec_out": dense_init(ks[5], du, d, dtype),
+    }
+
+
+def _mlstm_step(q, k, v, i_g, f_g, state):
+    """One timestep of mLSTM. q,k,v (B,H,dh); i_g,f_g (B,H); state
+    (C (B,H,dh,dh), n (B,H,dh), m (B,H))."""
+    c, n, m = state
+    log_f = -jax.nn.softplus(-f_g)          # log σ(f)
+    m_new = jnp.maximum(log_f + m, i_g)
+    i_sc = jnp.exp(i_g - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c = f_sc[..., None, None] * c + i_sc[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_sc[..., None] * n + i_sc[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                        jnp.exp(-m_new))
+    h_t = jnp.einsum("bhd,bhde->bhe", q, c) / denom[..., None]
+    return (c, n, m_new), h_t
+
+
+def mlstm_apply(p, cfg, x, *, mode: str = "train", cache=None, chunk: int = 256):
+    b, t, d = x.shape
+    h, dh = _heads(cfg)
+    du = h * dh
+    up = x @ p["w_rec_in"]
+    u, z = up[..., :du], up[..., du:]
+    u = shard_act(u, ("dp", None, "tp"))
+    q = (u @ p["wq"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3) / jnp.sqrt(
+        jnp.asarray(dh, x.dtype))
+    k = (u @ p["wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = (u @ p["wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    gf = (u @ p["w_if"]).astype(jnp.float32).reshape(b, t, 2, h)
+    i_g, f_g = gf[:, :, 0], gf[:, :, 1]
+
+    if cache is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.full((b, h), -1e30, jnp.float32))
+    else:
+        state = (cache["c"], cache["n"], cache["m"])
+
+    if mode == "decode":
+        state, h_t = _mlstm_step(q[:, :, 0].astype(jnp.float32),
+                                 k[:, :, 0].astype(jnp.float32),
+                                 v[:, :, 0].astype(jnp.float32),
+                                 i_g[:, 0], f_g[:, 0], state)
+        hs = h_t[:, None]                                   # (B,1,H,dh)
+        hs = hs.transpose(0, 1, 2, 3).reshape(b, 1, du).astype(x.dtype)
+    else:
+        def step(st, inp):
+            qt, kt, vt, it, ft = inp
+            st, ht = _mlstm_step(qt, kt, vt, it, ft, st)
+            return st, ht
+
+        xs = (q.transpose(2, 0, 1, 3).astype(jnp.float32),
+              k.transpose(2, 0, 1, 3).astype(jnp.float32),
+              v.transpose(2, 0, 1, 3).astype(jnp.float32),
+              i_g.transpose(1, 0, 2), f_g.transpose(1, 0, 2))
+        state, hs = jax.lax.scan(step, state, xs)           # hs (T,B,H,dh)
+        hs = hs.transpose(1, 0, 2, 3).reshape(b, t, du).astype(x.dtype)
+
+    new_cache = {"c": state[0], "n": state[1], "m": state[2]}
+    out = rmsnorm(p["out_norm"], hs) + u * p["skip_scale"]
+    out = out * jax.nn.silu(z)
+    return (out @ p["w_rec_out"]), new_cache
+
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    du = h * dh
+    ks = jax.random.split(key, 4)
+    return {
+        "w_rec_in": dense_init(ks[0], d, du, dtype),
+        "w_gates": dense_init(ks[1], du, 4 * du, dtype),   # z i f o
+        "r_gates": dense_init(ks[2], du, 4 * du, dtype),   # recurrent weights
+        "out_norm": rmsnorm_init(du, dtype),
+        "w_rec_out": dense_init(ks[3], du, d, dtype),
+    }
+
+
+def _slstm_step(p, u_t, state):
+    c, n, m, h_prev = state
+    g = (u_t @ p["w_gates"] + h_prev @ p["r_gates"]).astype(jnp.float32)
+    z, i, f, o = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_f = -jax.nn.softplus(-f)
+    m_new = jnp.maximum(log_f + m, i)
+    i_sc = jnp.exp(i - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c = f_sc * c + i_sc * z
+    n = f_sc * n + i_sc
+    h_new = o * (c / jnp.maximum(n, 1e-6))
+    return (c, n, m_new, h_new.astype(u_t.dtype))
+
+
+def slstm_apply(p, cfg, x, *, mode: str = "train", cache=None):
+    b, t, d = x.shape
+    h, dh = _heads(cfg)
+    du = h * dh
+    u = x @ p["w_rec_in"]
+    u = shard_act(u, ("dp", None, "tp"))
+    if cache is None:
+        state = (jnp.zeros((b, du), jnp.float32), jnp.zeros((b, du), jnp.float32),
+                 jnp.full((b, du), -1e30, jnp.float32), jnp.zeros((b, du), x.dtype))
+    else:
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+
+    if mode == "decode":
+        state = _slstm_step(p, u[:, 0], state)
+        hs = state[3][:, None]
+    else:
+        def step(st, u_t):
+            st = _slstm_step(p, u_t, st)
+            return st, st[3]
+
+        state, hs = jax.lax.scan(step, state, u.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+
+    new_cache = {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+    out = rmsnorm(p["out_norm"], hs)
+    return out @ p["w_rec_out"], new_cache
+
+
+def make_xlstm_cache(cfg, kind: str, batch: int, dtype):
+    h, dh = _heads(cfg)
+    du = h * dh
+    if kind == "mlstm":
+        return {"c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, h, dh), jnp.float32),
+                "m": jnp.full((batch, h), -1e30, jnp.float32)}
+    return {"c": jnp.zeros((batch, du), jnp.float32),
+            "n": jnp.zeros((batch, du), jnp.float32),
+            "m": jnp.full((batch, du), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, du), dtype)}

@@ -1,0 +1,5 @@
+from repro.operators.fno import FNOConfig, fno_apply, fno_init
+from repro.operators.deeponet import DeepONetConfig, deeponet_apply, deeponet_init
+
+__all__ = ["FNOConfig", "fno_init", "fno_apply",
+           "DeepONetConfig", "deeponet_init", "deeponet_apply"]

@@ -1,0 +1,61 @@
+"""DeepONet (Lu et al. 2019) — second neural-operator family cited by the
+paper. Branch net encodes the input function (sensor values = flattened
+input field), trunk net encodes query coordinates; output is the inner
+product of the two latent codes + bias."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepONetConfig:
+    n_sensors: int            # flattened input-field size
+    latent: int = 128
+    hidden: int = 128
+    depth: int = 3
+
+
+def _mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k = jax.random.fold_in(key, i)
+        params.append({
+            "w": jax.random.normal(k, (a, b)) * jnp.sqrt(2.0 / a),
+            "b": jnp.zeros((b,)),
+        })
+    return params
+
+
+def _mlp_apply(params, x):
+    for i, lp in enumerate(params):
+        x = x @ lp["w"] + lp["b"]
+        if i + 1 < len(params):
+            x = jnp.tanh(x)
+    return x
+
+
+def deeponet_init(key, cfg: DeepONetConfig):
+    kb, kt = jax.random.split(key)
+    branch_sizes = [cfg.n_sensors] + [cfg.hidden] * cfg.depth + [cfg.latent]
+    trunk_sizes = [2] + [cfg.hidden] * cfg.depth + [cfg.latent]
+    return {
+        "branch": _mlp_init(kb, branch_sizes),
+        "trunk": _mlp_init(kt, trunk_sizes),
+        "bias": jnp.zeros(()),
+    }
+
+
+def deeponet_apply(params, cfg: DeepONetConfig, sensors, coords):
+    """sensors (B, n_sensors); coords (Q, 2) → (B, Q)."""
+    b = _mlp_apply(params["branch"], sensors)          # (B, L)
+    t = _mlp_apply(params["trunk"], coords)            # (Q, L)
+    return b @ t.T + params["bias"]
+
+
+def grid_coords(nx: int, ny: int):
+    gx, gy = jnp.meshgrid(jnp.linspace(0, 1, nx), jnp.linspace(0, 1, ny),
+                          indexing="ij")
+    return jnp.stack([gx.ravel(), gy.ravel()], axis=-1)   # (nx*ny, 2)

@@ -1,0 +1,22 @@
+"""PDE substrate: problem families that assemble sequences of sparse linear
+systems A^(i) x^(i) = b^(i) (paper Eq. 1) from parametrized PDEs.
+
+All four paper datasets (Darcy, Thermal, Poisson, Helmholtz) discretize on
+(masked) structured grids, so every operator is a 5-point stencil stored in
+field form (`Stencil5`) or diagonal form (`DIA`) — the TPU-native layouts our
+Pallas kernels consume (DESIGN.md §4.1).
+"""
+from repro.pde.dia import DIA, Stencil5, dia_matvec, stencil5_matvec
+from repro.pde.problems import LinearProblem, ProblemFamily
+from repro.pde.registry import get_family, list_families
+
+__all__ = [
+    "DIA",
+    "Stencil5",
+    "dia_matvec",
+    "stencil5_matvec",
+    "LinearProblem",
+    "ProblemFamily",
+    "get_family",
+    "list_families",
+]

@@ -1,0 +1,53 @@
+"""Truncated Chebyshev polynomial samplers — the parameter source for the
+Poisson family (paper App. D.2: boundary conditions on all four sides + the
+source f generated from truncated Chebyshev series; the coefficients of the
+five series are the sorting basis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chebyshev_eval(coeffs: jax.Array, x: jax.Array) -> jax.Array:
+    """Evaluate sum_k coeffs[..., k] T_k(x) with x in [-1, 1] via the
+    Clenshaw-free direct recurrence (degree is small and static)."""
+    deg = coeffs.shape[-1]
+    t_prev = jnp.ones_like(x)
+    out = coeffs[..., 0] * t_prev
+    if deg == 1:
+        return out
+    t_cur = x
+    out = out + coeffs[..., 1] * t_cur
+    for k in range(2, deg):
+        t_next = 2.0 * x * t_cur - t_prev
+        out = out + coeffs[..., k] * t_next
+        t_prev, t_cur = t_cur, t_next
+    return out
+
+
+def chebyshev_eval2d(cxy: jax.Array, gx: jax.Array, gy: jax.Array) -> jax.Array:
+    """Tensor-product series sum_{k,l} cxy[k,l] T_k(gx) T_l(gy) on a grid."""
+    deg = cxy.shape[-1]
+    tx = _cheb_basis(gx, deg)  # (nx, deg)
+    ty = _cheb_basis(gy, deg)  # (ny, deg)
+    return jnp.einsum("kl,ik,jl->ij", cxy, tx, ty)
+
+
+def _cheb_basis(x: jax.Array, deg: int) -> jax.Array:
+    cols = [jnp.ones_like(x)]
+    if deg > 1:
+        cols.append(x)
+    for _ in range(2, deg):
+        cols.append(2.0 * x * cols[-1] - cols[-2])
+    return jnp.stack(cols, axis=-1)
+
+
+def sample_cheb_coeffs(key: jax.Array, shape, decay: float = 1.5) -> jax.Array:
+    """Random coefficients with spectral decay k^(−decay) so low orders
+    dominate — mirrors chebfun's smooth random functions (Driscoll et al.)."""
+    c = jax.random.normal(key, shape, dtype=jnp.float64)
+    deg = shape[-1]
+    w = (1.0 + jnp.arange(deg, dtype=jnp.float64)) ** (-decay)
+    if len(shape) == 2 and shape[0] == shape[1]:
+        return c * w[:, None] * w[None, :]
+    return c * w

@@ -1,0 +1,61 @@
+"""Convection–diffusion family (beyond-paper, DESIGN.md §8): the paper
+stresses that NO-generated systems are "typically non-symmetric", but its four
+benchmark families all discretize to (skew-free) symmetric stencils. This
+family supplies a genuinely nonsymmetric sequence to exercise the
+GMRES/GCRO-DR nonsymmetric code paths end-to-end:
+
+    −ν∇²u + v(x,y)·∇u = f,   v = rot(GRF stream function)  (divergence-free)
+
+First-order upwinding keeps the M-matrix property; nonsymmetry scales with
+the Péclet number."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pde.dia import Stencil5
+from repro.pde.grf import GRFSpec, sample_grf
+from repro.pde.problems import LinearProblem, ProblemFamily
+
+
+class ConvDiffFamily(ProblemFamily):
+    name = "convdiff"
+
+    def __init__(self, nx: int = 64, ny: int = 64, nu: float = 1.0, vmax: float = 50.0):
+        super().__init__(nx, ny)
+        self.nu = nu
+        self.vmax = vmax
+        self.spec = GRFSpec(nx=nx, ny=ny, alpha=3.0, tau=8.0, scale=nx**1.5)
+        self.hx = 1.0 / (nx + 1)
+        self.hy = 1.0 / (ny + 1)
+
+    def sample(self, key: jax.Array) -> LinearProblem:
+        field, feats = sample_grf(self.spec, key)
+        psi = field / (jnp.std(field) + 1e-12)
+        # v = (∂ψ/∂y, −∂ψ/∂x): divergence-free velocity.
+        vx = (jnp.roll(psi, -1, 1) - jnp.roll(psi, 1, 1)) / (2 * self.hy) * 0.0 + \
+             jnp.gradient(psi, self.hy, axis=1)
+        vy = -jnp.gradient(psi, self.hx, axis=0)
+        scale = self.vmax / (jnp.max(jnp.sqrt(vx**2 + vy**2)) + 1e-12)
+        vx, vy = vx * scale, vy * scale
+
+        cx = self.nu / self.hx**2
+        cy = self.nu / self.hy**2
+        # Upwind convection: coefficient of u_{i±1,j} depends on sign(vx).
+        axp = jnp.maximum(vx, 0.0) / self.hx   # flow in +x: uses u_{i-1}
+        axm = jnp.maximum(-vx, 0.0) / self.hx  # flow in -x: uses u_{i+1}
+        ayp = jnp.maximum(vy, 0.0) / self.hy
+        aym = jnp.maximum(-vy, 0.0) / self.hy
+
+        n = -(cx + axp)
+        s = -(cx + axm)
+        w = -(cy + ayp)
+        e = -(cy + aym)
+        c = 2.0 * (cx + cy) + axp + axm + ayp + aym
+        n = n.at[0, :].set(0.0)
+        s = s.at[-1, :].set(0.0)
+        w = w.at[:, 0].set(0.0)
+        e = e.at[:, -1].set(0.0)
+        coeffs = jnp.stack([c, n, s, w, e])
+        b = jnp.ones((self.nx, self.ny), jnp.float64)
+        return LinearProblem(op=Stencil5(coeffs), b=b, features=feats, no_input=psi)

@@ -1,0 +1,76 @@
+"""Darcy-flow family (paper App. D.2.1): −∇·(K(x,y)∇h) = f on the unit square,
+K = exp(GRF) (log-normal permeability), f ≡ 1, homogeneous Dirichlet BC —
+the standard FNO benchmark setup. Finite-volume discretization with
+harmonic-mean face transmissibilities keeps the operator an SPD 5-point
+stencil. Sorting features: the GRF low-frequency latent (the NO parameters
+themselves, per paper §6.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pde.dia import Stencil5
+from repro.pde.grf import GRFSpec, sample_grf
+from repro.pde.problems import LinearProblem, ProblemFamily
+
+
+def harmonic(a: jax.Array, b: jax.Array) -> jax.Array:
+    return 2.0 * a * b / (a + b)
+
+
+def assemble_darcy_stencil(k_field: jax.Array, hx: float, hy: float) -> jax.Array:
+    """Build (5, nx, ny) coeffs for −∇·(K∇·) with Dirichlet-0 BC.
+
+    Face transmissibilities use harmonic means; boundary faces use the cell
+    value itself (ghost cell with same K, u=0 at the wall)."""
+    kx_face = harmonic(k_field[:-1, :], k_field[1:, :])  # (nx-1, ny) interior x-faces
+    ky_face = harmonic(k_field[:, :-1], k_field[:, 1:])  # (nx, ny-1) interior y-faces
+
+    # Pad with wall transmissibilities (ghost K = cell K, half-distance wall
+    # handled by the same 1/h² scaling — standard cell-centred FV Dirichlet).
+    kx_n = jnp.concatenate([2.0 * k_field[:1, :], kx_face], axis=0)   # face above row i
+    kx_s = jnp.concatenate([kx_face, 2.0 * k_field[-1:, :]], axis=0)  # face below row i
+    ky_w = jnp.concatenate([2.0 * k_field[:, :1], ky_face], axis=1)
+    ky_e = jnp.concatenate([ky_face, 2.0 * k_field[:, -1:]], axis=1)
+
+    cx = 1.0 / hx**2
+    cy = 1.0 / hy**2
+    n = -cx * kx_n
+    s = -cx * kx_s
+    w = -cy * ky_w
+    e = -cy * ky_e
+    c = -(n + s + w + e)
+    # Off-grid legs don't appear in the matrix (u=0 outside): zero them but
+    # keep their contribution in the diagonal (done above, since c sums the
+    # wall transmissibilities too — that's the Dirichlet penalty).
+    n = n.at[0, :].set(0.0)
+    s = s.at[-1, :].set(0.0)
+    w = w.at[:, 0].set(0.0)
+    e = e.at[:, -1].set(0.0)
+    return jnp.stack([c, n, s, w, e])
+
+
+class DarcyFamily(ProblemFamily):
+    name = "darcy"
+
+    def __init__(self, nx: int = 64, ny: int = 64, alpha: float = 2.5, tau: float = 7.0,
+                 sigma: float = 1.0, source: float = 1.0):
+        super().__init__(nx, ny)
+        self.spec = GRFSpec(nx=nx, ny=ny, alpha=alpha, tau=tau, scale=nx**1.5)
+        self.sigma = sigma
+        self.source = source
+        self.hx = 1.0 / (nx + 1)
+        self.hy = 1.0 / (ny + 1)
+
+    def sample(self, key: jax.Array) -> LinearProblem:
+        field, feats = sample_grf(self.spec, key)
+        field = field / (jnp.std(field) + 1e-12)
+        k_field = jnp.exp(self.sigma * field)
+        coeffs = assemble_darcy_stencil(k_field, self.hx, self.hy)
+        b = jnp.full((self.nx, self.ny), self.source, dtype=jnp.float64)
+        return LinearProblem(
+            op=Stencil5(coeffs),
+            b=b,
+            features=feats,
+            no_input=k_field,
+        )

@@ -1,0 +1,218 @@
+"""Sparse operator containers: DIA (diagonal) and Stencil5 (2-D 5-point field
+form).
+
+Why not CSR: the paper's PETSc implementation uses CSR SpMV, which needs
+gathers — hostile to the TPU memory system. Every paper problem family lives
+on a structured grid, so the matrix is banded; storing diagonals densely turns
+SpMV into shifted elementwise multiplies (VPU) with unit-stride loads, and the
+2-D stencil form tiles directly into VMEM blocks (see kernels/stencil_matvec).
+
+Both containers are registered as pytrees so they pass through jit/vmap/scan;
+`offsets` (static) ride in the treedef.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DIA:
+    """Diagonal sparse matrix: A[i, i + offsets[d]] = data[d, i].
+
+    data rows are aligned to the *row* index i (PETSc/scipy "dia" uses column
+    alignment; row alignment keeps the matvec branch-free).
+    """
+
+    offsets: Tuple[int, ...]  # static
+    data: jax.Array  # (ndiag, n)
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def tree_flatten(self):
+        return (self.data,), self.offsets
+
+    @classmethod
+    def tree_unflatten(cls, offsets, children):
+        return cls(offsets=offsets, data=children[0])
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return dia_matvec(self, x)
+
+    def diagonal(self) -> jax.Array:
+        d = self.offsets.index(0)
+        return self.data[d]
+
+    def to_dense(self) -> np.ndarray:
+        """Dense numpy copy (test oracle only)."""
+        n = self.n
+        a = np.zeros((n, n), dtype=np.asarray(self.data).dtype)
+        data = np.asarray(self.data)
+        for d, off in enumerate(self.offsets):
+            if off >= 0:
+                idx = np.arange(n - off)
+                a[idx, idx + off] = data[d, : n - off]
+            else:
+                idx = np.arange(-off, n)
+                a[idx, idx + off] = data[d, -off:]
+        return a
+
+    def to_scipy(self):
+        """scipy.sparse CSR copy (test/benchmark oracle only)."""
+        import scipy.sparse as sp
+
+        return sp.csr_matrix(self.to_dense())
+
+    def transpose(self) -> "DIA":
+        n = self.n
+        new_offsets = tuple(-o for o in self.offsets)
+        rows = []
+        for d, off in enumerate(self.offsets):
+            # A^T[j, j - off] = A[j - (-off)?]. A[i, i+off]=data[d,i] means
+            # A^T[i+off, i] = data[d, i]; with r = i+off: A^T[r, r-off] =
+            # data[d, r-off] -> shift row by +off.
+            rows.append(_shift(self.data[d], off))
+        return DIA(offsets=new_offsets, data=jnp.stack(rows))
+
+
+def _shift(v: jax.Array, off: int) -> jax.Array:
+    """v shifted so out[i] = v[i - off], zero-filled."""
+    n = v.shape[-1]
+    if off == 0:
+        return v
+    if off > 0:
+        return jnp.concatenate([jnp.zeros((off,), v.dtype), v[: n - off]])
+    return jnp.concatenate([v[-off:], jnp.zeros((-off,), v.dtype)])
+
+
+def dia_matvec(a: DIA, x: jax.Array) -> jax.Array:
+    """y[i] = sum_d data[d, i] * x[i + offsets[d]] (zero outside range).
+
+    Supports batched data (…, ndiag, n) against x (…, n) via broadcasting of
+    the leading dims.
+    """
+    n = a.n
+    y = jnp.zeros(jnp.broadcast_shapes(a.data[..., 0, :].shape, x.shape), x.dtype)
+    for d, off in enumerate(a.offsets):
+        row = a.data[..., d, :]
+        if off == 0:
+            y = y + row * x
+        elif off > 0:
+            contrib = row[..., : n - off] * x[..., off:]
+            y = y.at[..., : n - off].add(contrib)
+        else:
+            contrib = row[..., -off:] * x[..., : n + off]
+            y = y.at[..., -off:].add(contrib)
+    return y
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Stencil5:
+    """2-D 5-point stencil in field form on an (nx, ny) grid.
+
+    y[i,j] = c[i,j] x[i,j] + n[i,j] x[i-1,j] + s[i,j] x[i+1,j]
+           + w[i,j] x[i,j-1] + e[i,j] x[i,j+1]          (zero outside grid)
+
+    coeffs: (5, nx, ny) stacked as [c, n, s, w, e].
+    """
+
+    coeffs: jax.Array  # (5, nx, ny)
+
+    C, N, S, W, E = 0, 1, 2, 3, 4
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return self.coeffs.shape[-2], self.coeffs.shape[-1]
+
+    @property
+    def n(self) -> int:
+        nx, ny = self.grid
+        return nx * ny
+
+    @property
+    def dtype(self):
+        return self.coeffs.dtype
+
+    def tree_flatten(self):
+        return (self.coeffs,), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(coeffs=children[0])
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return stencil5_matvec(self.coeffs, x)
+
+    def diagonal(self) -> jax.Array:
+        return self.coeffs[..., self.C, :, :].reshape(*self.coeffs.shape[:-3], -1)
+
+    def to_dia(self) -> DIA:
+        """Row-major flattening: offsets (-ny, -1, 0, 1, ny)."""
+        nx, ny = self.grid
+        c = self.coeffs
+        flat = lambda k: c[..., k, :, :].reshape(*c.shape[:-3], nx * ny)
+        # Interior-edge wrap guard: W at j=0 and E at j=ny-1 are zero by
+        # construction in every assembler (they multiply out-of-grid nodes).
+        data = jnp.stack(
+            [flat(self.N), flat(self.W), flat(self.C), flat(self.E), flat(self.S)],
+            axis=-2,
+        )
+        return DIA(offsets=(-ny, -1, 0, 1, ny), data=data)
+
+    def to_dense(self) -> np.ndarray:
+        return self.to_dia().to_dense()
+
+
+def stencil5_matvec(coeffs: jax.Array, x: jax.Array) -> jax.Array:
+    """Pure-jnp stencil matvec; batched over leading dims of both args.
+
+    coeffs: (..., 5, nx, ny); x: (..., nx, ny).
+    """
+    c = coeffs
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(1, 1), (1, 1)])
+    up = xp[..., :-2, 1:-1]
+    down = xp[..., 2:, 1:-1]
+    left = xp[..., 1:-1, :-2]
+    right = xp[..., 1:-1, 2:]
+    return (
+        c[..., Stencil5.C, :, :] * x
+        + c[..., Stencil5.N, :, :] * up
+        + c[..., Stencil5.S, :, :] * down
+        + c[..., Stencil5.W, :, :] * left
+        + c[..., Stencil5.E, :, :] * right
+    )
+
+
+def laplacian_stencil(nx: int, ny: int, dx: float, dy: float, dtype=jnp.float64) -> jax.Array:
+    """Constant-coefficient 5-point Laplacian coeffs (Dirichlet-0 off-grid)."""
+    cx = 1.0 / dx**2
+    cy = 1.0 / dy**2
+    c = jnp.full((nx, ny), -2.0 * (cx + cy), dtype)
+    n = jnp.full((nx, ny), cx, dtype)
+    s = jnp.full((nx, ny), cx, dtype)
+    w = jnp.full((nx, ny), cy, dtype)
+    e = jnp.full((nx, ny), cy, dtype)
+    return jnp.stack([c, n, s, w, e])
+
+
+def zero_boundary_neighbors(coeffs: jax.Array) -> jax.Array:
+    """Zero the stencil legs that reach outside the grid (Dirichlet rows own
+    their boundary contribution via the RHS)."""
+    c = coeffs
+    c = c.at[..., Stencil5.N, 0, :].set(0.0)
+    c = c.at[..., Stencil5.S, -1, :].set(0.0)
+    c = c.at[..., Stencil5.W, :, 0].set(0.0)
+    c = c.at[..., Stencil5.E, :, -1].set(0.0)
+    return c

@@ -1,0 +1,55 @@
+"""Gaussian random fields (GRF) — the parameter sampler behind the Darcy and
+Helmholtz families (paper §6.1, App. D.2).
+
+Spectral (Matérn-like) sampling: white noise shaped by the power spectrum
+    sqrt_spec(k) ∝ scale * (4π²|k|² + τ²)^(−α/2)
+via FFT. The white-noise tensor is the *latent*; its low-frequency block is
+the sorting feature ("parameter matrix" P^(i) of Algorithm 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GRFSpec:
+    nx: int
+    ny: int
+    alpha: float = 2.5
+    tau: float = 7.0
+    scale: float = 1.0
+    feature_modes: int = 8  # low-frequency latent block kept for sorting
+
+
+def _sqrt_spectrum(spec: GRFSpec, dtype=jnp.float64) -> jax.Array:
+    kx = jnp.fft.fftfreq(spec.nx, d=1.0 / spec.nx).astype(dtype)
+    ky = jnp.fft.fftfreq(spec.ny, d=1.0 / spec.ny).astype(dtype)
+    k2 = (2 * jnp.pi) ** 2 * (kx[:, None] ** 2 + ky[None, :] ** 2)
+    s = spec.scale * (k2 + spec.tau**2) ** (-spec.alpha / 2.0)
+    return s.at[0, 0].set(0.0)  # zero-mean field
+
+
+@partial(jax.jit, static_argnums=0)
+def sample_grf(spec: GRFSpec, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (field (nx, ny) real f64, latent_features (2·m·m,)).
+
+    The latent is the low-frequency complex spectrum (real/imag stacked):
+    nearby latents ⇒ nearby fields, which is exactly the property the sorting
+    pass exploits.
+    """
+    noise = jax.random.normal(key, (spec.nx, spec.ny), dtype=jnp.float64)
+    coef = jnp.fft.fft2(noise) * _sqrt_spectrum(spec)
+    field = jnp.real(jnp.fft.ifft2(coef))
+    m = spec.feature_modes
+    low = coef[:m, :m]
+    feats = jnp.concatenate([jnp.real(low).ravel(), jnp.imag(low).ravel()])
+    return field, feats
+
+
+def sample_grf_batch(spec: GRFSpec, key: jax.Array, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: sample_grf(spec, k))(keys)

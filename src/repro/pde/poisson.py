@@ -1,0 +1,65 @@
+"""Poisson family (paper App. D.2.3): ∇²u = f on the unit square.
+
+Boundary values on all four sides and the source f are truncated Chebyshev
+series; the coefficients of those five series ARE the sorting features
+(paper: "The coefficients of these five Chebyshev polynomials are the basis
+for our sorting"). A is the fixed 5-point Laplacian; only b varies across the
+sequence — the regime where recycling pays off maximally."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pde.chebyshev import chebyshev_eval, chebyshev_eval2d, sample_cheb_coeffs
+from repro.pde.dia import Stencil5, laplacian_stencil, zero_boundary_neighbors
+from repro.pde.problems import LinearProblem, ProblemFamily, interior_linspace
+
+
+class PoissonFamily(ProblemFamily):
+    name = "poisson"
+
+    def __init__(self, nx: int = 64, ny: int = 64, degree: int = 5, amp: float = 50.0):
+        super().__init__(nx, ny)
+        self.degree = degree
+        self.amp = amp
+        self.hx = 1.0 / (nx + 1)
+        self.hy = 1.0 / (ny + 1)
+        self.gx = interior_linspace(nx)  # grid in [0,1]
+        self.gy = interior_linspace(ny)
+        coeffs = laplacian_stencil(nx, ny, self.hx, self.hy)
+        self._coeffs = zero_boundary_neighbors(coeffs)
+
+    def sample(self, key: jax.Array) -> LinearProblem:
+        kf, kl, kr, kb, kt = jax.random.split(key, 5)
+        d = self.degree
+        cf = sample_cheb_coeffs(kf, (d, d)) * self.amp
+        cl = sample_cheb_coeffs(kl, (d,))
+        cr = sample_cheb_coeffs(kr, (d,))
+        cb = sample_cheb_coeffs(kb, (d,))
+        ct = sample_cheb_coeffs(kt, (d,))
+
+        tx = 2.0 * self.gx - 1.0  # map [0,1] -> [-1,1]
+        ty = 2.0 * self.gy - 1.0
+        f = chebyshev_eval2d(cf, tx, ty)
+
+        # Dirichlet boundary values along each side.
+        u_left = chebyshev_eval(cl, tx)   # x varies along the left edge (j=0)
+        u_right = chebyshev_eval(cr, tx)
+        u_bottom = chebyshev_eval(cb, ty)  # y varies along the bottom edge (i=0)
+        u_top = chebyshev_eval(ct, ty)
+
+        cx = 1.0 / self.hx**2
+        cy = 1.0 / self.hy**2
+        b = f
+        b = b.at[0, :].add(-cx * u_bottom)
+        b = b.at[-1, :].add(-cx * u_top)
+        b = b.at[:, 0].add(-cy * u_left)
+        b = b.at[:, -1].add(-cy * u_right)
+
+        features = jnp.concatenate([cf.ravel(), cl, cr, cb, ct])
+        return LinearProblem(
+            op=Stencil5(self._coeffs),
+            b=b,
+            features=features,
+            no_input=f,
+        )

@@ -1,0 +1,79 @@
+"""Problem-family abstraction: step 1-3 of the paper's Figure 1 pipeline
+(sample NO parameters → export PDE → discretize to a linear system)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.pde.dia import Stencil5
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LinearProblem:
+    """One sampled system A x = b plus its metadata.
+
+    op        : Stencil5 operator (field form; .to_dia() for flat form)
+    b         : (nx, ny) RHS in field form
+    features  : (f,) the "parameter matrix" P^(i) of Algorithm 1, flattened —
+                what the sorting pass measures distances on
+    no_input  : (nx, ny) the neural-operator input channel (e.g. permeability
+                K for Darcy); the solution x is the training label
+    """
+
+    op: Stencil5
+    b: jax.Array
+    features: jax.Array
+    no_input: jax.Array
+
+    def tree_flatten(self):
+        return (self.op, self.b, self.features, self.no_input), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+    @property
+    def grid(self):
+        return self.b.shape[-2], self.b.shape[-1]
+
+
+class ProblemFamily:
+    """Base class. Subclasses implement `sample(key) -> LinearProblem`;
+    everything is vmap-safe (static masks / grids), so `sample_batch` stacks
+    a whole dataset's systems into leading-axis arrays — the layout the
+    chunk-parallel SKR driver shards over the `data` mesh axis."""
+
+    name: str = "base"
+
+    def __init__(self, nx: int, ny: int):
+        self.nx = int(nx)
+        self.ny = int(ny)
+
+    @property
+    def n(self) -> int:
+        return self.nx * self.ny
+
+    def sample(self, key: jax.Array) -> LinearProblem:
+        raise NotImplementedError
+
+    def sample_batch(self, key: jax.Array, num: int) -> LinearProblem:
+        keys = jax.random.split(key, num)
+        return jax.vmap(self.sample)(keys)
+
+    # -- hooks the solver layer uses ------------------------------------
+    def matvec_fn(self) -> Callable:
+        """Returns apply(op_coeffs, x_field) -> y_field; overridden by
+        families whose operator is not a plain stencil."""
+        from repro.pde.dia import stencil5_matvec
+
+        return stencil5_matvec
+
+
+def interior_linspace(n: int, lo: float = 0.0, hi: float = 1.0) -> jax.Array:
+    """n interior nodes of a uniform grid on [lo, hi] (Dirichlet layout)."""
+    h = (hi - lo) / (n + 1)
+    return lo + h * jnp.arange(1, n + 1, dtype=jnp.float64)

@@ -1,0 +1,30 @@
+"""Problem-family registry: name → constructor, with the paper's default
+grid sizes scaled down to CPU-friendly defaults (overridable everywhere)."""
+from __future__ import annotations
+
+from typing import Dict, Type
+
+from repro.pde.convdiff import ConvDiffFamily
+from repro.pde.darcy import DarcyFamily
+from repro.pde.helmholtz import HelmholtzFamily
+from repro.pde.poisson import PoissonFamily
+from repro.pde.problems import ProblemFamily
+from repro.pde.thermal import ThermalFamily
+
+_FAMILIES: Dict[str, Type[ProblemFamily]] = {
+    "darcy": DarcyFamily,
+    "thermal": ThermalFamily,
+    "poisson": PoissonFamily,
+    "helmholtz": HelmholtzFamily,
+    "convdiff": ConvDiffFamily,  # beyond-paper nonsymmetric family
+}
+
+
+def list_families():
+    return sorted(_FAMILIES)
+
+
+def get_family(name: str, **kwargs) -> ProblemFamily:
+    if name not in _FAMILIES:
+        raise KeyError(f"unknown problem family {name!r}; have {list_families()}")
+    return _FAMILIES[name](**kwargs)

@@ -1,0 +1,84 @@
+"""Thermal family (paper App. D.2.2): steady-state heat equation ∂²T/∂x² +
+∂²T/∂y² = 0 on an IRREGULAR domain (paper Fig. 6 uses a blob-shaped FEM mesh).
+
+We carve an irregular star-shaped domain r(θ) = r0·(1 + ε·sin 3θ + ε₂·cos 5θ)
+out of the unit square (embedded-boundary FDM): nodes outside the domain get
+identity rows; interior nodes adjacent to the boundary absorb the Dirichlet
+temperature into b. Left/right boundary temperatures are uniform random in
+[-100, 0] / [0, 100] (the sorting features). The matrix is FIXED across the
+sequence — only b varies — matching the paper's setup where recycling shines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pde.dia import Stencil5
+from repro.pde.problems import LinearProblem, ProblemFamily, interior_linspace
+
+
+def _star_mask(nx: int, ny: int) -> np.ndarray:
+    gx = np.asarray(interior_linspace(nx))
+    gy = np.asarray(interior_linspace(ny))
+    xx, yy = np.meshgrid(gx, gy, indexing="ij")
+    dx, dy = xx - 0.5, yy - 0.5
+    r = np.sqrt(dx**2 + dy**2)
+    th = np.arctan2(dy, dx)
+    r_b = 0.40 * (1.0 + 0.18 * np.sin(3 * th) + 0.08 * np.cos(5 * th))
+    return r < r_b  # True = interior
+
+
+class ThermalFamily(ProblemFamily):
+    name = "thermal"
+
+    def __init__(self, nx: int = 96, ny: int = 96):
+        super().__init__(nx, ny)
+        self.hx = 1.0 / (nx + 1)
+        self.hy = 1.0 / (ny + 1)
+        mask = _star_mask(nx, ny)
+        self.mask = jnp.asarray(mask)
+
+        cx, cy = 1.0 / self.hx**2, 1.0 / self.hy**2
+        m = mask.astype(np.float64)
+        # Neighbor interior indicators (0 at grid edge).
+        up = np.zeros_like(m); up[1:, :] = m[:-1, :]
+        dn = np.zeros_like(m); dn[:-1, :] = m[1:, :]
+        lf = np.zeros_like(m); lf[:, 1:] = m[:, :-1]
+        rt = np.zeros_like(m); rt[:, :-1] = m[:, 1:]
+
+        c = np.where(mask, -2.0 * (cx + cy), 1.0)  # identity rows outside
+        n = np.where(mask, cx * up, 0.0)
+        s = np.where(mask, cx * dn, 0.0)
+        w = np.where(mask, cy * lf, 0.0)
+        e = np.where(mask, cy * rt, 0.0)
+        self._coeffs = jnp.asarray(np.stack([c, n, s, w, e]))
+
+        # b-template: for each interior node, the weight with which the
+        # boundary temperature profile enters the RHS:
+        #   b = -Σ_dir c_dir · T_bc(node)   over legs that exit the domain.
+        n_ghost = np.where(mask, cx * (1.0 - up), 0.0)
+        s_ghost = np.where(mask, cx * (1.0 - dn), 0.0)
+        w_ghost = np.where(mask, cy * (1.0 - lf), 0.0)
+        e_ghost = np.where(mask, cy * (1.0 - rt), 0.0)
+        ghost_w = n_ghost + s_ghost + w_ghost + e_ghost  # total exiting weight
+        gx = np.asarray(interior_linspace(nx))
+        xhat = (gx[:, None] - gx.min()) / (gx.max() - gx.min())
+        xhat = np.broadcast_to(xhat, (nx, ny))
+        self._ghost_w = jnp.asarray(ghost_w)
+        self._xhat = jnp.asarray(xhat)
+
+    def sample(self, key: jax.Array) -> LinearProblem:
+        kl, kr = jax.random.split(key)
+        t_left = jax.random.uniform(kl, (), jnp.float64, -100.0, 0.0)
+        t_right = jax.random.uniform(kr, (), jnp.float64, 0.0, 100.0)
+        # Boundary temperature profile interpolates left→right across x.
+        t_bc = t_left * (1.0 - self._xhat) + t_right * self._xhat
+        b = -self._ghost_w * t_bc
+        features = jnp.stack([t_left, t_right])
+        return LinearProblem(
+            op=Stencil5(self._coeffs),
+            b=b,
+            features=features,
+            no_input=t_bc * self.mask,
+        )

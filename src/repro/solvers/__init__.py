@@ -1,0 +1,25 @@
+"""Krylov solver layer: GMRES (baseline) + GCRO-DR (recycling) +
+TPU-adapted preconditioners."""
+from repro.solvers.gcrodr import GCRODRSolver, solve_gcrodr
+from repro.solvers.gmres import gmres_solve, solve_gmres
+from repro.solvers.operator import (DIAOp, PreconditionedOp, StencilOp,
+                                    apply_op, as_operator)
+from repro.solvers.precond import PRECONDITIONERS, make_preconditioner
+from repro.solvers.types import KrylovConfig, SequenceStats, SolveStats
+
+__all__ = [
+    "GCRODRSolver",
+    "solve_gcrodr",
+    "gmres_solve",
+    "solve_gmres",
+    "DIAOp",
+    "PreconditionedOp",
+    "StencilOp",
+    "apply_op",
+    "as_operator",
+    "PRECONDITIONERS",
+    "make_preconditioner",
+    "KrylovConfig",
+    "SequenceStats",
+    "SolveStats",
+]

@@ -1,0 +1,127 @@
+"""The jitted (deflated) Arnoldi cycle — the hot loop shared by GMRES and
+GCRO-DR.
+
+One call runs up to `m` Arnoldi steps of the operator (I − C Cᴴ)·A with
+progressive Givens residual tracking and early exit (`lax.while_loop`), so a
+solver cycle is ONE device dispatch regardless of where it converges. The
+m×m eigen/LS cleanup happens on host (numpy) between cycles — O(m³) ≲ µs —
+the same device/host split PETSc uses (DESIGN §4.3).
+
+Key GCRO-DR fact exploited here: because Ĝ's recycled block [[D_k, B]] has
+nonsingular diagonal D_k, the least-squares residual of
+min‖Ŵᴴr − Ĝ y‖ equals the residual of the Hessenberg-only subproblem
+min‖β e₁ − H̄ y₂‖ — so the SAME Givens recurrence gives the exact residual
+for both GMRES (k=0) and GCRO-DR (k>0), and early exit is exact.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.solvers.operator import apply_op
+
+
+class CycleResult(NamedTuple):
+    v: jax.Array          # (m+1, n) orthonormal basis (rows)
+    h: jax.Array          # (m+1, m) Hessenberg (raw, un-rotated)
+    b: jax.Array          # (k, m)   B = Cᴴ A V block (k may be 0)
+    j_used: jax.Array     # int — Arnoldi steps actually taken
+    res_est: jax.Array    # float — exact LS residual after j_used steps
+    breakdown: jax.Array  # bool — lucky breakdown hit
+
+
+def _givens_apply(cs, sn, col, j):
+    """Apply rotations 0..j-1 to col, then form rotation j. Returns updated
+    (cs, sn, col, denom)."""
+
+    def body(i, c):
+        t = cs[i] * c[i] + sn[i] * c[i + 1]
+        c = c.at[i + 1].set(-sn[i] * c[i] + cs[i] * c[i + 1])
+        return c.at[i].set(t)
+
+    col = jax.lax.fori_loop(0, j, body, col)
+    a, bb = col[j], col[j + 1]
+    denom = jnp.sqrt(a * a + bb * bb)
+    safe = jnp.maximum(denom, jnp.finfo(col.dtype).tiny)
+    cs_j = jnp.where(denom > 0, a / safe, 1.0)
+    sn_j = jnp.where(denom > 0, bb / safe, 0.0)
+    cs = cs.at[j].set(cs_j)
+    sn = sn.at[j].set(sn_j)
+    col = col.at[j].set(denom).at[j + 1].set(0.0)
+    return cs, sn, col
+
+
+def _mgs(v, w, j, m):
+    """Modified Gram-Schmidt (paper-faithful): sequential projections."""
+
+    def body(i, carry):
+        w, h = carry
+        active = (i <= j).astype(w.dtype)
+        hi = active * jnp.dot(v[i], w)
+        w = w - hi * v[i]
+        return w, h.at[i].set(hi)
+
+    h0 = jnp.zeros((m + 1,), w.dtype)
+    return jax.lax.fori_loop(0, m + 1, body, (w, h0))
+
+
+@partial(jax.jit, static_argnames=("m", "orthog", "use_kernel"))
+def arnoldi_cycle(op, c_rows, r0, tol_abs, *, m: int, orthog: str = "cgs2",
+                  use_kernel: bool = False) -> CycleResult:
+    """Run ≤ m deflated Arnoldi steps starting from r0.
+
+    op      : operator pytree (PreconditionedOp) — applied via apply_op
+    c_rows  : (k, n) rows = C_kᴴ (k == 0 for plain GMRES)
+    r0      : (n,) current residual (must be ⊥ range(C) for exact res_est)
+    tol_abs : absolute residual target (rtol·‖b‖ computed by the caller)
+    """
+    n = r0.shape[0]
+    k = c_rows.shape[0]
+    dt = r0.dtype
+    beta = jnp.linalg.norm(r0)
+    safe_beta = jnp.maximum(beta, jnp.finfo(dt).tiny)
+
+    v = jnp.zeros((m + 1, n), dt).at[0].set(r0 / safe_beta)
+    h = jnp.zeros((m + 1, m), dt)
+    b = jnp.zeros((k, m), dt)
+    cs = jnp.zeros((m,), dt)
+    sn = jnp.zeros((m,), dt)
+    g = jnp.zeros((m + 1,), dt).at[0].set(beta)
+
+    def cond(carry):
+        v, h, b, cs, sn, g, j, res, brk = carry
+        return (j < m) & (res > tol_abs) & (~brk)
+
+    def body(carry):
+        v, h, b, cs, sn, g, j, res, brk = carry
+        w = apply_op(op, v[j])
+        if k > 0:
+            bj = c_rows @ w
+            w = w - c_rows.T @ bj
+            b_new = b.at[:, j].set(bj)
+        else:
+            b_new = b
+        if orthog == "cgs2":
+            mask = (jnp.arange(m + 1) <= j).astype(dt)
+            w, hcol = kops.fused_orthog(v, w, mask, use_kernel=use_kernel)
+        else:
+            w, hcol = _mgs(v, w, j, m)
+        hj1 = jnp.linalg.norm(w)
+        brk_new = hj1 < 1e-14 * safe_beta
+        v = v.at[j + 1].set(w / jnp.maximum(hj1, jnp.finfo(dt).tiny))
+        hcol = hcol.at[j + 1].set(hj1)
+        h = h.at[:, j].set(hcol)
+        # Progressive Givens on a copy of the new column → exact LS residual.
+        cs, sn, col = _givens_apply(cs, sn, hcol, j)
+        gj = g[j]
+        g = g.at[j].set(cs[j] * gj).at[j + 1].set(-sn[j] * gj)
+        res = jnp.abs(g[j + 1])
+        return (v, h, b_new, cs, sn, g, j + 1, res, brk_new)
+
+    init = (v, h, b, cs, sn, g, jnp.array(0), beta, jnp.array(False))
+    v, h, b, cs, sn, g, j, res, brk = jax.lax.while_loop(cond, body, init)
+    return CycleResult(v=v, h=h, b=b, j_used=j, res_est=res, breakdown=brk)

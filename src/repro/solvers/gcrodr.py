@@ -1,0 +1,306 @@
+"""GCRO-DR — Generalized Conjugate Residual with inner Orthogonalization and
+Deflated Restarting (Parks et al. 2006; paper App. B.2 Algorithm 2), the
+recycling engine of SKR.
+
+The solver is STATEFUL across a sequence of systems: after system i it keeps
+Ỹ_k = U_k (the approximate invariant subspace of the smallest harmonic Ritz
+values) and re-biorthogonalizes it against A^(i+1) (Alg. 2 lines 2-7 /
+App. B.1). GMRES is exactly the k=0 special case — asserted in tests.
+
+Device/host split (§Perf iter 4): Arnoldi cycles AND all O(m·n) update
+algebra run as fused jitted dispatches with PADDED static shapes (y, P, Q
+zero-padded to the full cycle width, so early-exit cycles reuse the same
+executable); only the O(m³) eigen/LS/QR cleanup runs on host — the same
+split PETSc uses, but with ~4 device round-trips per cycle instead of ~15.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.solvers.arnoldi import arnoldi_cycle
+from repro.solvers.gmres import _residual, gmres_solve
+from repro.solvers.hostlinalg import (harmonic_ritz_deflated,
+                                      harmonic_ritz_first_cycle,
+                                      hessenberg_lstsq, right_tri_solve)
+from repro.solvers.operator import PreconditionedOp, apply_op, as_operator
+from repro.solvers.types import KrylovConfig, SolveStats
+
+_apply_cols = jax.jit(jax.vmap(apply_op, in_axes=(None, 1), out_axes=1))
+
+
+# --------------------------------------------------------------------------
+# fused device steps (shapes static per (n, m, k) — compiled once/sequence)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _warm_start(u, au_q, z, r):
+    """Alg. 2 lines 6-7 given Q from qr(A·U_old): project the initial
+    residual onto range(C)ᶜ and absorb the correction into z."""
+    ctr = au_q.T @ r
+    z = z + u @ ctr
+    r = r - au_q @ ctr
+    return z, r, jnp.linalg.norm(r)
+
+
+@jax.jit
+def _fresh_update(op, b, z, v, y):
+    """z += Vᵀy (y zero-padded to m); recompute the true residual."""
+    z = z + v[:-1].T @ y
+    r = b - apply_op(op, z)
+    return z, r, jnp.linalg.norm(r)
+
+
+@jax.jit
+def _fresh_cu(v, h, p, q):
+    """First recycle space: Ỹ = V P, C = V_{m+1} Q (P, Q zero-padded)."""
+    yk = v[:-1].T @ p
+    c = v.T @ q
+    return c, yk
+
+
+@jax.jit
+def _rhs_and_dnorm(c, u, v, r):
+    """Ŵᴴr pieces + ‖U columns‖ for the host-side LS solve."""
+    return c.T @ r, v @ r, jnp.linalg.norm(u, axis=0)
+
+
+@jax.jit
+def _deflated_update(op, b, z, ut, v, y_k, y_m):
+    """z += Û y_k + V y_m (zero-padded); true residual + Ŵᴴ V̂ pencil."""
+    z = z + ut @ y_k + v[:-1].T @ y_m
+    r = b - apply_op(op, z)
+    # Ŵ = [C V_{m+1}] is produced by the caller as (c, v); the pencil
+    # Ŵᴴ V̂ is assembled on host from these small blocks.
+    return z, r, jnp.linalg.norm(r)
+
+
+@jax.jit
+def _whv_blocks(c, ut, v):
+    """Small blocks of Ŵᴴ V̂: Ŵ = [c, Vrows], V̂ = [ut, Vrows[:-1]]."""
+    cu = c.T @ ut                      # (k, k)
+    cv = c.T @ v[:-1].T                # (k, m)
+    vu = v @ ut                        # (m+1, k)
+    vv = v @ v[:-1].T                  # (m+1, m)
+    return cu, cv, vu, vv
+
+
+@jax.jit
+def _next_cu(ut, v, c, p_k, p_m, q_c, q_v):
+    """C' = Ŵ Q, Ỹ = V̂ P from padded host factors."""
+    yk = ut @ p_k + v[:-1].T @ p_m
+    c_new = c @ q_c + v.T @ q_v
+    return c_new, yk
+
+
+class GCRODRSolver:
+    """Sequence-stateful GCRO-DR. One instance per sorted sequence.
+
+    Usage:
+        solver = GCRODRSolver(cfg)
+        for problem in sorted_sequence:
+            x, stats = solver.solve(op_i, b_i)
+    """
+
+    def __init__(self, cfg: KrylovConfig, use_kernel: bool = False):
+        self.cfg = cfg
+        self.use_kernel = use_kernel
+        self.u_carry: np.ndarray | None = None  # (n, k) recycle space
+        self.systems_solved = 0
+
+    # -- resumable-datagen support (core/skr.py checkpoints this) --------
+    def state_dict(self) -> dict:
+        return {"u_carry": self.u_carry, "systems_solved": self.systems_solved}
+
+    def load_state_dict(self, state: dict):
+        self.u_carry = state["u_carry"]
+        self.systems_solved = int(state["systems_solved"])
+
+    def reset(self):
+        self.u_carry = None
+        self.systems_solved = 0
+
+    # --------------------------------------------------------------------
+    def _refresh_space(self, last_cycle, k: int, mi: int):
+        """Harmonic-Ritz recycle-space refresh from a deflated cycle
+        (Alg. 2 lines 29-33). Returns (C', U') or None on rank trouble."""
+        j, g, ut, cyc, c_dev = last_cycle
+        cu, cv, vu, vv = [np.asarray(a)
+                          for a in _whv_blocks(c_dev, ut, cyc.v)]
+        whv = np.zeros((k + j + 1, k + j))
+        whv[:k, :k] = cu
+        whv[:k, k:] = cv[:, :j]
+        whv[k:, :k] = vu[: j + 1]
+        whv[k:, k:] = vv[: j + 1, :j]
+        p = harmonic_ritz_deflated(g, whv, k)
+        if p.shape[1] != k:
+            return None
+        q, rr = np.linalg.qr(g @ p)
+        diag = np.abs(np.diag(rr))
+        if diag.min() <= 1e-12 * max(diag.max(), 1e-300):
+            return None
+        p_m = np.zeros((mi, k))
+        p_m[:j] = p[k:]
+        q_v = np.zeros((mi + 1, k))
+        q_v[: j + 1] = q[k:]
+        c_new, yk = _next_cu(ut, cyc.v, c_dev,
+                             jnp.asarray(p[:k]), jnp.asarray(p_m),
+                             jnp.asarray(q[:k]), jnp.asarray(q_v))
+        return c_new, yk @ jnp.asarray(np.linalg.inv(rr))
+
+    def solve(self, op: PreconditionedOp, b, x0=None):
+        cfg = self.cfg
+        if cfg.k == 0:
+            x, stats = gmres_solve(op, b, cfg, x0=x0, use_kernel=self.use_kernel)
+            self.systems_solved += 1
+            return x, stats
+
+        t0 = time.perf_counter()
+        n = int(b.shape[0])
+        b = jnp.asarray(b)
+        z = jnp.zeros(n, b.dtype) if x0 is None else jnp.asarray(x0)
+        bnorm = float(jnp.linalg.norm(b))
+        stats = SolveStats()
+        if bnorm == 0.0:
+            stats.converged = True
+            stats.rel_residual = 0.0
+            stats.wall_time_s = time.perf_counter() - t0
+            self.systems_solved += 1
+            return np.zeros(n), stats
+        tol_abs = cfg.tol * bnorm
+        r = _residual(op, b, z) if x0 is not None else b
+        rnorm = float(jnp.linalg.norm(r))
+
+        c_dev = None  # (n, k) device
+        u_dev = None
+        k = cfg.k
+
+        # ---- warm start: re-biorthogonalize the carried recycle space ----
+        if self.u_carry is not None and self.u_carry.shape[1] == k \
+                and rnorm > tol_abs:
+            u_old = jnp.asarray(self.u_carry)
+            au = _apply_cols(op, u_old)                      # (n, k)
+            stats.matvecs += k
+            q, rr = jnp.linalg.qr(au)                        # reduced QR
+            rr_np = np.asarray(rr)
+            diag = np.abs(np.diag(rr_np))
+            if diag.min() > 1e-12 * max(diag.max(), 1e-300):
+                c_dev = q
+                u_dev = u_old @ jnp.asarray(
+                    np.linalg.inv(rr_np))                    # U R⁻¹
+                z, r, rn = _warm_start(u_dev, c_dev, z, r)
+                rnorm = float(rn)
+
+        empty_c = jnp.zeros((0, n), b.dtype)
+        last_cycle = None   # (j, g, ut, cyc, c) of the latest deflated cycle
+
+        while True:
+            if rnorm <= tol_abs:
+                stats.converged = True
+                break
+            if stats.iterations >= cfg.maxiter:
+                break
+
+            if c_dev is None:
+                # ---- fresh GMRES(m) cycle + first recycle space (l.9-18) --
+                m = cfg.m
+                cyc = arnoldi_cycle(op, empty_c, r, tol_abs, m=m,
+                                    orthog=cfg.orthog, use_kernel=self.use_kernel)
+                j = int(cyc.j_used)
+                if j == 0:
+                    break
+                h = np.asarray(cyc.h)                       # (m+1, m) small
+                y = np.zeros(m)
+                y[:j] = hessenberg_lstsq(h[: j + 1, :j], rnorm)
+                z, r, rn = _fresh_update(op, b, z, cyc.v, jnp.asarray(y))
+                rnorm = float(rn)
+                stats.iterations += j
+                stats.matvecs += j + 1
+                stats.cycles += 1
+                k_eff = min(k, j - 1)
+                if k_eff >= 1:
+                    p = harmonic_ritz_first_cycle(h, j, k_eff)
+                    if p.shape[1] == k:
+                        q, rr = np.linalg.qr(h[: j + 1, :j] @ p)
+                        diag = np.abs(np.diag(rr))
+                        if diag.min() > 1e-12 * max(diag.max(), 1e-300):
+                            p_pad = np.zeros((m, k))
+                            p_pad[:j] = p
+                            q_pad = np.zeros((m + 1, k))
+                            q_pad[: j + 1] = q
+                            c_dev, yk = _fresh_cu(cyc.v, cyc.h,
+                                                  jnp.asarray(p_pad),
+                                                  jnp.asarray(q_pad))
+                            u_dev = yk @ jnp.asarray(np.linalg.inv(rr))
+                continue
+
+            # ---- deflated cycle (Alg. 2 lines 19-33) ----------------------
+            mi = cfg.m - k
+            cyc = arnoldi_cycle(op, c_dev.T, r, tol_abs, m=mi,
+                                orthog=cfg.orthog, use_kernel=self.use_kernel)
+            j = int(cyc.j_used)
+            if j == 0:
+                break
+            ctr, vr, dnorm = _rhs_and_dnorm(c_dev, u_dev, cyc.v, r)
+            h = np.asarray(cyc.h)[: j + 1, :j]               # effective block
+            bb = np.asarray(cyc.b)[:, :j]
+            dnorm_np = np.maximum(np.asarray(dnorm), 1e-300)
+            ut = u_dev / dnorm                               # device Ũ_k
+
+            # host pencil at the EFFECTIVE width j (padded columns would
+            # feed spurious θ≈0 null directions to the harmonic-Ritz eig)
+            g = np.zeros((k + j + 1, k + j))
+            g[:k, :k] = np.diag(1.0 / dnorm_np)
+            g[:k, k:] = bb
+            g[k:, k:] = h
+            rhs = np.concatenate([np.asarray(ctr),
+                                  np.asarray(vr)[: j + 1]])
+            y, *_ = np.linalg.lstsq(g, rhs, rcond=None)
+            y_m = np.zeros(mi)
+            y_m[:j] = y[k:]
+
+            z, r, rn = _deflated_update(op, b, z, ut, cyc.v,
+                                        jnp.asarray(y[:k]),
+                                        jnp.asarray(y_m))
+            rnorm = float(rn)
+            stats.iterations += j
+            stats.matvecs += j + 1
+            stats.cycles += 1
+
+            # next recycle space from the harmonic Ritz pencil — either
+            # every cycle (paper-faithful) or deferred to the last cycle
+            last_cycle = (j, g, ut, cyc, c_dev)
+            if cfg.ritz_refresh == "cycle":
+                refreshed = self._refresh_space(last_cycle, k, mi)
+                if refreshed is not None:
+                    c_dev, u_dev = refreshed
+            if bool(cyc.breakdown) and rnorm > tol_abs:
+                break
+
+        if cfg.ritz_refresh == "final" and last_cycle is not None:
+            refreshed = self._refresh_space(last_cycle, k, cfg.m - k)
+            if refreshed is not None:
+                _, u_dev = refreshed
+
+        x = np.asarray(op.from_z(z))
+        stats.rel_residual = rnorm / bnorm
+        stats.wall_time_s = time.perf_counter() - t0
+        # carry Ỹ_k = U_k to the next system (Alg. 2 line 34)
+        if u_dev is not None:
+            self.u_carry = np.asarray(u_dev)
+        self.systems_solved += 1
+        return x, stats
+
+
+def solve_gcrodr(problem_op, b_field, cfg: KrylovConfig, precond=None,
+                 solver: GCRODRSolver | None = None, use_kernel: bool = False):
+    """Field-form convenience wrapper; pass a shared `solver` to recycle."""
+    solver = solver or GCRODRSolver(cfg, use_kernel=use_kernel)
+    base = as_operator(problem_op, use_kernel=use_kernel)
+    op = PreconditionedOp(base, precond)
+    x, stats = solver.solve(op, jnp.asarray(b_field).reshape(-1))
+    return x.reshape(b_field.shape), stats, solver

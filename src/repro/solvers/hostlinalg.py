@@ -1,0 +1,75 @@
+"""Small host-side dense linear algebra between Arnoldi cycles (m ≲ 200:
+microseconds on host, no TPU-side nonsymmetric eig exists — DESIGN §4.3)."""
+from __future__ import annotations
+
+import numpy as np
+import scipy.linalg
+
+
+def hessenberg_lstsq(h: np.ndarray, beta: float) -> np.ndarray:
+    """argmin_y ‖β e₁ − H y‖ for the (j+1, j) Hessenberg block."""
+    g = np.zeros(h.shape[0])
+    g[0] = beta
+    y, *_ = np.linalg.lstsq(h, g, rcond=None)
+    return y
+
+
+def real_spanning_basis(evals: np.ndarray, evecs: np.ndarray, k: int) -> np.ndarray:
+    """k-column real orthonormal basis spanning the invariant subspace of the
+    eigenvectors with SMALLEST |λ| (harmonic Ritz selection, Alg. 2 l.14/29).
+
+    Complex conjugate pairs contribute their real/imag parts; rank-revealing
+    pivoted QR picks k independent directions. Returns (n, k_eff), k_eff ≤ k.
+    """
+    finite = np.isfinite(evals)
+    evals = np.where(finite, evals, np.inf)
+    order = np.argsort(np.abs(evals))
+    cand = []
+    for idx in order[: 2 * k + 2]:
+        if not np.isfinite(evals[idx]):
+            continue
+        v = evecs[:, idx]
+        cand.append(np.real(v))
+        if abs(np.imag(evals[idx])) > 1e-12 * max(1.0, abs(evals[idx])):
+            cand.append(np.imag(v))
+        if len(cand) >= 2 * k:
+            break
+    if not cand:
+        return np.zeros((evecs.shape[0], 0))
+    m = np.stack(cand, axis=1)
+    q, r, _ = scipy.linalg.qr(m, mode="economic", pivoting=True)
+    diag = np.abs(np.diag(r))
+    rank = int(np.sum(diag > 1e-12 * max(diag[0], 1e-300)))
+    return q[:, : min(k, rank)]
+
+
+def harmonic_ritz_first_cycle(h: np.ndarray, j: int, k: int) -> np.ndarray:
+    """Harmonic Ritz vectors from a fresh GMRES cycle (Alg. 2 line 14):
+    eig of (H_m + h²_{m+1,m} H_m⁻ᴴ e_m e_mᴴ). Returns P (j, k_eff)."""
+    hm = h[:j, :j]
+    h2 = h[j, j - 1] ** 2
+    em = np.zeros((j, 1))
+    em[-1, 0] = 1.0
+    try:
+        corr = h2 * np.linalg.solve(hm.T, em)  # H⁻ᵀ e_m (real arithmetic)
+    except np.linalg.LinAlgError:
+        return np.zeros((j, 0))
+    evals, evecs = np.linalg.eig(hm + corr @ em.T)
+    return real_spanning_basis(evals, evecs, k)
+
+
+def harmonic_ritz_deflated(g: np.ndarray, whv: np.ndarray, k: int) -> np.ndarray:
+    """Harmonic Ritz from a deflated cycle (Alg. 2 line 29):
+    Ĝᴴ Ĝ z = θ Ĝᴴ Ŵᴴ V̂ z. Returns P (k+j, k_eff)."""
+    a1 = g.T @ g
+    a2 = g.T @ whv
+    try:
+        evals, evecs = scipy.linalg.eig(a1, a2)
+    except (scipy.linalg.LinAlgError, ValueError):
+        return np.zeros((g.shape[1], 0))
+    return real_spanning_basis(evals, evecs, k)
+
+
+def right_tri_solve(u: np.ndarray, r: np.ndarray) -> np.ndarray:
+    """U R⁻¹ for upper-triangular R (Alg. 2: U_k = Ỹ_k R⁻¹)."""
+    return scipy.linalg.solve_triangular(r.T, u.T, lower=True).T

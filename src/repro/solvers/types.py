@@ -1,0 +1,98 @@
+"""Shared solver types and stats (the paper's two metrics: wall time and
+iteration count, tracked per system and per sequence)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SolveStats:
+    iterations: int = 0       # Krylov (Arnoldi) steps — the paper's "iter"
+    matvecs: int = 0          # total operator applications (incl. recycle QR)
+    cycles: int = 0           # restart cycles
+    converged: bool = False
+    rel_residual: float = np.inf
+    wall_time_s: float = 0.0
+    breakdown: bool = False
+
+
+@dataclasses.dataclass
+class SequenceStats:
+    """Aggregates over a sorted sequence of systems (one dataset)."""
+
+    per_system: List[SolveStats] = dataclasses.field(default_factory=list)
+
+    def append(self, s: SolveStats):
+        self.per_system.append(s)
+
+    @property
+    def num(self) -> int:
+        return len(self.per_system)
+
+    @property
+    def total_iterations(self) -> int:
+        return int(sum(s.iterations for s in self.per_system))
+
+    @property
+    def mean_iterations(self) -> float:
+        return self.total_iterations / max(1, self.num)
+
+    @property
+    def total_time_s(self) -> float:
+        return float(sum(s.wall_time_s for s in self.per_system))
+
+    @property
+    def mean_time_s(self) -> float:
+        return self.total_time_s / max(1, self.num)
+
+    @property
+    def num_converged(self) -> int:
+        return int(sum(s.converged for s in self.per_system))
+
+    @property
+    def num_hit_maxiter(self) -> int:
+        return self.num - self.num_converged
+
+    def summary(self) -> dict:
+        return {
+            "num": self.num,
+            "mean_iterations": self.mean_iterations,
+            "mean_time_s": self.mean_time_s,
+            "total_time_s": self.total_time_s,
+            "converged": self.num_converged,
+            "hit_maxiter": self.num_hit_maxiter,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class KrylovConfig:
+    """Shared GMRES / GCRO-DR configuration.
+
+    m        : max Krylov subspace per cycle (GMRES restart length; GCRO-DR
+               uses k recycled + (m-k) new directions — same peak memory)
+    k        : recycled-subspace dimension (GCRO-DR only; k=0 ≡ GMRES)
+    tol      : relative residual tolerance (PETSc rtol semantics)
+    maxiter  : cap on total Krylov iterations per system
+    orthog   : "cgs2" (TPU-native fused two-pass classical GS, DESIGN §4.4)
+               | "mgs" (paper-faithful modified GS)
+    ritz_refresh : "cycle" — recompute the harmonic-Ritz recycle space every
+               deflated cycle (paper-faithful GCRO-DR, Alg. 2 l.29-33);
+               "final" — only once per system, from its last cycle (beyond-
+               paper: drops the per-cycle O(m³) host eig + 2 device round
+               trips; EXPERIMENTS.md §Perf iter 4)
+    """
+
+    m: int = 40
+    k: int = 15
+    tol: float = 1e-8
+    maxiter: int = 10_000
+    orthog: str = "cgs2"
+    ritz_refresh: str = "cycle"
+
+    def __post_init__(self):
+        assert 0 <= self.k < self.m, "need 0 <= k < m"
+        assert self.orthog in ("cgs2", "mgs")
+        assert self.ritz_refresh in ("cycle", "final")

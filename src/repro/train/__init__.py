@@ -1,0 +1,1 @@
+"""Training substrate: optimizers, fault-tolerant loop, data pipeline."""

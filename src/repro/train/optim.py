@@ -1,0 +1,119 @@
+"""Optimizers (optax-free: the framework owns its substrate per the scope
+rules): AdamW with decoupled weight decay, global-norm clipping, warmup +
+cosine schedules, gradient accumulation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * (step + 1) / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw(lr: float | Callable = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        gf = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    state["mu"], gf)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    state["nu"], gf)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) +
+                         weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, params, mu, nu)
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd_fallback(lr: float = 1e-3) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        updates = jax.tree_util.tree_map(
+            lambda g, p: (-lr * g.astype(jnp.float32)).astype(p.dtype),
+            grads, params)
+        return updates, {"step": state["step"] + 1}
+
+    return Optimizer(init=init, update=update)
+
+
+@dataclasses.dataclass
+class GradAccumulator:
+    """Microbatch gradient accumulation with a straggler-tolerance knob:
+    `threshold` < 1.0 averages over however many microbatches contributed
+    (the barrier-free drop-slowest-k posture, DESIGN §5)."""
+
+    num_micro: int
+    threshold: float = 1.0
+
+    def run(self, grad_fn, params, microbatches, arrived_mask=None):
+        total = None
+        count = 0.0
+        for i, mb in enumerate(microbatches):
+            if arrived_mask is not None and not arrived_mask[i]:
+                continue  # straggler dropped
+            g = grad_fn(params, mb)
+            total = g if total is None else jax.tree_util.tree_map(
+                jnp.add, total, g)
+            count += 1.0
+        need = max(int(self.num_micro * self.threshold), 1)
+        if count < need:
+            raise RuntimeError(
+                f"only {int(count)}/{self.num_micro} microbatches arrived "
+                f"(< threshold {need})")
+        return jax.tree_util.tree_map(lambda g: g / count, total), int(count)

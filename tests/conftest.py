@@ -1,0 +1,23 @@
+"""Shared fixtures. NOTE: do NOT set XLA device-count flags here — smoke
+tests and benches must see 1 CPU device; only launch/dryrun.py forces the
+512-device placeholder fleet (in a subprocess for the dry-run tests)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

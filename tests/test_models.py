@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one train step +
+prefill/decode consistency, shape and finiteness checks — all 10 assigned
+archs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config, get_smoke_config, list_archs
+from repro.models import api
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, t=16):
+    toks = jnp.arange(b * t).reshape(b, t) % min(cfg.vocab, 97) + 1
+    batch = {"tokens": toks.astype(jnp.int32),
+             "labels": toks.astype(jnp.int32)}
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        batch["positions"] = jnp.broadcast_to(pos[None], (3, b, t)).astype(jnp.int32)
+    if cfg.is_encdec:
+        batch["enc_embeds"] = 0.01 * jax.random.normal(
+            jax.random.PRNGKey(5), (b, cfg.enc_positions, cfg.d_model),
+            jnp.float32)
+    return batch
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    for a in ["qwen2.5-32b", "tinyllama-1.1b", "minicpm3-4b", "qwen2.5-3b",
+              "whisper-base", "qwen2-vl-2b", "xlstm-125m", "kimi-k2-1t-a32b",
+              "mixtral-8x7b", "recurrentgemma-2b"]:
+        assert a in ARCHS
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    train_step = api.make_train_step(cfg)
+    opt_state = {"step": jnp.zeros((), jnp.int32)}
+    from repro.train.optim import sgd_fallback
+
+    opt = sgd_fallback(1e-3)
+    state = (params, opt.init(params), jnp.zeros((), jnp.int32))
+    new_state, metrics = jax.jit(train_step)(state, batch)
+    assert jnp.isfinite(metrics["loss"]), arch
+    # params actually changed
+    p0 = jax.tree_util.tree_leaves(params)[1]
+    p1 = jax.tree_util.tree_leaves(new_state[0])[1]
+    assert not np.allclose(np.asarray(p0, np.float32),
+                           np.asarray(p1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    """Greedy decode after prefill == argmax of the full forward logits at
+    the same position (KV-cache correctness). MoE archs run the dense
+    (dropless) expert path — capacity-bucket drops differ between a 1-token
+    decode and a full prefill by construction; dispatch-vs-dense equivalence
+    is covered separately below."""
+    import dataclasses as dc
+
+    cfg = get_smoke_config(arch)
+    if cfg.is_moe:
+        cfg = dc.replace(cfg, moe_impl="dense")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    b, t = 2, 12
+    batch = _batch(cfg, b, t)
+    prefill = api.make_prefill_step(cfg)
+    out = prefill(params, batch)
+    logits_p, cache = out[0], out[1]
+    assert logits_p.shape[0] == b and logits_p.shape[-1] == cfg.vocab
+    assert bool(jnp.isfinite(logits_p).all()), arch
+
+    # full forward over t+0 tokens should match prefill's last-token logits
+    decode = api.make_decode_step(cfg)
+    db = {"token": batch["tokens"][:, -1:], "pos": jnp.asarray(t - 1, jnp.int32)}
+    if cfg.mrope_sections is not None:
+        db["positions"] = jnp.full((3, b, 1), t - 1, jnp.int32)
+    if cfg.is_encdec:
+        db["enc_out"] = out[2] if len(out) > 2 else jnp.zeros(
+            (b, cfg.enc_positions, cfg.d_model), jnp.dtype(cfg.dtype))
+    # decode with a cache prefilled over t-1 tokens must reproduce the
+    # prefill logits for the t-th token (cache_len=t leaves one decode slot)
+    short = {k: (v[:, : t - 1] if k in ("tokens", "labels") else
+                 (v[:, :, : t - 1] if k == "positions" else v))
+             for k, v in batch.items()}
+    prefill_short = api.make_prefill_step(cfg, cache_len=t)
+    out_s = prefill_short(params, short)
+    cache_s = out_s[1]
+    logits_d, _ = decode(params, db, cache_s)
+    ref = np.asarray(logits_p[:, -1], np.float32)
+    got = np.asarray(logits_d[:, -1] if logits_d.ndim == 3 else logits_d,
+                     np.float32)
+    np.testing.assert_allclose(got, ref, rtol=0.08, atol=0.08)
+    assert (np.argmax(got, -1) == np.argmax(ref, -1)).mean() >= 0.5
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "kimi-k2-1t-a32b",
+                                  "mixtral-8x7b"])
+def test_full_config_param_counts(arch):
+    """Analytic parameter counts of the FULL configs are in the advertised
+    ballpark (never allocated — pure arithmetic)."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expect = {"qwen2.5-32b": 32e9, "kimi-k2-1t-a32b": 1.0e12,
+              "mixtral-8x7b": 46e9}[arch]
+    assert 0.55 * expect <= n <= 1.6 * expect, (arch, n)
+
+
+def test_moe_active_params_lower_than_total():
+    cfg = get_config("kimi-k2-1t-a32b")
+    assert cfg.active_param_count() < 0.1 * cfg.param_count()
+
+
+def test_skip_shapes_declared_for_full_attention():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        families_subquadratic = {"ssm", "hybrid"}
+        if cfg.family in families_subquadratic or cfg.window is not None:
+            assert "long_500k" not in cfg.skip_shapes, arch
+        elif cfg.family in ("dense", "moe", "vlm", "encdec"):
+            assert "long_500k" in cfg.skip_shapes, (
+                f"{arch}: full attention must skip long_500k")
+
+
+def test_moe_dispatch_routes_topk():
+    """Router dispatch: each token hits exactly top_k experts (capacity
+    permitting) and aux loss is finite."""
+    from repro.models import moe
+
+    cfg = get_smoke_config("mixtral-8x7b")
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, aux = moe.moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert jnp.isfinite(y).all() and jnp.isfinite(aux)
+
+
+def test_moe_dispatch_matches_dense_with_ample_capacity():
+    """With capacity ≥ worst-case load, the production dispatch path is
+    numerically identical to the dense oracle."""
+    import dataclasses as dc
+
+    from repro.models import moe
+
+    base = get_smoke_config("mixtral-8x7b")
+    p = moe.moe_init(jax.random.PRNGKey(0), base, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, base.d_model),
+                          jnp.float32)
+    y_dense, _ = moe.moe_apply(p, dc.replace(base, moe_impl="dense"), x)
+    ample = dc.replace(base, moe_impl="dispatch",
+                       capacity_factor=float(base.n_experts))
+    y_disp, _ = moe.moe_apply(p, ample, x)
+    np.testing.assert_allclose(np.asarray(y_disp), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_xlstm_decode_streaming_matches_parallel():
+    """Recurrent state correctness: feeding tokens one-by-one through the
+    decode path must match the parallel (train-mode) forward."""
+    cfg = get_smoke_config("xlstm-125m")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    b, t = 1, 8
+    batch = _batch(cfg, b, t)
+    prefill = api.make_prefill_step(cfg)
+    logits_all, _ = prefill(params, batch)
+
+    decode = api.make_decode_step(cfg)
+    from repro.models import transformer
+
+    cache = transformer.init_cache(cfg, b, t)
+    outs = []
+    for i in range(t):
+        db = {"token": batch["tokens"][:, i: i + 1],
+              "pos": jnp.asarray(i, jnp.int32)}
+        lg, cache = decode(params, db, cache)
+        outs.append(np.asarray(lg[:, -1], np.float32))
+    ref = np.asarray(logits_all[:, -1], np.float32)
+    np.testing.assert_allclose(outs[-1], ref, rtol=0.05, atol=0.05)

@@ -1,0 +1,188 @@
+"""Solver correctness: GMRES / GCRO-DR against dense + scipy oracles,
+PETSc-semantics tolerance handling, and the paper's core claims in
+miniature (recycling cuts iterations on correlated sequences)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse.linalg as spla
+
+from repro.core.metrics import delta_subspace
+from repro.pde.registry import get_family
+from repro.solvers.gcrodr import GCRODRSolver, solve_gcrodr
+from repro.solvers.gmres import gmres_solve, solve_gmres
+from repro.solvers.operator import PreconditionedOp, as_operator
+from repro.solvers.precond import make_preconditioner
+from repro.solvers.types import KrylovConfig
+
+CFG = KrylovConfig(m=40, k=12, tol=1e-8, maxiter=10_000)
+
+
+def _one_problem(family="poisson", nx=16, seed=0):
+    fam = get_family(family, nx=nx, ny=nx)
+    p = fam.sample(jax.random.PRNGKey(seed))
+    return fam, p
+
+
+def _flat(p):
+    return np.asarray(p.b, dtype=np.float64).reshape(-1)
+
+
+@pytest.mark.parametrize("family", ["poisson", "darcy", "helmholtz",
+                                    "thermal", "convdiff"])
+def test_gmres_matches_dense_solve(family):
+    fam, p = _one_problem(family)
+    a = p.op.to_dense()
+    b = _flat(p)
+    x_ref = np.linalg.solve(a, b)
+    x, stats = solve_gmres(p.op, p.b, CFG)
+    assert stats.converged, (family, stats)
+    np.testing.assert_allclose(np.asarray(x).reshape(-1), x_ref,
+                               rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("family", ["poisson", "helmholtz"])
+def test_gcrodr_matches_dense_solve(family):
+    fam, p = _one_problem(family)
+    a = p.op.to_dense()
+    b = _flat(p)
+    x_ref = np.linalg.solve(a, b)
+    x, stats, _ = solve_gcrodr(p.op, p.b, CFG)
+    assert stats.converged
+    np.testing.assert_allclose(np.asarray(x).reshape(-1), x_ref,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_tolerance_is_relative_residual():
+    """PETSc rtol semantics: ‖b − Ax‖ ≤ tol·‖b‖."""
+    _, p = _one_problem("darcy")
+    a = p.op.to_dense()
+    b = _flat(p)
+    for tol in (1e-4, 1e-8):
+        cfg = dataclasses.replace(CFG, tol=tol)
+        x, stats = solve_gmres(p.op, p.b, cfg)
+        res = np.linalg.norm(b - a @ np.asarray(x).reshape(-1))
+        assert res <= tol * np.linalg.norm(b) * 1.01
+        assert stats.rel_residual <= tol * 1.01
+
+
+def test_gcrodr_k0_equals_gmres():
+    """GMRES is exactly the k=0 special case (paper §4.2)."""
+    _, p = _one_problem("poisson")
+    cfg = dataclasses.replace(CFG, k=0)
+    x_g, st_g = solve_gmres(p.op, p.b, cfg)
+    x_r, st_r, _ = solve_gcrodr(p.op, p.b, cfg)
+    assert st_g.iterations == st_r.iterations
+    np.testing.assert_allclose(np.asarray(x_g), np.asarray(x_r), rtol=1e-12)
+
+
+def test_skr_beats_gmres_on_sorted_sequence():
+    """The paper's central claim, in miniature: the full SKR pipeline
+    (sort + recycle) takes materially fewer iterations than independent
+    GMRES solves over the same sampled dataset."""
+    from repro.core.skr import (SKRConfig, generate_dataset,
+                                generate_dataset_baseline)
+
+    fam = get_family("poisson", nx=20, ny=20)
+    kc = dataclasses.replace(CFG, m=30, k=10)
+    key = jax.random.PRNGKey(1)
+    skr = generate_dataset(fam, key, 10,
+                           SKRConfig(krylov=kc, precond="jacobi"))
+    gm = generate_dataset_baseline(fam, key, 10, kc, precond="jacobi")
+    assert all(s.converged for s in skr.stats.per_system)
+    # 25%+ iteration reduction at this toy scale (n=400); the ratio GROWS
+    # with n and tolerance — 5× at the paper's n=1e4 (EXPERIMENTS.md
+    # headline; benchmarks/table1_speedup.py sweeps the full grid).
+    assert skr.stats.total_iterations < 0.75 * gm.stats.total_iterations, (
+        skr.stats.total_iterations, gm.stats.total_iterations)
+    # identical datasets modulo solver tolerance (paper App. E.3)
+    np.testing.assert_allclose(skr.solutions, gm.solutions, rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_recycle_space_carries_and_is_orthonormalized():
+    _, p = _one_problem("poisson")
+    solver = GCRODRSolver(CFG)
+    op = PreconditionedOp(as_operator(p.op), None)
+    solver.solve(op, jnp.asarray(p.b).reshape(-1))
+    assert solver.u_carry is not None
+    assert solver.u_carry.shape[1] <= CFG.k
+    # after re-orthogonalization against A, C = A·U·R⁻¹ has orthonormal cols
+    a = p.op.to_dense()
+    au = a @ solver.u_carry
+    q, _ = np.linalg.qr(au)
+    np.testing.assert_allclose(q.T @ q, np.eye(q.shape[1]), atol=1e-8)
+
+
+@pytest.mark.parametrize("name", ["jacobi", "bjacobi", "rbsor", "cheby",
+                                  "neumann", "ilu_host"])
+def test_preconditioners_accelerate_or_match(name):
+    _, p = _one_problem("darcy", nx=20)
+    cfg = dataclasses.replace(CFG, tol=1e-8)
+    _, st_plain = solve_gmres(p.op, p.b, cfg)
+    pre = make_preconditioner(name, p.op)
+    base = as_operator(p.op)
+    x, st_pre = gmres_solve(PreconditionedOp(base, pre),
+                            jnp.asarray(p.b).reshape(-1), cfg)
+    assert st_pre.converged
+    # right preconditioning must preserve the TRUE residual definition
+    a = p.op.to_dense()
+    b = _flat(p)
+    res = np.linalg.norm(b - a @ np.asarray(x).reshape(-1))
+    assert res <= cfg.tol * np.linalg.norm(b) * 1.01
+    assert st_pre.iterations <= st_plain.iterations * 1.5
+
+
+def test_mgs_and_cgs2_agree():
+    _, p = _one_problem("convdiff")
+    x1, st1 = solve_gmres(p.op, p.b, dataclasses.replace(CFG, orthog="mgs"))
+    x2, st2 = solve_gmres(p.op, p.b, dataclasses.replace(CFG, orthog="cgs2"))
+    assert st1.converged and st2.converged
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), rtol=1e-6,
+                               atol=1e-9)
+
+
+def test_recycle_space_captures_small_eigendirections():
+    """After one solve the recycled U_k captures most of the smallest-
+    magnitude invariant subspace (principal cosines ≈ 1), and warm-restarting
+    the SAME system costs materially fewer iterations (Theorem 1 in action).
+    δ(Q,C) itself is a max-angle metric — a single uncaptured direction
+    saturates it, so we assert on the cosine spectrum instead."""
+    from repro.core.metrics import (orthonormalize,
+                                    smallest_invariant_subspace)
+
+    _, p = _one_problem("helmholtz")
+    solver = GCRODRSolver(CFG)
+    op = PreconditionedOp(as_operator(p.op), None)
+    b = jnp.asarray(p.b).reshape(-1)
+    _, st_cold = solver.solve(op, b)
+    a = p.op.to_dense()
+    q = smallest_invariant_subspace(a, k=CFG.k)
+    u = orthonormalize(solver.u_carry)
+    cos = np.linalg.svd(q.T @ u, compute_uv=False)
+    assert (cos > 0.9).sum() >= CFG.k // 2, cos
+    _, st_warm = solver.solve(op, b)
+    assert st_warm.iterations < 0.8 * st_cold.iterations
+    # and δ is a valid metric value
+    d = delta_subspace(q, solver.u_carry)
+    assert 0.0 <= d <= 1.0 + 1e-9
+
+
+def test_gmres_matches_scipy_iteration_scale():
+    """Sanity vs scipy.sparse.linalg.gmres on the same operator (allowing
+    implementation variance but same order of magnitude)."""
+    _, p = _one_problem("poisson")
+    a = p.op.to_scipy() if hasattr(p.op, "to_scipy") else p.op.to_dense()
+    b = _flat(p)
+    counter = {"n": 0}
+
+    def cb(_):
+        counter["n"] += 1
+
+    spla.gmres(a, b, rtol=1e-9, restart=30, maxiter=100, callback=cb,
+               callback_type="pr_norm")
+    _, st = solve_gmres(p.op, p.b, CFG)
+    assert st.converged
+    assert st.iterations <= max(3 * counter["n"], 60)
