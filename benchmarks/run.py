@@ -4,7 +4,8 @@
   table2_sort_ablation Table 2  (sort ablation + δ metric)
   convergence_fig11    Fig 11/12 (accuracy-vs-cost ladders + slope fits)
   stability_fig13      Fig 13   (max-iteration saturation fractions)
-  parallel_e22         Table 31 (chunk-parallel SKR)
+  parallel_e22         Table 31 (chunk-parallel SKR, both engines)
+  batched_solver       lockstep batched vs per-system chunked datagen
   table33_no_training  Table 33 (FNO on SKR vs GMRES data)
   roofline_report      §Roofline (aggregates dry-run artifacts)
 
@@ -15,8 +16,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (convergence_fig11, parallel_e22, roofline_report,
-                        stability_fig13, table1_speedup,
+from benchmarks import (batched_solver, convergence_fig11, parallel_e22,
+                        roofline_report, stability_fig13, table1_speedup,
                         table2_sort_ablation, table33_no_training)
 
 BENCHES = [
@@ -25,6 +26,7 @@ BENCHES = [
     ("convergence_fig11", convergence_fig11.run),
     ("stability_fig13", stability_fig13.run),
     ("parallel_e22", parallel_e22.run),
+    ("batched_solver", batched_solver.run),
     ("table33_no_training", table33_no_training.run),
     ("roofline_report", roofline_report.run),
 ]

@@ -1,0 +1,38 @@
+"""Version-compatibility shims over moving JAX APIs.
+
+The codebase targets the newest stable JAX but must run on whatever the
+container bakes in. Keep every cross-version branch HERE so call sites stay
+clean (`with compat.set_mesh(mesh):`) and a JAX upgrade is a one-file audit.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def set_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh for `jax.jit`.
+
+    Resolution order across JAX versions:
+      * `jax.set_mesh`          (newest API; context manager form)
+      * `jax.sharding.use_mesh` (transitional name)
+      * `with mesh:`            (classic `Mesh.__enter__` resource env — the
+                                 only spelling on jax<=0.4.x)
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager
+
+
+def cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` as a flat dict.
+
+    Older JAX returns a one-element list of per-computation dicts; newer JAX
+    returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}

@@ -31,12 +31,24 @@ def stencil5_matvec(coeffs: jax.Array, x: jax.Array, *, use_kernel: bool = False
 
 def dia_spmv(dia, x: jax.Array, *, use_kernel: bool = False,
              interpret: bool = True) -> jax.Array:
-    """DIA sparse matvec on flat (…, n) vectors."""
-    if use_kernel:
-        from repro.kernels.dia_spmv import dia_spmv_pallas
+    """DIA sparse matvec on flat (…, n) vectors.
 
-        fn = functools.partial(dia_spmv_pallas, dia.offsets, interpret=interpret)
+    A matched batch (data (B, ndiag, n) against x (B, n)) routes through the
+    single-launch batched kernel — one explicit dispatch for all B operators.
+    NOTE: this branch fires only for direct matched-batch calls at this
+    boundary; inside `jax.vmap` (the lockstep solver's cycles) tracer shapes
+    are per-chain, and it is Pallas's own vmap batching rule that lifts the
+    single kernel to an equivalent batched grid.
+    """
+    if use_kernel:
+        from repro.kernels.dia_spmv import (dia_spmv_batched_pallas,
+                                            dia_spmv_pallas)
+
         data = dia.data
+        if data.ndim == 3 and x.ndim == 2 and data.shape[0] == x.shape[0]:
+            return dia_spmv_batched_pallas(dia.offsets, data, x,
+                                           interpret=interpret)
+        fn = functools.partial(dia_spmv_pallas, dia.offsets, interpret=interpret)
         if x.ndim > 1:
             for _ in range(x.ndim - 1):
                 fn = jax.vmap(fn)

@@ -50,9 +50,14 @@ class DIA:
     def matvec(self, x: jax.Array) -> jax.Array:
         return dia_matvec(self, x)
 
+    def take(self, idx) -> "DIA":
+        """Select system(s) along the leading batch axis of `data` — the
+        batched-engine companion of `Stencil5.take`."""
+        return DIA(offsets=self.offsets, data=self.data[idx])
+
     def diagonal(self) -> jax.Array:
         d = self.offsets.index(0)
-        return self.data[d]
+        return self.data[..., d, :]
 
     def to_dense(self) -> np.ndarray:
         """Dense numpy copy (test oracle only)."""
@@ -154,6 +159,13 @@ class Stencil5:
 
     def matvec(self, x: jax.Array) -> jax.Array:
         return stencil5_matvec(self.coeffs, x)
+
+    def take(self, idx) -> "Stencil5":
+        """Batched indexing: coeffs may carry leading batch dims
+        (B, 5, nx, ny); `take` selects chains/systems along the first one.
+        `idx` may be an int or an index array (gathering a (B, 5, nx, ny)
+        stacked operator for the lockstep solver from a dataset batch)."""
+        return Stencil5(coeffs=self.coeffs[idx])
 
     def diagonal(self) -> jax.Array:
         return self.coeffs[..., self.C, :, :].reshape(*self.coeffs.shape[:-3], -1)

@@ -1,13 +1,16 @@
-"""Krylov solver layer: GMRES (baseline) + GCRO-DR (recycling) +
-TPU-adapted preconditioners."""
+"""Krylov solver layer: GMRES (baseline) + GCRO-DR (recycling, sequential
+and lockstep-batched) + TPU-adapted preconditioners."""
+from repro.solvers.batched import BatchedGCRODRSolver
 from repro.solvers.gcrodr import GCRODRSolver, solve_gcrodr
 from repro.solvers.gmres import gmres_solve, solve_gmres
 from repro.solvers.operator import (DIAOp, PreconditionedOp, StencilOp,
                                     apply_op, as_operator)
-from repro.solvers.precond import PRECONDITIONERS, make_preconditioner
+from repro.solvers.precond import (PRECONDITIONERS, make_preconditioner,
+                                   make_preconditioner_batched)
 from repro.solvers.types import KrylovConfig, SequenceStats, SolveStats
 
 __all__ = [
+    "BatchedGCRODRSolver",
     "GCRODRSolver",
     "solve_gcrodr",
     "gmres_solve",
@@ -19,6 +22,7 @@ __all__ = [
     "as_operator",
     "PRECONDITIONERS",
     "make_preconditioner",
+    "make_preconditioner_batched",
     "KrylovConfig",
     "SequenceStats",
     "SolveStats",

@@ -69,9 +69,8 @@ def _mgs(v, w, j, m):
     return jax.lax.fori_loop(0, m + 1, body, (w, h0))
 
 
-@partial(jax.jit, static_argnames=("m", "orthog", "use_kernel"))
-def arnoldi_cycle(op, c_rows, r0, tol_abs, *, m: int, orthog: str = "cgs2",
-                  use_kernel: bool = False) -> CycleResult:
+def _arnoldi_cycle_impl(op, c_rows, r0, tol_abs, *, m: int, orthog: str = "cgs2",
+                        use_kernel: bool = False) -> CycleResult:
     """Run ≤ m deflated Arnoldi steps starting from r0.
 
     op      : operator pytree (PreconditionedOp) — applied via apply_op
@@ -125,3 +124,27 @@ def arnoldi_cycle(op, c_rows, r0, tol_abs, *, m: int, orthog: str = "cgs2",
     init = (v, h, b, cs, sn, g, jnp.array(0), beta, jnp.array(False))
     v, h, b, cs, sn, g, j, res, brk = jax.lax.while_loop(cond, body, init)
     return CycleResult(v=v, h=h, b=b, j_used=j, res_est=res, breakdown=brk)
+
+
+arnoldi_cycle = partial(jax.jit, static_argnames=("m", "orthog", "use_kernel"))(
+    _arnoldi_cycle_impl)
+
+
+@partial(jax.jit, static_argnames=("m", "orthog", "use_kernel"))
+def arnoldi_cycle_batched(ops, c_rows, r0, tol_abs, *, m: int,
+                          orthog: str = "cgs2",
+                          use_kernel: bool = False) -> CycleResult:
+    """B independent (deflated) Arnoldi cycles as ONE lockstep dispatch.
+
+    ops     : operator pytree with a leading batch axis on every leaf
+    c_rows  : (B, k, n); r0 : (B, n); tol_abs : (B,) per-chain absolute target
+    Returns a CycleResult whose fields carry a leading B axis.
+
+    Early-exit semantics: the vmapped `lax.while_loop` runs until EVERY chain
+    has met its own stop condition; chains that finish early are frozen by the
+    batching rule (their carry is masked), so per-chain `j_used`/`res_est` are
+    exact. A chain entering with ‖r0‖ ≤ tol_abs takes 0 steps — passing
+    tol_abs = +inf freezes a chain entirely (the lockstep "mask out" knob).
+    """
+    fn = partial(_arnoldi_cycle_impl, m=m, orthog=orthog, use_kernel=use_kernel)
+    return jax.vmap(fn)(ops, c_rows, r0, tol_abs)

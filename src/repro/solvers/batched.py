@@ -1,0 +1,357 @@
+"""Batched multi-chain GCRO-DR — the lockstep engine behind chunk-parallel
+SKR datagen (paper App. E.2.2).
+
+The sequential `GCRODRSolver` advances ONE recycling chain and pays the full
+host↔device round-trip + dispatch latency per tiny cycle. This engine
+advances B independent chains (one per sorted chunk) SIMULTANEOUSLY: every
+fused device step of the sequential solver (Arnoldi cycle, warm start,
+padded solution updates, recycle-space assembly) is vmapped over a leading
+chain axis, so a lockstep cycle for all B chains is the same ~4 dispatches a
+single chain used to cost. Each chain keeps its OWN recycle carry U_k — the
+chains never exchange Krylov information, exactly the App. E.2.2 task
+decomposition — while the O(m³) eigen/LS cleanup runs on host via the
+stacked drivers in `hostlinalg.py`.
+
+Lockstep semantics (who iterates when):
+
+* Per cycle, every chain runs ≤ m Arnoldi steps under ONE vmapped
+  `lax.while_loop`; a chain that hits its own tolerance mid-cycle is frozen
+  by the batching rule, so per-chain iterates match the sequential solver.
+* Whole cycles are phase-uniform: a "fresh" (establishing) cycle or a
+  "deflated" cycle runs for ALL chains at once. Converged / stalled /
+  maxiter chains are masked by passing tol_abs = +inf (their cycle takes 0
+  steps and the padded y = 0 update is a no-op on z and r).
+* Mixed phases resolve conservatively: while ANY active chain still lacks a
+  recycle space, the whole batch runs fresh GMRES(m) cycles (chains that
+  already own a space simply re-establish it from their newest cycle). With
+  healthy warm starts — the steady state of a sorted sequence — every chain
+  goes straight to deflated cycles and the per-chain math is identical to
+  `GCRODRSolver.solve`, modulo vmapped-matmul float reassociation.
+* Rare rank trouble in the batched warm-start QR drops the carry for the
+  affected chains only; a failed harmonic-Ritz refresh keeps the chain's
+  previous space, as in the sequential solver.
+
+Wall-time accounting: the batch advances as one device program, so each
+returned `SolveStats.wall_time_s` is the LOCKSTEP latency of the whole
+batched solve (identical across chains) — the honest parallel-latency
+number App. E.2.2 reports (max over workers == the shared wall clock).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.solvers import gcrodr as _seq
+from repro.solvers import hostlinalg as hl
+from repro.solvers.arnoldi import arnoldi_cycle_batched
+from repro.solvers.operator import apply_op
+from repro.solvers.types import KrylovConfig, SolveStats
+
+_TINY = 1e-300
+
+# --- the sequential solver's fused device steps, vmapped over chains -------
+_warm_start_b = jax.jit(jax.vmap(_seq._warm_start))
+_fresh_update_b = jax.jit(jax.vmap(_seq._fresh_update))
+_fresh_cu_b = jax.jit(jax.vmap(_seq._fresh_cu))
+_rhs_and_dnorm_b = jax.jit(jax.vmap(_seq._rhs_and_dnorm))
+_deflated_update_b = jax.jit(jax.vmap(_seq._deflated_update))
+_whv_blocks_b = jax.jit(jax.vmap(_seq._whv_blocks))
+_next_cu_b = jax.jit(jax.vmap(_seq._next_cu))
+_apply_cols_b = jax.jit(jax.vmap(jax.vmap(apply_op, in_axes=(None, 1),
+                                          out_axes=1)))
+_from_z_b = jax.jit(jax.vmap(lambda op, z: op.from_z(z)))
+
+
+@jax.jit
+def _scaled_cols_b(u, dnorm):
+    """Ũ = U / ‖U cols‖ per chain; the clamp keeps masked chains (U = 0)
+    NaN-free — sequential chains never hit it."""
+    return u / jnp.maximum(dnorm[:, None, :], _TINY)
+
+
+@jax.jit
+def _mat_post_b(y, inv_r):
+    """Per-chain Y R⁻¹ (stacked right-multiply by the small host factor)."""
+    return jnp.einsum("bnk,bkl->bnl", y, inv_r)
+
+
+def _sel(mask_np, new, old):
+    """Per-chain select: rows of `new` where mask, else `old`."""
+    m = jnp.asarray(mask_np).reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
+
+
+class BatchedGCRODRSolver:
+    """B sequence-stateful GCRO-DR chains in lockstep. One instance per
+    chunk-decomposed sorted sequence; call `solve_batch` once per lockstep
+    "row" of systems (the t-th system of every chunk).
+
+    GMRES is still the k = 0 special case — the batch then runs lockstep
+    restarted-GMRES cycles with the same adaptive restart growth as
+    `gmres_solve` (triggered when any active chain stalls).
+    """
+
+    def __init__(self, cfg: KrylovConfig, use_kernel: bool = False):
+        if cfg.k > 0 and cfg.ritz_refresh != "cycle":
+            raise NotImplementedError(
+                "BatchedGCRODRSolver implements the paper-faithful "
+                "ritz_refresh='cycle' schedule; 'final' needs per-chain "
+                "last-cycle snapshots (use the sequential engine)")
+        self.cfg = cfg
+        self.use_kernel = use_kernel
+        self.u_carry: np.ndarray | None = None   # (B, n, k)
+        self.carry_ok: np.ndarray | None = None  # (B,) bool
+        self.systems_solved = 0
+
+    def reset(self):
+        self.u_carry = None
+        self.carry_ok = None
+        self.systems_solved = 0
+
+    # ------------------------------------------------------------------
+    def solve_batch(self, ops, b):
+        """Solve B independent systems, one per chain.
+
+        ops : PreconditionedOp pytree whose EVERY leaf carries a leading
+              B axis (batched StencilOp/DIAOp + stacked preconditioner).
+        b   : (B, n) right-hand sides. A zero row marks a padded chain
+              (shorter chunk): it converges at 0 iterations with x = 0 and
+              leaves the chain's recycle carry untouched.
+
+        Returns (x (B, n) np.ndarray, [SolveStats] * B).
+        """
+        cfg = self.cfg
+        k = cfg.k
+        t0 = time.perf_counter()
+        b = jnp.asarray(b)
+        bsz, n = b.shape
+        dt = b.dtype
+
+        z = jnp.zeros((bsz, n), dt)
+        r = b
+        bnorm = np.asarray(jnp.linalg.norm(b, axis=1))
+        rnorm = bnorm.copy()
+        tol_abs = cfg.tol * bnorm
+        zerob = bnorm == 0.0
+
+        iters = np.zeros(bsz, dtype=int)
+        matvecs = np.zeros(bsz, dtype=int)
+        cycles = np.zeros(bsz, dtype=int)
+        stalled = np.zeros(bsz, dtype=bool)
+
+        c_dev = jnp.zeros((bsz, n, k), dt)
+        u_dev = jnp.zeros((bsz, n, k), dt)
+        established = np.zeros(bsz, dtype=bool)
+
+        # ---- warm start: re-biorthogonalize carried spaces (Alg. 2 l.2-7)
+        if k > 0 and self.u_carry is not None:
+            want = self.carry_ok & ~zerob & (rnorm > tol_abs)
+            if want.any():
+                u_old = jnp.asarray(self.u_carry)
+                au = _apply_cols_b(ops, u_old)
+                matvecs += np.where(want, k, 0)
+                q, rr = jnp.linalg.qr(au)
+                rr_np = np.asarray(rr)
+                inv_rr = np.tile(np.eye(k), (bsz, 1, 1))
+                ok = want.copy()
+                for i in np.nonzero(want)[0]:
+                    diag = np.abs(np.diag(rr_np[i]))
+                    if diag.min() > 1e-12 * max(diag.max(), _TINY):
+                        inv_rr[i] = np.linalg.inv(rr_np[i])
+                    else:
+                        ok[i] = False
+                u_new = _mat_post_b(u_old, jnp.asarray(inv_rr))
+                z2, r2, rn2 = _warm_start_b(u_new, q, z, r)
+                z = _sel(ok, z2, z)
+                r = _sel(ok, r2, r)
+                rnorm = np.where(ok, np.asarray(rn2), rnorm)
+                c_dev = _sel(ok, q, c_dev)
+                u_dev = _sel(ok, u_new, u_dev)
+                established = ok
+
+        empty_c = jnp.zeros((bsz, 0, n), dt)
+        m_fresh = cfg.m  # k=0: grows adaptively, mirroring gmres_solve
+        m_cap = min(n, cfg.m_max if cfg.m_max else 8 * cfg.m)
+
+        while True:
+            active = (~zerob & ~stalled & (rnorm > tol_abs)
+                      & (iters < cfg.maxiter))
+            if not active.any():
+                break
+            eff_tol = jnp.asarray(np.where(active, tol_abs, np.inf))
+
+            if k == 0 or not established[active].all():
+                # ---- lockstep fresh GMRES(m) cycles (Alg. 2 l.9-18) ------
+                m = m_fresh
+                cyc = arnoldi_cycle_batched(ops, empty_c, r, eff_tol, m=m,
+                                            orthog=cfg.orthog,
+                                            use_kernel=self.use_kernel)
+                j = np.asarray(cyc.j_used)
+                step = j > 0
+                if not step[active].any():
+                    break  # all active chains stagnated at 0 steps
+                h_np = np.asarray(cyc.h)
+                y = hl.hessenberg_lstsq_stacked(h_np, j, rnorm)
+                rprev = rnorm
+                z, r, rn = _fresh_update_b(ops, b, z, cyc.v, jnp.asarray(y))
+                rnorm = np.asarray(rn)
+                iters += np.where(step, j, 0)
+                matvecs += np.where(step, j + 1, 0)
+                cycles += step
+
+                if k > 0:
+                    # establish / re-establish recycle spaces per chain
+                    plist = hl.harmonic_ritz_first_cycle_stacked(h_np, j, k)
+                    p_pad = np.zeros((bsz, m, k))
+                    q_pad = np.zeros((bsz, m + 1, k))
+                    inv_rr = np.tile(np.eye(k), (bsz, 1, 1))
+                    est_new = np.zeros(bsz, dtype=bool)
+                    for i in range(bsz):
+                        p = plist[i]
+                        if p is None or p.shape[1] != k:
+                            continue
+                        ji = int(j[i])
+                        qq, rr_ = np.linalg.qr(h_np[i, : ji + 1, :ji] @ p)
+                        diag = np.abs(np.diag(rr_))
+                        if diag.min() <= 1e-12 * max(diag.max(), _TINY):
+                            continue
+                        p_pad[i, :ji] = p
+                        q_pad[i, : ji + 1] = qq
+                        inv_rr[i] = np.linalg.inv(rr_)
+                        est_new[i] = True
+                    if est_new.any():
+                        c_new, yk = _fresh_cu_b(cyc.v, cyc.h,
+                                                jnp.asarray(p_pad),
+                                                jnp.asarray(q_pad))
+                        u_new = _mat_post_b(yk, jnp.asarray(inv_rr))
+                        c_dev = _sel(est_new, c_new, c_dev)
+                        u_dev = _sel(est_new, u_new, u_dev)
+                        established |= est_new
+                else:
+                    # adaptive restart growth (see gmres_solve): grow when
+                    # any chain ran a full cycle and stalled
+                    grew = (step & (j == m) & (rnorm > tol_abs)
+                            & (rnorm > 0.5 * rprev))
+                    if grew.any() and m_fresh < m_cap:
+                        m_fresh = min(2 * m_fresh, m_cap)
+                    stalled |= (np.asarray(cyc.breakdown) & step
+                                & (rnorm > tol_abs))
+                continue
+
+            # ---- lockstep deflated cycles (Alg. 2 l.19-33) ---------------
+            mi = cfg.m - k
+            cyc = arnoldi_cycle_batched(ops, jnp.swapaxes(c_dev, 1, 2), r,
+                                        eff_tol, m=mi, orthog=cfg.orthog,
+                                        use_kernel=self.use_kernel)
+            j = np.asarray(cyc.j_used)
+            step = j > 0
+            if not step[active].any():
+                break
+            ctr, vr, dnorm = _rhs_and_dnorm_b(c_dev, u_dev, cyc.v, r)
+            ctr_np = np.asarray(ctr)
+            vr_np = np.asarray(vr)
+            dnorm_np = np.maximum(np.asarray(dnorm), _TINY)
+            h_np = np.asarray(cyc.h)
+            bb_np = np.asarray(cyc.b)
+
+            g_list: list = [None] * bsz
+            rhs_list: list = [None] * bsz
+            for i in np.nonzero(step)[0]:
+                ji = int(j[i])
+                g = np.zeros((k + ji + 1, k + ji))
+                g[:k, :k] = np.diag(1.0 / dnorm_np[i])
+                g[:k, k:] = bb_np[i][:, :ji]
+                g[k:, k:] = h_np[i][: ji + 1, :ji]
+                g_list[i] = g
+                rhs_list[i] = np.concatenate([ctr_np[i], vr_np[i][: ji + 1]])
+            ys = hl.lstsq_stacked(g_list, rhs_list)
+
+            y_k = np.zeros((bsz, k))
+            y_m = np.zeros((bsz, mi))
+            for i in np.nonzero(step)[0]:
+                y_k[i] = ys[i][:k]
+                y_m[i, : int(j[i])] = ys[i][k:]
+            ut = _scaled_cols_b(u_dev, dnorm)
+            z, r, rn = _deflated_update_b(ops, b, z, ut, cyc.v,
+                                          jnp.asarray(y_k), jnp.asarray(y_m))
+            rnorm = np.asarray(rn)
+            iters += np.where(step, j, 0)
+            matvecs += np.where(step, j + 1, 0)
+            cycles += step
+
+            # next recycle spaces from the harmonic-Ritz pencils
+            cu, cv, vu, vv = [np.asarray(a) for a in
+                              _whv_blocks_b(c_dev, ut, cyc.v)]
+            whv_list: list = [None] * bsz
+            for i in np.nonzero(step)[0]:
+                ji = int(j[i])
+                whv = np.zeros((k + ji + 1, k + ji))
+                whv[:k, :k] = cu[i]
+                whv[:k, k:] = cv[i][:, :ji]
+                whv[k:, :k] = vu[i][: ji + 1]
+                whv[k:, k:] = vv[i][: ji + 1, :ji]
+                whv_list[i] = whv
+            p2 = hl.harmonic_ritz_deflated_stacked(g_list, whv_list, k)
+
+            p_k = np.zeros((bsz, k, k))
+            p_m = np.zeros((bsz, mi, k))
+            q_c = np.zeros((bsz, k, k))
+            q_v = np.zeros((bsz, mi + 1, k))
+            inv_rr = np.tile(np.eye(k), (bsz, 1, 1))
+            ref_ok = np.zeros(bsz, dtype=bool)
+            for i in np.nonzero(step)[0]:
+                p = p2[i]
+                if p is None or p.shape[1] != k:
+                    continue
+                qq, rr_ = np.linalg.qr(g_list[i] @ p)
+                diag = np.abs(np.diag(rr_))
+                if diag.min() <= 1e-12 * max(diag.max(), _TINY):
+                    continue
+                ji = int(j[i])
+                p_k[i] = p[:k]
+                p_m[i, :ji] = p[k:]
+                q_c[i] = qq[:k]
+                q_v[i, : ji + 1] = qq[k:]
+                inv_rr[i] = np.linalg.inv(rr_)
+                ref_ok[i] = True
+            if ref_ok.any():
+                c_new, yk = _next_cu_b(ut, cyc.v, c_dev,
+                                       jnp.asarray(p_k), jnp.asarray(p_m),
+                                       jnp.asarray(q_c), jnp.asarray(q_v))
+                u_new = _mat_post_b(yk, jnp.asarray(inv_rr))
+                c_dev = _sel(ref_ok, c_new, c_dev)
+                u_dev = _sel(ref_ok, u_new, u_dev)
+            stalled |= (np.asarray(cyc.breakdown) & step & (rnorm > tol_abs))
+
+        # ---- finalize ----------------------------------------------------
+        x = np.asarray(_from_z_b(ops, z))
+        wall = time.perf_counter() - t0
+        converged = zerob | (rnorm <= tol_abs)
+        stats = []
+        for i in range(bsz):
+            stats.append(SolveStats(
+                iterations=int(iters[i]),
+                matvecs=int(matvecs[i]),
+                cycles=int(cycles[i]),
+                converged=bool(converged[i]),
+                rel_residual=0.0 if zerob[i]
+                else float(rnorm[i] / bnorm[i]),
+                wall_time_s=wall,  # lockstep latency, shared by the batch
+                breakdown=bool(stalled[i]),
+            ))
+
+        if k > 0:
+            # carry Ỹ_k per chain (Alg. 2 line 34); chains that never owned
+            # a space this solve keep their previous carry
+            if self.u_carry is None:
+                self.u_carry = np.zeros((bsz, n, k))
+                self.carry_ok = np.zeros(bsz, dtype=bool)
+            u_np = np.asarray(u_dev)
+            keep = established[:, None, None]
+            self.u_carry = np.where(keep, u_np, self.u_carry)
+            self.carry_ok = self.carry_ok | established
+        self.systems_solved += int((~zerob).sum())
+        return x, stats

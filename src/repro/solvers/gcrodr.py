@@ -12,6 +12,10 @@ algebra run as fused jitted dispatches with PADDED static shapes (y, P, Q
 zero-padded to the full cycle width, so early-exit cycles reuse the same
 executable); only the O(m³) eigen/LS/QR cleanup runs on host — the same
 split PETSc uses, but with ~4 device round-trips per cycle instead of ~15.
+
+The padded static shapes are also what makes the fused steps below vmap
+cleanly: `solvers/batched.py` lifts each of them over a leading chain axis
+to advance B independent recycling chains in lockstep (App. E.2.2).
 """
 from __future__ import annotations
 

@@ -47,20 +47,28 @@ def gmres_solve(op: PreconditionedOp, b, cfg: KrylovConfig, x0=None,
 
     stats = SolveStats()
     rnorm = float(jnp.linalg.norm(r))
+    # Adaptive restart (anti-stagnation): restarted GMRES at a FIXED m can
+    # stall on indefinite operators (Helmholtz) — the restart discards the
+    # small-eigenvalue information every cycle. When a full cycle reduces the
+    # residual by less than 2× we double m up to m_cap; each growth retraces
+    # the jitted cycle once (new static shape), which converged runs never pay.
+    m = cfg.m
+    m_cap = min(n, cfg.m_max if cfg.m_max else 8 * cfg.m)
     while True:
         if rnorm <= tol_abs:
             stats.converged = True
             break
         if stats.iterations >= cfg.maxiter:
             break
-        cyc = arnoldi_cycle(op, empty_c, r, tol_abs, m=cfg.m,
+        cyc = arnoldi_cycle(op, empty_c, r, tol_abs, m=m,
                             orthog=cfg.orthog, use_kernel=use_kernel)
         j = int(cyc.j_used)
         if j == 0:
             break  # stagnation
         h = np.asarray(cyc.h)[: j + 1, :j]
-        y = np.zeros(cfg.m)
+        y = np.zeros(m)
         y[:j] = hessenberg_lstsq(h, rnorm)
+        rprev = rnorm
         z, r, rn = _fused_update(op, b, z, cyc.v, jnp.asarray(y))
         rnorm = float(rn)
         stats.iterations += j
@@ -69,6 +77,8 @@ def gmres_solve(op: PreconditionedOp, b, cfg: KrylovConfig, x0=None,
         stats.breakdown = bool(cyc.breakdown)
         if stats.breakdown and rnorm > tol_abs:
             break  # exact breakdown but not converged: stop honestly
+        if j == m and rnorm > tol_abs and rnorm > 0.5 * rprev and m < m_cap:
+            m = min(2 * m, m_cap)
 
     x = np.asarray(op.from_z(z))
     stats.rel_residual = rnorm / bnorm

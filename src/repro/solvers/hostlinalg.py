@@ -43,9 +43,9 @@ def real_spanning_basis(evals: np.ndarray, evecs: np.ndarray, k: int) -> np.ndar
     return q[:, : min(k, rank)]
 
 
-def harmonic_ritz_first_cycle(h: np.ndarray, j: int, k: int) -> np.ndarray:
-    """Harmonic Ritz vectors from a fresh GMRES cycle (Alg. 2 line 14):
-    eig of (H_m + h²_{m+1,m} H_m⁻ᴴ e_m e_mᴴ). Returns P (j, k_eff)."""
+def _first_cycle_pencil(h: np.ndarray, j: int):
+    """(H_m + h²_{m+1,m} H_m⁻ᴴ e_m e_mᴴ) — the fresh-cycle harmonic-Ritz
+    pencil (Alg. 2 line 14); None when H_m is singular."""
     hm = h[:j, :j]
     h2 = h[j, j - 1] ** 2
     em = np.zeros((j, 1))
@@ -53,8 +53,17 @@ def harmonic_ritz_first_cycle(h: np.ndarray, j: int, k: int) -> np.ndarray:
     try:
         corr = h2 * np.linalg.solve(hm.T, em)  # H⁻ᵀ e_m (real arithmetic)
     except np.linalg.LinAlgError:
+        return None
+    return hm + corr @ em.T
+
+
+def harmonic_ritz_first_cycle(h: np.ndarray, j: int, k: int) -> np.ndarray:
+    """Harmonic Ritz vectors from a fresh GMRES cycle (Alg. 2 line 14):
+    eig of (H_m + h²_{m+1,m} H_m⁻ᴴ e_m e_mᴴ). Returns P (j, k_eff)."""
+    a = _first_cycle_pencil(h, j)
+    if a is None:
         return np.zeros((j, 0))
-    evals, evecs = np.linalg.eig(hm + corr @ em.T)
+    evals, evecs = np.linalg.eig(a)
     return real_spanning_basis(evals, evecs, k)
 
 
@@ -73,3 +82,127 @@ def harmonic_ritz_deflated(g: np.ndarray, whv: np.ndarray, k: int) -> np.ndarray
 def right_tri_solve(u: np.ndarray, r: np.ndarray) -> np.ndarray:
     """U R⁻¹ for upper-triangular R (Alg. 2: U_k = Ỹ_k R⁻¹)."""
     return scipy.linalg.solve_triangular(r.T, u.T, lower=True).T
+
+
+# --------------------------------------------------------------------------
+# Stacked (multi-chain) variants — the host half of the batched lockstep
+# engine (solvers/batched.py). Each takes B chains' small blocks at per-chain
+# EFFECTIVE widths j[i] and uses one LAPACK call on the whole stack whenever
+# the widths agree (the lockstep common case: every unconverged chain ran a
+# full cycle); ragged widths fall back to a per-chain loop. B is the worker
+# count (≲ dozens), the blocks are m ≲ 200 — host microseconds either way,
+# but the stacked path keeps BLAS calls O(1) per lockstep cycle.
+# --------------------------------------------------------------------------
+
+
+def _stack_well_conditioned(r: np.ndarray, rtol: float = 1e-12) -> bool:
+    """True when every R factor in a stacked QR is safely invertible —
+    gate for the fast solve path (lstsq fallback handles the rest)."""
+    diag = np.abs(np.diagonal(r, axis1=-2, axis2=-1))
+    return bool(np.all(diag.min(axis=-1) >
+                       rtol * np.maximum(diag.max(axis=-1), 1e-300)))
+
+
+def hessenberg_lstsq_stacked(h: np.ndarray, j: np.ndarray,
+                             beta: np.ndarray) -> np.ndarray:
+    """Stacked argmin_y ‖β_i e₁ − H_i y‖ over B chains.
+
+    h: (B, m+1, m) raw Hessenbergs; j: (B,) effective widths (0 = frozen
+    chain); beta: (B,) residual norms. Returns y (B, m), zero-padded — rows
+    with j[i] == 0 stay zero (the padded-update no-op convention).
+    """
+    h = np.asarray(h)
+    j = np.asarray(j, dtype=int)
+    beta = np.asarray(beta, dtype=float)
+    bsz, _, m = h.shape
+    y = np.zeros((bsz, m))
+    act = np.nonzero(j > 0)[0]
+    if act.size == 0:
+        return y
+    ji = int(j[act[0]])
+    if np.all(j[act] == ji):
+        blocks = h[act][:, : ji + 1, :ji]
+        q, r = np.linalg.qr(blocks)               # one stacked QR
+        if _stack_well_conditioned(r):
+            rhs = q[:, 0, :] * beta[act, None]    # Qᵀ(β e₁) = β·(first row)
+            y[act[:, None], np.arange(ji)[None, :]] = \
+                np.linalg.solve(r, rhs[..., None])[..., 0]
+            return y
+        # near-breakdown column somewhere in the stack → per-chain lstsq
+    for i in act:
+        ji = int(j[i])
+        y[i, :ji] = hessenberg_lstsq(h[i, : ji + 1, :ji], beta[i])
+    return y
+
+
+def lstsq_stacked(a_list: list, b_list: list) -> list:
+    """Per-chain min‖b_i − A_i y‖ (entries may be None = frozen chain).
+
+    One stacked QR + triangular solve when every live block has the same
+    shape; ragged or rank-deficient stacks fall back to per-chain lstsq.
+    """
+    out = [None] * len(a_list)
+    live = [i for i, a in enumerate(a_list) if a is not None]
+    if not live:
+        return out
+    shape0 = a_list[live[0]].shape
+    if all(a_list[i].shape == shape0 for i in live):
+        stack = np.stack([a_list[i] for i in live])
+        rhs = np.stack([b_list[i] for i in live])
+        q, r = np.linalg.qr(stack)
+        if _stack_well_conditioned(r):
+            ys = np.linalg.solve(
+                r, np.einsum("bij,bi->bj", q, rhs)[..., None])[..., 0]
+            for t, i in enumerate(live):
+                out[i] = ys[t]
+            return out
+    for i in live:
+        out[i], *_ = np.linalg.lstsq(a_list[i], b_list[i], rcond=None)
+    return out
+
+
+def harmonic_ritz_first_cycle_stacked(h: np.ndarray, j: np.ndarray,
+                                      k: int) -> list:
+    """Fresh-cycle harmonic-Ritz bases for B chains: list of P_i
+    ((j_i, k_eff_i) arrays; None where j_i < 2 or the pencil is singular).
+
+    Uniform-width stacks share ONE np.linalg.eig call over the stacked
+    pencils; the per-chain basis selection (real spans of complex pairs +
+    rank-revealing QR) stays a loop — it is O(k²·j) bookkeeping.
+    """
+    h = np.asarray(h)
+    j = np.asarray(j, dtype=int)
+    bsz = h.shape[0]
+    out = [None] * bsz
+    act = [i for i in range(bsz) if min(k, int(j[i]) - 1) >= 1]
+    if not act:
+        return out
+    ji = int(j[act[0]])
+    if all(int(j[i]) == ji for i in act):
+        pencils, ok_idx = [], []
+        for i in act:
+            a = _first_cycle_pencil(h[i], ji)
+            if a is not None:
+                pencils.append(a)
+                ok_idx.append(i)
+        if ok_idx:
+            evals, evecs = np.linalg.eig(np.stack(pencils))  # stacked eig
+            for t, i in enumerate(ok_idx):
+                out[i] = real_spanning_basis(evals[t], evecs[t],
+                                             min(k, ji - 1))
+        return out
+    for i in act:
+        out[i] = harmonic_ritz_first_cycle(h[i], int(j[i]),
+                                           min(k, int(j[i]) - 1))
+    return out
+
+
+def harmonic_ritz_deflated_stacked(g_list: list, whv_list: list,
+                                   k: int) -> list:
+    """Deflated-cycle harmonic Ritz per chain (None entries pass through).
+
+    The generalized pencil Ĝᴴ Ĝ z = θ Ĝᴴ Ŵᴴ V̂ z has no stacked LAPACK
+    driver — this is the one per-chain eig loop left in the lockstep engine.
+    """
+    return [None if g is None else harmonic_ritz_deflated(g, whv, k)
+            for g, whv in zip(g_list, whv_list)]

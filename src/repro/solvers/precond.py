@@ -283,4 +283,39 @@ def make_preconditioner(name: str, problem_op, *, omega: float = 1.0,
     raise KeyError(f"unknown preconditioner {name!r}")
 
 
+def make_preconditioner_batched(name: str, problem_op, *, omega: float = 1.0,
+                                degree: int = 4, sweeps: int = 1,
+                                use_kernel: bool = False):
+    """Stacked preconditioner for the lockstep batched solver.
+
+    `problem_op` is a batched Stencil5 ((B, 5, nx, ny) coeffs) or DIA
+    ((B, ndiag, n) data). Builds the per-chain pytrees and stacks every leaf
+    on a new leading axis, so the result rides through `jax.vmap(..., 0)`
+    next to the batched operator. `ilu_host` cannot batch (module-slot host
+    callback) — use the sequential engine for paper-parity ILU runs.
+    """
+    name = name.lower()
+    if name in ("none", "identity"):
+        return None
+    if name == "ilu_host":
+        raise NotImplementedError(
+            "ilu_host is a host-callback preconditioner with a single module "
+            "slot; it cannot be batched — use engine='sequential'")
+    if isinstance(problem_op, Stencil5):
+        parts = [make_preconditioner(name, problem_op.take(i), omega=omega,
+                                     degree=degree, sweeps=sweeps,
+                                     use_kernel=use_kernel)
+                 for i in range(problem_op.coeffs.shape[0])]
+    elif isinstance(problem_op, DIA):
+        parts = [make_preconditioner(name, problem_op.take(i), omega=omega,
+                                     degree=degree, sweeps=sweeps,
+                                     use_kernel=use_kernel)
+                 for i in range(problem_op.data.shape[0])]
+    else:
+        raise TypeError(f"unsupported batched operator {type(problem_op)}")
+    # identical (name, degree, sweeps) → identical treedefs → stackable
+    return jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack([jnp.asarray(x) for x in leaves]), *parts)
+
+
 PRECONDITIONERS = ("none", "jacobi", "bjacobi", "rbsor", "neumann", "cheby", "ilu_host")

@@ -73,6 +73,11 @@ class KrylovConfig:
 
     m        : max Krylov subspace per cycle (GMRES restart length; GCRO-DR
                uses k recycled + (m-k) new directions — same peak memory)
+    m_max    : restart-growth cap for plain GMRES (k=0): when a cycle's
+               residual reduction stalls (restarted GMRES on indefinite
+               operators, e.g. Helmholtz, can stagnate at any fixed m), the
+               restart length doubles up to min(m_max, n). 0 = auto
+               (8·m); set m_max = m to pin the classic fixed-restart method.
     k        : recycled-subspace dimension (GCRO-DR only; k=0 ≡ GMRES)
     tol      : relative residual tolerance (PETSc rtol semantics)
     maxiter  : cap on total Krylov iterations per system
@@ -91,8 +96,10 @@ class KrylovConfig:
     maxiter: int = 10_000
     orthog: str = "cgs2"
     ritz_refresh: str = "cycle"
+    m_max: int = 0
 
     def __post_init__(self):
         assert 0 <= self.k < self.m, "need 0 <= k < m"
         assert self.orthog in ("cgs2", "mgs")
         assert self.ritz_refresh in ("cycle", "final")
+        assert self.m_max == 0 or self.m_max >= self.m, "need m_max >= m"
