@@ -6,19 +6,28 @@
   stability_fig13      Fig 13   (max-iteration saturation fractions)
   parallel_e22         Table 31 (chunk-parallel SKR, both engines)
   batched_solver       lockstep batched vs per-system chunked datagen
+  trajectory_recycle   time-dependent θ-stepping: recycled vs cold-start,
+                       sequential vs lockstep trajectory engines
   table33_no_training  Table 33 (FNO on SKR vs GMRES data)
   roofline_report      §Roofline (aggregates dry-run artifacts)
+
+Each run also writes a machine-readable ``results/BENCH_<name>.json``
+artifact (name, wall time, headline metrics = whatever the bench's ``run``
+returns) so the perf trajectory is tracked across PRs.
 
 ``python -m benchmarks.run [--quick] [--only NAME]``
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 from benchmarks import (batched_solver, convergence_fig11, parallel_e22,
                         roofline_report, stability_fig13, table1_speedup,
-                        table2_sort_ablation, table33_no_training)
+                        table2_sort_ablation, table33_no_training,
+                        trajectory_recycle)
 
 BENCHES = [
     ("table1_speedup", table1_speedup.run),
@@ -27,9 +36,40 @@ BENCHES = [
     ("stability_fig13", stability_fig13.run),
     ("parallel_e22", parallel_e22.run),
     ("batched_solver", batched_solver.run),
+    ("trajectory_recycle", trajectory_recycle.run),
     ("table33_no_training", table33_no_training.run),
     ("roofline_report", roofline_report.run),
 ]
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def _jsonable(obj):
+    """Best-effort conversion of a bench's return value to JSON types."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "item"):  # numpy scalars
+        return obj.item()
+    if hasattr(obj, "tolist"):  # numpy arrays
+        return obj.tolist()
+    return str(obj)
+
+
+def _write_artifact(name: str, wall_s: float, quick: bool, metrics):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"name": name, "wall_s": round(wall_s, 3), "quick": quick,
+                   "metrics": _jsonable(metrics)}, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
+    print(f"[artifact: {os.path.relpath(path)}]")
 
 
 def main(argv=None) -> int:
@@ -38,6 +78,8 @@ def main(argv=None) -> int:
                     help="reduced grids/tols for CI-speed runs")
     ap.add_argument("--only", default=None,
                     choices=[n for n, _ in BENCHES])
+    ap.add_argument("--no-artifacts", action="store_true",
+                    help="skip writing results/BENCH_<name>.json")
     args = ap.parse_args(argv)
 
     for name, fn in BENCHES:
@@ -45,8 +87,11 @@ def main(argv=None) -> int:
             continue
         t0 = time.perf_counter()
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
-        fn(quick=args.quick)
-        print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
+        metrics = fn(quick=args.quick)
+        wall = time.perf_counter() - t0
+        print(f"[{name}: {wall:.1f}s]")
+        if not args.no_artifacts:
+            _write_artifact(name, wall, args.quick, metrics)
     return 0
 
 

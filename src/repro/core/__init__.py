@@ -7,11 +7,19 @@ from repro.core.skr import (DataGenResult, SKRConfig, SKRGenerator,
                             generate_dataset_chunked)
 from repro.core.sorting import (chain_length, greedy_sort, grouped_greedy_sort,
                                 hilbert_sort, sort_features)
+from repro.core.trajectory import (TrajConfig, TrajectoryGenerator, TrajResult,
+                                   generate_trajectories,
+                                   generate_trajectories_baseline,
+                                   generate_trajectories_chunked,
+                                   march_trajectory)
 
 __all__ = [
     "delta_subspace", "smallest_invariant_subspace",
     "DataGenResult", "SKRConfig", "SKRGenerator",
     "generate_dataset", "generate_dataset_baseline", "generate_dataset_chunked",
+    "TrajConfig", "TrajectoryGenerator", "TrajResult",
+    "generate_trajectories", "generate_trajectories_baseline",
+    "generate_trajectories_chunked", "march_trajectory",
     "chain_length", "greedy_sort", "grouped_greedy_sort", "hilbert_sort",
     "sort_features",
 ]

@@ -1,0 +1,54 @@
+"""Shared datagen checkpoint IO: atomic .npz state snapshots.
+
+Both resumable generators (`SKRGenerator` over steady systems,
+`TrajectoryGenerator` over time-dependent trajectories) checkpoint the same
+shape of state — progress position, solve order, completed outputs, the
+solver's recycle carry, per-solve counters — differing only in field names
+and output layout. The atomic write protocol and the recycle-carry
+encoding live here so a format fix lands in one place.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import numpy as np
+
+
+class NpzCheckpointer:
+    """Atomic numpy checkpoint file: write to a sibling tmp path, then
+    `os.replace` to publish — a preempted writer never corrupts the last
+    good snapshot."""
+
+    def __init__(self, ckpt_dir: Optional[str], filename: str):
+        assert filename.endswith(".npz")
+        self.ckpt_dir = ckpt_dir
+        self.filename = filename
+        if ckpt_dir:
+            os.makedirs(ckpt_dir, exist_ok=True)
+
+    @property
+    def path(self) -> str:
+        return os.path.join(self.ckpt_dir, self.filename)
+
+    def save(self, **arrays):
+        # keep the .npz suffix on the tmp name or np.savez appends another
+        tmp = os.path.join(self.ckpt_dir,
+                           self.filename[:-len(".npz")] + ".tmp.npz")
+        np.savez(tmp, **arrays)
+        os.replace(tmp, self.path)  # atomic publish
+
+    def load(self):
+        """The np.load handle, or None when disabled / nothing saved yet."""
+        if not self.ckpt_dir or not os.path.exists(self.path):
+            return None
+        return np.load(self.path)
+
+
+def encode_carry(solver) -> np.ndarray:
+    """Recycle carry as an always-array npz field ((0, 0) = no carry)."""
+    return solver.u_carry if solver.u_carry is not None else np.zeros((0, 0))
+
+
+def decode_carry(z) -> Optional[np.ndarray]:
+    return None if z["u_carry"].size == 0 else z["u_carry"]

@@ -7,6 +7,16 @@ Figure-1 pipeline, end to end:
   d.  solve sequentially with GCRO-DR recycling            solvers/gcrodr.py
   e.  assemble the (input, solution) dataset               here
 
+Time-dependent axis (beyond the paper's steady-state scope):
+  t1. sample trajectory latents (IC + coefficient drift)  pde/timedep.py
+  t2. export each θ-scheme implicit step as a system      pde/timedep.py
+  t3. recycle ACROSS TIME STEPS within a trajectory,      core/trajectory.py
+      sort trajectories by t=0 features, advance chunks
+      of trajectories in lockstep (engine shared below)
+  t4. assemble (u_0..u_nt) trajectory datasets for        core/trajectory.py
+      autoregressive NO training (operators/fno.py
+      rollout path, examples/train_fno_rollout.py)
+
 Production posture:
   * resumable: the generation state (solver recycle space + completed
     solutions) checkpoints atomically every `ckpt_every` systems — a
@@ -36,7 +46,6 @@ Batched execution (`generate_dataset_chunked`, engine="batched"):
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Callable, Optional
 
@@ -44,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.ckpt import NpzCheckpointer, decode_carry, encode_carry
 from repro.core.sorting import chain_length, sort_features
 from repro.pde.problems import LinearProblem, ProblemFamily
 from repro.solvers.gcrodr import GCRODRSolver
@@ -91,29 +101,20 @@ class SKRGenerator:
         self.family = family
         self.cfg = cfg
         self.ckpt_dir = ckpt_dir
-        if ckpt_dir:
-            os.makedirs(ckpt_dir, exist_ok=True)
+        self._ckpt = NpzCheckpointer(ckpt_dir, "datagen_state.npz")
 
     # ------------------------------------------------------------- ckpt
-    def _ckpt_path(self) -> str:
-        return os.path.join(self.ckpt_dir, "datagen_state.npz")
-
     def _save_ckpt(self, pos, order, solutions, solver, iters, times):
-        tmp = os.path.join(self.ckpt_dir, "datagen_state.tmp.npz")
-        u = solver.u_carry if solver.u_carry is not None else np.zeros((0, 0))
-        np.savez(tmp, pos=pos, order=order, solutions=solutions, u_carry=u,
-                 iters=np.asarray(iters), times=np.asarray(times))
-        os.replace(tmp, self._ckpt_path())  # atomic publish
+        self._ckpt.save(pos=pos, order=order, solutions=solutions,
+                        u_carry=encode_carry(solver),
+                        iters=np.asarray(iters), times=np.asarray(times))
 
     def _load_ckpt(self):
-        if not self.ckpt_dir:
+        z = self._ckpt.load()
+        if z is None:
             return None
-        path = self._ckpt_path()
-        if not os.path.exists(path):
-            return None
-        z = np.load(path)
         return dict(pos=int(z["pos"]), order=z["order"], solutions=z["solutions"],
-                    u_carry=(None if z["u_carry"].size == 0 else z["u_carry"]),
+                    u_carry=decode_carry(z),
                     iters=list(z["iters"]), times=list(z["times"]))
 
     # ------------------------------------------------------------- main

@@ -1,0 +1,327 @@
+"""Trajectory datagen engine: Krylov-subspace recycling ACROSS TIME STEPS.
+
+The steady-state SKR pipeline (core/skr.py) makes systems similar by
+SORTING them; a time-dependent workload (pde/timedep.py) gets similarity
+for free — inside one trajectory the θ-scheme matrices A_t = I + θΔt L(t)
+drift slowly with t. This engine exploits both levels:
+
+  1. WITHIN a trajectory, the GCRO-DR carry U_k rides across time steps:
+     step n+1 warm-starts from the subspace harvested at step n (the
+     textbook recycling regime — A_{n+1} = A_n + O(Δt)).
+  2. ACROSS trajectories, the carry also survives trajectory boundaries:
+     trajectories are SORTED by their t=0 features (IC latent + operator
+     latent, Algorithm 1 on trajectory granularity), so the space carried
+     out of trajectory i's last step is relevant to trajectory i+1's first.
+  3. ACROSS the machine, W chunks of the sorted trajectory list advance in
+     LOCKSTEP through the `BatchedGCRODRSolver`: one batched device program
+     solves time step s of the current trajectory of EVERY chunk (all
+     trajectories share nt/Δt, so the rows align with no phase drift).
+     Shorter chunks are padded with zero right-hand sides — 0 iterations,
+     x = 0, recycle carry untouched — exactly the skr.py padding semantics.
+
+Resumable like `SKRGenerator`: the sequential engine checkpoints atomically
+every `ckpt_every` TRAJECTORIES (completed fields + solver recycle space);
+a preempted job restarts warm at the next unfinished trajectory.
+
+RHS modes:
+  full       solve A u_{n+1} = b directly (paper-parity default)
+  increment  solve A δ = b − A u_n and set u_{n+1} = u_n + δ — the Krylov
+             iteration only reconstructs the CHANGE per step; with rtol
+             semantics the absolute target scales with ‖b − A u_n‖, so the
+             marched trajectory matches "full" to solver tolerance while
+             typically shaving iterations near steady state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ckpt import NpzCheckpointer, decode_carry, encode_carry
+from repro.core.sorting import chain_length, sort_features
+from repro.pde.dia import Stencil5, stencil5_matvec
+from repro.pde.timedep import TimeDepFamily, TrajectorySpec
+from repro.solvers.gcrodr import GCRODRSolver
+from repro.solvers.operator import PreconditionedOp, StencilOp
+from repro.solvers.precond import (make_preconditioner,
+                                   make_preconditioner_batched)
+from repro.solvers.types import KrylovConfig, SequenceStats
+
+
+@dataclasses.dataclass(frozen=True)
+class TrajConfig:
+    krylov: KrylovConfig = KrylovConfig()
+    sort_method: str = "greedy"   # trajectory-level sort (t=0 features)
+    precond: str = "none"
+    use_kernel: bool = False
+    ckpt_every: int = 0           # 0 = no checkpoints; unit = trajectories
+    rhs_mode: str = "full"        # full | increment (module docstring)
+
+    def __post_init__(self):
+        assert self.rhs_mode in ("full", "increment")
+
+
+@dataclasses.dataclass
+class TrajResult:
+    trajectories: np.ndarray   # (N, nt+1, nx, ny), [:, 0] = u0, ORIGINAL order
+    no_input: np.ndarray       # (N, nx, ny) static conditioning channel
+    order: np.ndarray          # trajectory solve order used
+    stats: SequenceStats       # one SolveStats per implicit step solved
+    sort_seconds: float
+    chain_len: float
+
+
+_inc_rhs = jax.jit(lambda a, b, u: b - stencil5_matvec(a, u))
+
+
+def _spec_at(specs: TrajectorySpec, i) -> TrajectorySpec:
+    return jax.tree_util.tree_map(lambda a: a[i], specs)
+
+
+def _march_one(family: TimeDepFamily, spec: TrajectorySpec, cfg: TrajConfig,
+               solver: GCRODRSolver, stats: Optional[SequenceStats] = None
+               ) -> np.ndarray:
+    """March ONE trajectory through the θ-scheme with the (stateful) solver;
+    returns the (nt+1, nx, ny) field sequence. The carry in `solver`
+    survives the call — that is the across-trajectory recycling."""
+    nx, ny = family.nx, family.ny
+    step1 = family.step_fn()
+    out = np.zeros((family.nt + 1, nx, ny))
+    u = jnp.asarray(spec.u0)
+    out[0] = np.asarray(u)
+    for step in range(family.nt):
+        t_old, t_new = step * family.dt, (step + 1) * family.dt
+        a, b = step1(spec.latent, u, t_old, t_new)
+        rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
+        st5 = Stencil5(a)
+        pre = make_preconditioner(cfg.precond, st5, use_kernel=cfg.use_kernel)
+        op = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
+        x, st = solver.solve(op, np.asarray(rhs).reshape(-1))
+        delta = jnp.asarray(np.asarray(x).reshape(nx, ny))
+        u = u + delta if cfg.rhs_mode == "increment" else delta
+        out[step + 1] = np.asarray(u)
+        if stats is not None:
+            stats.append(st)
+    return out
+
+
+def march_trajectory(family: TimeDepFamily, spec: TrajectorySpec,
+                     cfg: TrajConfig, solver: Optional[GCRODRSolver] = None
+                     ) -> tuple[np.ndarray, SequenceStats]:
+    """Convenience single-trajectory march (tests / notebooks): fresh solver
+    unless one is passed in to continue an existing recycling chain."""
+    solver = solver or GCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
+    stats = SequenceStats()
+    traj = _march_one(family, spec, cfg, solver, stats)
+    return traj, stats
+
+
+class TrajectoryGenerator:
+    """Resumable trajectory data generator over one time-dependent family
+    (the `SKRGenerator` of the trajectory subsystem)."""
+
+    def __init__(self, family: TimeDepFamily, cfg: TrajConfig,
+                 ckpt_dir: Optional[str] = None):
+        self.family = family
+        self.cfg = cfg
+        self.ckpt_dir = ckpt_dir
+        self._ckpt = NpzCheckpointer(ckpt_dir, "trajgen_state.npz")
+
+    # ------------------------------------------------------------- ckpt
+    def _save_ckpt(self, pos, order, trajs, solver, iters, times):
+        self._ckpt.save(pos=pos, order=order, trajs=trajs,
+                        u_carry=encode_carry(solver),
+                        iters=np.asarray(iters), times=np.asarray(times))
+
+    def _load_ckpt(self):
+        z = self._ckpt.load()
+        if z is None:
+            return None
+        return dict(pos=int(z["pos"]), order=z["order"], trajs=z["trajs"],
+                    u_carry=decode_carry(z),
+                    iters=list(z["iters"]), times=list(z["times"]))
+
+    # ------------------------------------------------------------- main
+    def generate(self, key: jax.Array, num: int,
+                 progress_cb: Optional[Callable[[int, int], None]] = None,
+                 fail_at: Optional[int] = None) -> TrajResult:
+        """Generate `num` trajectories of nt+1 fields each.
+
+        fail_at: fault-injection hook (unit = trajectories) — raises after
+        that many trajectories; a rerun resumes from the checkpoint with the
+        recycle space intact, mirroring `SKRGenerator.generate`.
+        """
+        family, cfg = self.family, self.cfg
+        specs = family.sample_specs(key, num)
+        feats = np.asarray(specs.features)
+
+        t0 = time.perf_counter()
+        order = sort_features(feats, cfg.sort_method)
+        sort_s = time.perf_counter() - t0
+        clen = chain_length(feats, order)
+
+        nx, ny = family.nx, family.ny
+        trajs = np.zeros((num, family.nt + 1, nx, ny))
+        solver = GCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
+        start_pos = 0
+        iters, times = [], []
+
+        state = self._load_ckpt()
+        if state is not None and len(state["order"]) == num:
+            order = state["order"]
+            trajs = state["trajs"]
+            start_pos = state["pos"]
+            solver.u_carry = state["u_carry"]
+            iters, times = state["iters"], state["times"]
+
+        stats = SequenceStats()
+        for pos in range(start_pos, num):
+            if fail_at is not None and pos >= fail_at:
+                self._save_ckpt(pos, order, trajs, solver, iters, times)
+                raise RuntimeError(f"injected datagen fault at trajectory {pos}")
+            i = int(order[pos])
+            trajs[i] = _march_one(family, _spec_at(specs, i), cfg, solver,
+                                  stats)
+            for st in stats.per_system[-family.nt:]:
+                iters.append(st.iterations)
+                times.append(st.wall_time_s)
+            if cfg.ckpt_every and self.ckpt_dir and (pos + 1) % cfg.ckpt_every == 0:
+                self._save_ckpt(pos + 1, order, trajs, solver, iters, times)
+            if progress_cb:
+                progress_cb(pos + 1, num)
+
+        if self.ckpt_dir:
+            self._save_ckpt(num, order, trajs, solver, iters, times)
+        return TrajResult(
+            trajectories=trajs,
+            no_input=np.asarray(specs.no_input),
+            order=np.asarray(order),
+            stats=stats,
+            sort_seconds=sort_s,
+            chain_len=clen,
+        )
+
+
+def generate_trajectories(family: TimeDepFamily, key: jax.Array, num: int,
+                          cfg: TrajConfig, ckpt_dir: Optional[str] = None,
+                          **kw) -> TrajResult:
+    return TrajectoryGenerator(family, cfg, ckpt_dir).generate(key, num, **kw)
+
+
+def generate_trajectories_baseline(family: TimeDepFamily, key: jax.Array,
+                                   num: int, krylov: KrylovConfig,
+                                   precond: str = "none") -> TrajResult:
+    """Cold-start baseline: plain GMRES (k = 0) per step, no trajectory
+    sorting — every implicit solve rebuilds its Krylov space from scratch.
+    The benchmark's comparison point for recycled time stepping."""
+    cfg = TrajConfig(krylov=dataclasses.replace(krylov, k=0),
+                     sort_method="none", precond=precond)
+    return TrajectoryGenerator(family, cfg).generate(key, num)
+
+
+# ---------------------------------------------------------------- chunked
+
+def _chunk_result(specs, feats, sub, trajs, stats) -> TrajResult:
+    return TrajResult(
+        trajectories=trajs,
+        no_input=np.asarray(specs.no_input)[np.asarray(sub)],
+        order=np.asarray(sub),
+        stats=stats,
+        sort_seconds=0.0,
+        chain_len=chain_length(feats, sub),
+    )
+
+
+def _solve_chunk_sequential(family, specs, feats, sub, cfg) -> TrajResult:
+    """One chunk of sorted trajectories through the per-system sequential
+    solver (fresh recycle chain per chunk, carried across the chunk's
+    trajectories — bitwise-matches `TrajectoryGenerator.generate` when
+    workers=1)."""
+    solver = GCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
+    stats = SequenceStats()
+    trajs = np.zeros((len(sub), family.nt + 1, family.nx, family.ny))
+    for pos, i in enumerate(sub):
+        trajs[pos] = _march_one(family, _spec_at(specs, int(i)), cfg, solver,
+                                stats)
+    return _chunk_result(specs, feats, sub, trajs, stats)
+
+
+def _solve_chunks_batched(family, specs, feats, subs, cfg) -> list[TrajResult]:
+    """All chunks in lockstep: at trajectory row j, step s, ONE batched
+    device program advances the s-th implicit step of chunk w's j-th
+    trajectory for every w (see module docstring, level 3)."""
+    from repro.solvers.batched import BatchedGCRODRSolver
+
+    nx, ny = family.nx, family.ny
+    workers = len(subs)
+    length = max(len(s) for s in subs)
+    stepB = family.step_fn_batched()
+    u0_all = jnp.asarray(specs.u0)
+
+    solver = BatchedGCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
+    trajs = [np.zeros((len(s), family.nt + 1, nx, ny)) for s in subs]
+    stats = [SequenceStats() for _ in subs]
+    for j in range(length):
+        idx = np.array([int(s[j]) if j < len(s) else -1 for s in subs])
+        clamped = jnp.asarray(np.where(idx >= 0, idx, 0))
+        live = idx >= 0
+        live_dev = jnp.asarray(live)[:, None, None]
+        lat = jax.tree_util.tree_map(lambda a: a[clamped],
+                                     specs.latent)
+        u = jnp.where(live_dev, u0_all[clamped], 0.0)
+        u_np = np.asarray(u)
+        for w in np.nonzero(live)[0]:
+            trajs[w][j, 0] = u_np[w]
+        for step in range(family.nt):
+            t_old, t_new = step * family.dt, (step + 1) * family.dt
+            a, b = stepB(lat, u, t_old, t_new)
+            rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
+            rhs = jnp.where(live_dev, rhs, 0.0)      # padded chunks, on device
+            st5 = Stencil5(a)                        # (W, 5, nx, ny)
+            pre = make_preconditioner_batched(cfg.precond, st5,
+                                              use_kernel=cfg.use_kernel)
+            ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
+            xs, st_list = solver.solve_batch(ops, rhs.reshape(workers, -1))
+            delta = jnp.asarray(xs.reshape(workers, nx, ny))
+            u = u + delta if cfg.rhs_mode == "increment" else delta
+            u_np = np.asarray(u)                     # one sync per step
+            for w in np.nonzero(live)[0]:
+                trajs[w][j, step + 1] = u_np[w]
+                stats[w].append(st_list[w])
+    return [_chunk_result(specs, feats, subs[w], trajs[w], stats[w])
+            for w in range(workers)]
+
+
+def generate_trajectories_chunked(family: TimeDepFamily, key: jax.Array,
+                                  num: int, cfg: TrajConfig, workers: int = 4,
+                                  engine: str = "batched") -> list[TrajResult]:
+    """Chunk-parallel trajectory datagen: sort the trajectories once, split
+    the sorted order into `workers` contiguous chunks, one recycle chain per
+    chunk (the App. E.2.2 decomposition lifted to trajectory granularity).
+
+    engine="batched" advances all chunks concurrently in lockstep;
+    engine="sequential" runs chunks back-to-back (paper-parity simulation).
+    workers=1 always takes the sequential path and is bitwise-identical to
+    `TrajectoryGenerator.generate` on the same key. Configs the lockstep
+    engine cannot batch (`ilu_host`, `ritz_refresh="final"`) auto-route to
+    the sequential path, mirroring `generate_dataset_chunked`.
+    """
+    if engine not in ("batched", "sequential"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "batched" and (
+            cfg.precond == "ilu_host"
+            or (cfg.krylov.k > 0 and cfg.krylov.ritz_refresh == "final")):
+        engine = "sequential"
+    specs = family.sample_specs(key, num)
+    feats = np.asarray(specs.features)
+    order = sort_features(feats, cfg.sort_method)
+    bounds = np.linspace(0, num, workers + 1).astype(int)
+    subs = [order[bounds[w]: bounds[w + 1]] for w in range(workers)]
+    if engine == "sequential" or workers == 1:
+        return [_solve_chunk_sequential(family, specs, feats, sub, cfg)
+                for sub in subs]
+    return _solve_chunks_batched(family, specs, feats, subs, cfg)

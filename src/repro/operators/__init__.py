@@ -1,5 +1,7 @@
-from repro.operators.fno import FNOConfig, fno_apply, fno_init
+from repro.operators.fno import (FNOConfig, add_rollout_channels, fno_apply,
+                                 fno_init, fno_rollout)
 from repro.operators.deeponet import DeepONetConfig, deeponet_apply, deeponet_init
 
 __all__ = ["FNOConfig", "fno_init", "fno_apply",
+           "add_rollout_channels", "fno_rollout",
            "DeepONetConfig", "deeponet_init", "deeponet_apply"]

@@ -81,13 +81,18 @@ def fno_apply(params, cfg: FNOConfig, x):
     return h @ params["proj2"] + params["proj2_b"]
 
 
+def _grid_channels(b, nx, ny):
+    """Normalized coordinate channels gx, gy, each (B, X, Y)."""
+    gx = jnp.broadcast_to(jnp.linspace(0.0, 1.0, nx)[None, :, None],
+                          (b, nx, ny))
+    gy = jnp.broadcast_to(jnp.linspace(0.0, 1.0, ny)[None, None, :],
+                          (b, nx, ny))
+    return gx, gy
+
+
 def add_coords(fields):
     """(B, X, Y) input field → (B, X, Y, 3) with normalized coordinates."""
-    b, nx, ny = fields.shape
-    gx = jnp.linspace(0.0, 1.0, nx)[None, :, None]
-    gy = jnp.linspace(0.0, 1.0, ny)[None, None, :]
-    gx = jnp.broadcast_to(gx, (b, nx, ny))
-    gy = jnp.broadcast_to(gy, (b, nx, ny))
+    gx, gy = _grid_channels(*fields.shape)
     return jnp.stack([fields, gx, gy], axis=-1)
 
 
@@ -96,3 +101,27 @@ def relative_l2(pred, target):
     num = jnp.sqrt(jnp.sum((pred - target) ** 2, axis=(1, 2, 3)))
     den = jnp.sqrt(jnp.sum(target ** 2, axis=(1, 2, 3))) + 1e-12
     return jnp.mean(num / den)
+
+
+# ------------------------------------------------------- autoregressive FNO
+# Time-dependent consumer path (pde/timedep.py trajectories): the FNO learns
+# the one-step map u_t ↦ u_{t+1} conditioned on a static coefficient channel
+# (e.g. K(·, 0) for heat), and inference ROLLS OUT autoregressively.
+
+def add_rollout_channels(state, cond):
+    """(B, X, Y) state u_t + (B, X, Y) static conditioning field →
+    (B, X, Y, 4) input [u_t, cond, x, y] (use FNOConfig(in_channels=4))."""
+    gx, gy = _grid_channels(*state.shape)
+    return jnp.stack([state, cond, gx, gy], axis=-1)
+
+
+def fno_rollout(params, cfg: FNOConfig, u0, cond, steps: int):
+    """Autoregressive rollout: feed each prediction back as the next input
+    state. u0, cond: (B, X, Y). Returns (B, steps, X, Y) — the predicted
+    u_1..u_steps, aligned with `TrajResult.trajectories[:, 1:]`."""
+    preds = []
+    u = u0
+    for _ in range(steps):
+        u = fno_apply(params, cfg, add_rollout_channels(u, cond))[..., 0]
+        preds.append(u)
+    return jnp.stack(preds, axis=1)

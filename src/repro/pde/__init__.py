@@ -8,7 +8,9 @@ Pallas kernels consume (DESIGN.md §4.1).
 """
 from repro.pde.dia import DIA, Stencil5, dia_matvec, stencil5_matvec
 from repro.pde.problems import LinearProblem, ProblemFamily
-from repro.pde.registry import get_family, list_families
+from repro.pde.registry import (get_family, get_timedep_family,
+                                list_families, list_timedep_families)
+from repro.pde.timedep import TimeDepFamily, TrajectorySpec
 
 __all__ = [
     "DIA",
@@ -17,6 +19,10 @@ __all__ = [
     "stencil5_matvec",
     "LinearProblem",
     "ProblemFamily",
+    "TimeDepFamily",
+    "TrajectorySpec",
     "get_family",
     "list_families",
+    "get_timedep_family",
+    "list_timedep_families",
 ]

@@ -10,6 +10,7 @@ from repro.pde.helmholtz import HelmholtzFamily
 from repro.pde.poisson import PoissonFamily
 from repro.pde.problems import ProblemFamily
 from repro.pde.thermal import ThermalFamily
+from repro.pde.timedep import ConvDiffTimeFamily, HeatTimeFamily, TimeDepFamily
 
 _FAMILIES: Dict[str, Type[ProblemFamily]] = {
     "darcy": DarcyFamily,
@@ -19,12 +20,30 @@ _FAMILIES: Dict[str, Type[ProblemFamily]] = {
     "convdiff": ConvDiffFamily,  # beyond-paper nonsymmetric family
 }
 
+# Time-dependent trajectory workloads (pde/timedep.py): θ-scheme implicit
+# steppers consumed by core/trajectory.py rather than core/skr.py.
+_TIMEDEP_FAMILIES: Dict[str, Type[TimeDepFamily]] = {
+    "heat": HeatTimeFamily,
+    "convdiff-t": ConvDiffTimeFamily,
+}
+
 
 def list_families():
     return sorted(_FAMILIES)
+
+
+def list_timedep_families():
+    return sorted(_TIMEDEP_FAMILIES)
 
 
 def get_family(name: str, **kwargs) -> ProblemFamily:
     if name not in _FAMILIES:
         raise KeyError(f"unknown problem family {name!r}; have {list_families()}")
     return _FAMILIES[name](**kwargs)
+
+
+def get_timedep_family(name: str, **kwargs) -> TimeDepFamily:
+    if name not in _TIMEDEP_FAMILIES:
+        raise KeyError(f"unknown time-dependent family {name!r}; "
+                       f"have {list_timedep_families()}")
+    return _TIMEDEP_FAMILIES[name](**kwargs)

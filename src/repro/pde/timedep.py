@@ -1,0 +1,295 @@
+"""Time-dependent PDE workloads: θ-scheme implicit time stepping over the
+existing 5-point spatial operators (the trajectory-datagen subsystem).
+
+Sequences of implicit time-stepping solves are the textbook sweet spot for
+Krylov subspace recycling: within one trajectory the system matrix
+
+    A_t = I + θ Δt L(t_{n+1})            (θ-scheme, mass matrix = I)
+
+drifts SLOWLY with t (time-varying coefficients), so the GCRO-DR recycle
+space carried from step n is near-invariant for step n+1 — no sorting needed
+inside a trajectory, the physics already orders the systems. Each implicit
+step solves
+
+    (I + θ Δt L_{n+1}) u_{n+1} = (I − (1−θ) Δt L_n) u_n
+                                 + Δt (θ f_{n+1} + (1−θ) f_n)
+
+with θ = 1 (backward Euler, O(Δt)) or θ = 1/2 (Crank–Nicolson, O(Δt²)).
+L(t) is any 5-point `Stencil5` spatial operator in the POSITIVE-definite
+convention (L = −∇·(K∇·) + convection), so A_t is an M-matrix shifted by
+identity — far better conditioned than L itself.
+
+A `TimeDepFamily` plays the role `ProblemFamily` plays for steady systems:
+it samples per-trajectory latents (`TrajectorySpec` pytrees: initial
+condition, coefficient latents, sorting features) and exports each time step
+as a `Stencil5`-operator linear system. Everything is vmap-safe, so the
+lockstep engine in `core/trajectory.py` advances W trajectories through one
+batched device program per step. Time enters `step_system` as a TRACED
+scalar: one jitted step executable serves every step of every trajectory.
+
+Families registered in `pde/registry.py`:
+  heat        ∂u/∂t = ∇·(K(x,y,t)∇u),  K = exp(σ g(t)) with the GRF latent
+              g(t) drifting linearly between two endpoint fields g₀ → g₁
+  convdiff-t  ∂u/∂t = ν∇²u − v(x,y,t)·∇u, v = a rigidly ROTATING copy of a
+              GRF-stream-function velocity field (first-order upwind —
+              nonsymmetric A_t, M-matrix preserved)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.pde.dia import Stencil5, stencil5_matvec, zero_boundary_neighbors
+from repro.pde.grf import GRFSpec, sample_grf
+from repro.pde.problems import ProblemFamily
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class TrajectorySpec:
+    """One sampled trajectory: IC + coefficient latents + metadata.
+
+    u0        : (nx, ny) initial condition
+    latent    : family-specific pytree the spatial operator L(t) is built
+                from (e.g. the two endpoint GRF fields of the heat drift)
+    features  : (f,) sorting features at t = 0 — IC latent + operator
+                latent, what `core/sorting.py` measures trajectory
+                similarity on (adjacent trajectories share recycle spaces)
+    no_input  : (nx, ny) static neural-operator conditioning channel
+                (e.g. K(·, 0) for heat); the state u_t is the other channel
+    """
+
+    u0: jax.Array
+    latent: Any
+    features: jax.Array
+    no_input: jax.Array
+
+    def tree_flatten(self):
+        return (self.u0, self.latent, self.features, self.no_input), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+def assemble_diffusion_stencil(k_field: jax.Array, hx: float, hy: float) -> jax.Array:
+    """(5, nx, ny) coeffs of L = −∇·(K∇·) on the NODE-centred Dirichlet-0
+    grid (x_i = i·hx, i = 1..nx): interior faces take harmonic-mean
+    transmissibilities, wall faces the node's own K. With K ≡ 1 this reduces
+    EXACTLY to the standard 5-point Laplacian — the property the θ-scheme
+    order-of-accuracy test keys on (discrete sine eigenvectors)."""
+    def harmonic(a, b):
+        return 2.0 * a * b / (a + b)
+
+    kx_face = harmonic(k_field[:-1, :], k_field[1:, :])
+    ky_face = harmonic(k_field[:, :-1], k_field[:, 1:])
+    kx_n = jnp.concatenate([k_field[:1, :], kx_face], axis=0)
+    kx_s = jnp.concatenate([kx_face, k_field[-1:, :]], axis=0)
+    ky_w = jnp.concatenate([k_field[:, :1], ky_face], axis=1)
+    ky_e = jnp.concatenate([ky_face, k_field[:, -1:]], axis=1)
+
+    cx = 1.0 / hx**2
+    cy = 1.0 / hy**2
+    n = -cx * kx_n
+    s = -cx * kx_s
+    w = -cy * ky_w
+    e = -cy * ky_e
+    c = -(n + s + w + e)
+    return zero_boundary_neighbors(jnp.stack([c, n, s, w, e]))
+
+
+def assemble_upwind_convection(vx: jax.Array, vy: jax.Array, nu: float,
+                               hx: float, hy: float) -> jax.Array:
+    """(5, nx, ny) coeffs of L = −ν∇² + v·∇ with first-order upwinding
+    (M-matrix for any v; nonsymmetry scales with the Péclet number)."""
+    cx = nu / hx**2
+    cy = nu / hy**2
+    axp = jnp.maximum(vx, 0.0) / hx
+    axm = jnp.maximum(-vx, 0.0) / hx
+    ayp = jnp.maximum(vy, 0.0) / hy
+    aym = jnp.maximum(-vy, 0.0) / hy
+    n = -(cx + axp)
+    s = -(cx + axm)
+    w = -(cy + ayp)
+    e = -(cy + aym)
+    c = 2.0 * (cx + cy) + axp + axm + ayp + aym
+    return zero_boundary_neighbors(jnp.stack([c, n, s, w, e]))
+
+
+class TimeDepFamily(ProblemFamily):
+    """Base class for trajectory workloads (the time-dependent analogue of
+    `ProblemFamily`). Subclasses implement `sample_spec` and
+    `spatial_coeffs(latent, t)`; the θ-scheme export is shared.
+
+    nt / dt / theta are trajectory-level constants: every trajectory in a
+    dataset marches the same nt steps of size dt (what keeps the lockstep
+    rows of `core/trajectory.py` aligned across chunks)."""
+
+    name = "timedep-base"
+
+    def __init__(self, nx: int, ny: int, nt: int = 10, dt: float = 1e-3,
+                 theta: float = 1.0):
+        super().__init__(nx, ny)
+        assert nt >= 1 and dt > 0.0 and 0.0 < theta <= 1.0
+        self.nt = int(nt)
+        self.dt = float(dt)
+        self.theta = float(theta)
+        self._step1 = None
+        self._stepB = None
+
+    @property
+    def t_end(self) -> float:
+        return self.nt * self.dt
+
+    # -- family hooks ----------------------------------------------------
+    def sample_spec(self, key: jax.Array) -> TrajectorySpec:
+        raise NotImplementedError
+
+    def spatial_coeffs(self, latent, t) -> jax.Array:
+        """(5, nx, ny) coeffs of L(t), positive-definite convention; `t` is
+        a traced scalar (one jitted step serves all steps)."""
+        raise NotImplementedError
+
+    def source(self, latent, t) -> jax.Array:
+        return jnp.zeros((self.nx, self.ny), jnp.float64)
+
+    # -- shared θ-scheme export ------------------------------------------
+    def sample_specs(self, key: jax.Array, num: int) -> TrajectorySpec:
+        keys = jax.random.split(key, num)
+        return jax.vmap(self.sample_spec)(keys)
+
+    def step_system(self, latent, u_prev: jax.Array, t_old, t_new
+                    ) -> Tuple[jax.Array, jax.Array]:
+        """One implicit θ-step as a linear system.
+
+        Returns (a_coeffs (5, nx, ny), b (nx, ny)) with
+            A = I + θ Δt L(t_new)
+            b = u − (1−θ) Δt L(t_old) u + Δt (θ f(t_new) + (1−θ) f(t_old)).
+        """
+        th = self.theta
+        dt = t_new - t_old
+        l_new = self.spatial_coeffs(latent, t_new)
+        a = th * dt * l_new
+        a = a.at[Stencil5.C].add(1.0)
+        b = u_prev + dt * (th * self.source(latent, t_new)
+                           + (1.0 - th) * self.source(latent, t_old))
+        if th < 1.0:
+            l_old = self.spatial_coeffs(latent, t_old)
+            b = b - (1.0 - th) * dt * stencil5_matvec(l_old, u_prev)
+        return a, b
+
+    def step_fn(self):
+        """Jitted single-trajectory step (cached on the instance, so repeated
+        datagen runs over one family reuse the executable)."""
+        if self._step1 is None:
+            self._step1 = jax.jit(self.step_system)
+        return self._step1
+
+    def step_fn_batched(self):
+        """Jitted vmapped step: (specs latent, u (W, nx, ny), t, t') — the
+        lockstep engine's one-device-program-per-step builder."""
+        if self._stepB is None:
+            self._stepB = jax.jit(jax.vmap(self.step_system,
+                                           in_axes=(0, 0, None, None)))
+        return self._stepB
+
+
+class HeatTimeFamily(TimeDepFamily):
+    """Heat / diffusion trajectories with DRIFTING log-normal conductivity:
+
+        ∂u/∂t = ∇·(K(x,y,t)∇u),  K(t) = exp(σ g(t)),
+        g(t) = (1 − t/T) g₀ + (t/T) g₁   (two endpoint GRFs)
+
+    σ = 0 degenerates to the constant-coefficient heat equation (K ≡ 1) —
+    the analytically solvable case the order-of-accuracy test uses. The
+    slow K-drift is exactly the A_t perturbation regime recycling targets.
+    """
+
+    name = "heat"
+
+    def __init__(self, nx: int = 32, ny: int = 32, nt: int = 10,
+                 dt: float = 2e-3, theta: float = 1.0, sigma: float = 0.8,
+                 alpha: float = 2.5, tau: float = 7.0, ic_amp: float = 1.0):
+        super().__init__(nx, ny, nt=nt, dt=dt, theta=theta)
+        self.sigma = float(sigma)
+        self.ic_amp = float(ic_amp)
+        self.spec = GRFSpec(nx=nx, ny=ny, alpha=alpha, tau=tau, scale=nx**1.5)
+        self.hx = 1.0 / (nx + 1)
+        self.hy = 1.0 / (ny + 1)
+
+    def sample_spec(self, key: jax.Array) -> TrajectorySpec:
+        k0, k1, kic = jax.random.split(key, 3)
+        g0, f0 = sample_grf(self.spec, k0)
+        g1, f1 = sample_grf(self.spec, k1)
+        g0 = g0 / (jnp.std(g0) + 1e-12)
+        g1 = g1 / (jnp.std(g1) + 1e-12)
+        ic, fic = sample_grf(self.spec, kic)
+        u0 = self.ic_amp * ic / (jnp.std(ic) + 1e-12)
+        feats = jnp.concatenate([fic, f0])  # IC + t=0 operator latents
+        return TrajectorySpec(
+            u0=u0,
+            latent=(g0, g1),
+            features=feats,
+            no_input=jnp.exp(self.sigma * g0),
+        )
+
+    def spatial_coeffs(self, latent, t) -> jax.Array:
+        g0, g1 = latent
+        s = t / self.t_end
+        k_field = jnp.exp(self.sigma * ((1.0 - s) * g0 + s * g1))
+        return assemble_diffusion_stencil(k_field, self.hx, self.hy)
+
+
+class ConvDiffTimeFamily(TimeDepFamily):
+    """Convection–diffusion trajectories with a ROTATING velocity field:
+
+        ∂u/∂t = ν∇²u − v(x,y,t)·∇u,
+        v(t) = R(ω t) v₀,  v₀ = rot(GRF stream function), first-order upwind
+
+    The pointwise rigid rotation of v₀ slowly reshapes the (nonsymmetric)
+    upwind stencil every step — the nonsymmetric drift workload. (Rotation
+    of the components does not preserve ∇·v = 0 exactly; upwinding keeps the
+    M-matrix property for ANY v, so stability is unaffected.)
+    """
+
+    name = "convdiff-t"
+
+    def __init__(self, nx: int = 32, ny: int = 32, nt: int = 10,
+                 dt: float = 2e-3, theta: float = 1.0, nu: float = 1.0,
+                 vmax: float = 30.0, omega: float = jnp.pi / 4,
+                 ic_amp: float = 1.0):
+        super().__init__(nx, ny, nt=nt, dt=dt, theta=theta)
+        self.nu = float(nu)
+        self.vmax = float(vmax)
+        self.omega = float(omega)
+        self.ic_amp = float(ic_amp)
+        self.spec = GRFSpec(nx=nx, ny=ny, alpha=3.0, tau=8.0, scale=nx**1.5)
+        self.hx = 1.0 / (nx + 1)
+        self.hy = 1.0 / (ny + 1)
+
+    def sample_spec(self, key: jax.Array) -> TrajectorySpec:
+        kv, kic = jax.random.split(key)
+        psi, fpsi = sample_grf(self.spec, kv)
+        psi = psi / (jnp.std(psi) + 1e-12)
+        vx = jnp.gradient(psi, self.hy, axis=1)
+        vy = -jnp.gradient(psi, self.hx, axis=0)
+        scale = self.vmax / (jnp.max(jnp.sqrt(vx**2 + vy**2)) + 1e-12)
+        ic, fic = sample_grf(self.spec, kic)
+        u0 = self.ic_amp * ic / (jnp.std(ic) + 1e-12)
+        feats = jnp.concatenate([fic, fpsi])
+        return TrajectorySpec(
+            u0=u0,
+            latent=(vx * scale, vy * scale),
+            features=feats,
+            no_input=psi,
+        )
+
+    def spatial_coeffs(self, latent, t) -> jax.Array:
+        vx0, vy0 = latent
+        c, s = jnp.cos(self.omega * t), jnp.sin(self.omega * t)
+        vx = c * vx0 - s * vy0
+        vy = s * vx0 + c * vy0
+        return assemble_upwind_convection(vx, vy, self.nu, self.hx, self.hy)

@@ -111,3 +111,31 @@ def test_relative_l2_metric():
     a = jnp.ones((2, 4, 4, 1))
     assert float(relative_l2(a, a)) < 1e-9
     assert abs(float(relative_l2(0 * a, a)) - 1.0) < 1e-6
+
+
+def test_rollout_channels_and_autoregression():
+    """add_rollout_channels layout + fno_rollout feeds predictions back
+    (the autoregressive consumer of pde/timedep.py trajectories)."""
+    from repro.operators.fno import add_rollout_channels, fno_rollout
+
+    u = jnp.asarray(np.random.default_rng(0).standard_normal((2, 16, 16)))
+    cond = jnp.ones((2, 16, 16))
+    x = add_rollout_channels(u, cond)
+    assert x.shape == (2, 16, 16, 4)
+    np.testing.assert_array_equal(np.asarray(x[..., 0]), np.asarray(u))
+    np.testing.assert_array_equal(np.asarray(x[..., 1]), np.asarray(cond))
+    # coordinate channels span [0, 1] along their own axis only
+    np.testing.assert_allclose(np.asarray(x[0, :, 0, 2]),
+                               np.linspace(0, 1, 16), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(x[0, 0, :, 3]),
+                               np.linspace(0, 1, 16), atol=1e-7)
+
+    cfg = FNOConfig(modes=4, width=8, n_blocks=2, in_channels=4)
+    params = fno_init(jax.random.PRNGKey(0), cfg)
+    traj = fno_rollout(params, cfg, u, cond, steps=3)
+    assert traj.shape == (2, 3, 16, 16)
+    assert jnp.isfinite(traj).all()
+    # step s+1 is the model applied to step s — autoregression, not a batch
+    step2 = fno_apply(params, cfg, add_rollout_channels(traj[:, 1], cond))
+    np.testing.assert_allclose(np.asarray(traj[:, 2]),
+                               np.asarray(step2[..., 0]), atol=1e-10)
