@@ -7,10 +7,17 @@ chunks in lockstep (one vmapped device program per cycle row), amortizing
 dispatch + host round-trip latency across the batch. Reported: wall-clock
 for the whole dataset, per-system averages, and the batched speedup.
 
+A third set of rows runs the batched engine with the mixed-precision
+policy (`inner_dtype="float32"`: fp32 inner cycles under an fp64
+iterative-refinement outer loop — see benchmarks/mixed_precision.py for
+the dedicated accuracy/throughput sweep) so the datagen-level speedup of
+the precision axis is tracked next to the engine speedup.
+
 Run:  PYTHONPATH=src python -m benchmarks.batched_solver [--quick]
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -45,8 +52,10 @@ def run(quick: bool = False):
     batches = (4,) if quick else BATCHES
     kc = KrylovConfig(m=30, k=10, tol=TOL, maxiter=10_000)
     cfg = SKRConfig(krylov=kc, sort_method="greedy", precond="jacobi")
+    cfg32 = dataclasses.replace(
+        cfg, krylov=dataclasses.replace(kc, inner_dtype="float32"))
     csv = CSV(["family", "B", "engine", "wall_s", "per_system_ms",
-               "mean_iters", "converged", "batched_speedup"])
+               "mean_iters", "converged", "speedup_vs_seq"])
 
     wins = []
     for family in FAMILIES:
@@ -54,17 +63,22 @@ def run(quick: bool = False):
         for b in batches:
             ws, its, cs = _timed_run(fam, num, cfg, b, "sequential")
             wb, itb, cb = _timed_run(fam, num, cfg, b, "batched")
+            w32, it32, c32 = _timed_run(fam, num, cfg32, b, "batched")
             csv.row(family, b, "sequential", f"{ws:.3f}",
                     f"{1e3 * ws / num:.2f}", f"{its:.1f}", cs, "-")
             csv.row(family, b, "batched", f"{wb:.3f}",
                     f"{1e3 * wb / num:.2f}", f"{itb:.1f}", cb,
                     f"{ws / wb:.2f}x")
-            wins.append((family, b, ws / wb))
+            csv.row(family, b, "batched-fp32", f"{w32:.3f}",
+                    f"{1e3 * w32 / num:.2f}", f"{it32:.1f}", c32,
+                    f"{ws / w32:.2f}x")
+            wins.append((family, b, ws / wb, wb / w32))
     csv.emit("Batched lockstep vs per-system chunked SKR datagen "
              f"(grid {NX}x{NX}, {num} systems, tol {TOL:g})")
-    for family, b, speedup in wins:
+    for family, b, speedup, sp32 in wins:
         flag = "OK" if speedup > 1.0 else "SLOWER"
-        print(f"  {family} B={b}: batched {speedup:.2f}x [{flag}]")
+        print(f"  {family} B={b}: batched {speedup:.2f}x [{flag}], "
+              f"fp32-inner a further {sp32:.2f}x over batched-f64")
     return wins
 
 

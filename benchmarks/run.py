@@ -6,6 +6,8 @@
   stability_fig13      Fig 13   (max-iteration saturation fractions)
   parallel_e22         Table 31 (chunk-parallel SKR, both engines)
   batched_solver       lockstep batched vs per-system chunked datagen
+  mixed_precision      fp32-inner + fp64 refinement vs fp64 baseline
+                       (precision-policy tentpole; lockstep engine)
   trajectory_recycle   time-dependent θ-stepping: recycled vs cold-start,
                        sequential vs lockstep trajectory engines
   table33_no_training  Table 33 (FNO on SKR vs GMRES data)
@@ -24,10 +26,10 @@ import json
 import os
 import time
 
-from benchmarks import (batched_solver, convergence_fig11, parallel_e22,
-                        roofline_report, stability_fig13, table1_speedup,
-                        table2_sort_ablation, table33_no_training,
-                        trajectory_recycle)
+from benchmarks import (batched_solver, convergence_fig11, mixed_precision,
+                        parallel_e22, roofline_report, stability_fig13,
+                        table1_speedup, table2_sort_ablation,
+                        table33_no_training, trajectory_recycle)
 
 BENCHES = [
     ("table1_speedup", table1_speedup.run),
@@ -36,6 +38,7 @@ BENCHES = [
     ("stability_fig13", stability_fig13.run),
     ("parallel_e22", parallel_e22.run),
     ("batched_solver", batched_solver.run),
+    ("mixed_precision", mixed_precision.run),
     ("trajectory_recycle", trajectory_recycle.run),
     ("table33_no_training", table33_no_training.run),
     ("roofline_report", roofline_report.run),
@@ -82,6 +85,7 @@ def main(argv=None) -> int:
                     help="skip writing results/BENCH_<name>.json")
     args = ap.parse_args(argv)
 
+    failed = []
     for name, fn in BENCHES:
         if args.only and name != args.only:
             continue
@@ -92,6 +96,14 @@ def main(argv=None) -> int:
         print(f"[{name}: {wall:.1f}s]")
         if not args.no_artifacts:
             _write_artifact(name, wall, args.quick, metrics)
+        # benches may publish an acceptance verdict under metrics["ok"]
+        # (e.g. mixed_precision's speedup/accuracy gate) — propagate it so
+        # CI's quick-verify job actually fails on a regression
+        if isinstance(metrics, dict) and metrics.get("ok") is False:
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED acceptance gates: {', '.join(failed)}")
+        return 1
     return 0
 
 

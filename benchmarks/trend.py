@@ -1,0 +1,110 @@
+"""Cross-PR benchmark trend report.
+
+`benchmarks/run.py` writes one machine-readable ``results/BENCH_<name>.json``
+artifact per bench (name, wall time, quick flag, headline metrics). This
+module folds EVERY artifact currently in ``results/`` into a single
+``results/TREND.md`` — a summary table plus per-bench metric dumps — so the
+perf trajectory is reviewable in-repo PR over PR (the artifacts are
+committed; CI regenerates the report and uploads both as build artifacts).
+
+Run:  PYTHONPATH=src python -m benchmarks.trend [--results-dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def _headline(metrics) -> str:
+    """Best-effort one-line summary of a bench's metrics payload."""
+    if isinstance(metrics, dict):
+        if "best_speedup" in metrics:
+            return f"best speedup {metrics['best_speedup']}x"
+        per_key = {k: v["speedup"] for k, v in metrics.items()
+                   if isinstance(v, dict) and "speedup" in v}
+        if per_key:
+            return ", ".join(f"{k} {v}x" for k, v in sorted(per_key.items()))
+        scalars = {k: v for k, v in metrics.items()
+                   if isinstance(v, (int, float, str, bool))}
+        if scalars:
+            return ", ".join(f"{k}={v}" for k, v in
+                             sorted(scalars.items())[:4])
+        return f"{len(metrics)} metric groups"
+    if isinstance(metrics, list):
+        return f"{len(metrics)} rows"
+    return str(metrics)[:60] if metrics is not None else "-"
+
+
+def load_artifacts(results_dir: str) -> list[dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                art = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            arts.append({"name": os.path.basename(path), "error": str(e)})
+            continue
+        art["_file"] = os.path.basename(path)
+        arts.append(art)
+    return arts
+
+
+def render(arts: list[dict]) -> str:
+    lines = [
+        "# Benchmark trend",
+        "",
+        "Folded from the committed `results/BENCH_<name>.json` artifacts "
+        "(one per bench, refreshed by `python -m benchmarks.run`; this file "
+        "by `python -m benchmarks.trend`). Wall times are per-box numbers — "
+        "the tracked quantities across PRs are the RATIOS.",
+        "",
+        "| bench | mode | wall_s | headline |",
+        "| --- | --- | --- | --- |",
+    ]
+    for art in arts:
+        if "error" in art:
+            lines.append(f"| {art['name']} | - | - | unreadable: "
+                         f"{art['error']} |")
+            continue
+        mode = "quick" if art.get("quick") else "full"
+        lines.append(f"| {art.get('name', '?')} | {mode} | "
+                     f"{art.get('wall_s', '-')} | "
+                     f"{_headline(art.get('metrics'))} |")
+    lines.append("")
+    for art in arts:
+        if "error" in art:
+            continue
+        lines.append(f"## {art.get('name', '?')}")
+        lines.append("")
+        lines.append("```json")
+        lines.append(json.dumps(art.get("metrics"), indent=2, sort_keys=True))
+        lines.append("```")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    args = ap.parse_args(argv)
+    arts = load_artifacts(args.results_dir)
+    if not arts:
+        print(f"no BENCH_*.json artifacts under {args.results_dir}")
+        return 1
+    out = os.path.join(args.results_dir, "TREND.md")
+    tmp = out + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(render(arts))
+        f.write("\n")
+    os.replace(tmp, out)
+    print(f"[trend: {os.path.relpath(out)} — {len(arts)} benches]")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,6 +42,13 @@ Batched execution (`generate_dataset_chunked`, engine="batched"):
   * workers=1 (or engine="sequential") routes through the per-system
     sequential loop — bitwise-identical to `SKRGenerator.generate` on the
     same key, and the paper-parity baseline the benchmarks compare against.
+
+Precision policy: set `SKRConfig.krylov.inner_dtype="float32"` to run the
+inner Krylov machinery of BOTH engines in fp32 (the solvers wrap it in an
+fp64 iterative-refinement outer loop — see solvers/gcrodr.py). The
+operators/RHS of record and the emitted dataset labels stay fp64 at
+`cfg.tol`; the recycle carry is stored fp32, halving the datagen
+checkpoint footprint (`ckpt_every` snapshots include the carry).
 """
 from __future__ import annotations
 

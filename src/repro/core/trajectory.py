@@ -30,6 +30,15 @@ RHS modes:
              semantics the absolute target scales with ‖b − A u_n‖, so the
              marched trajectory matches "full" to solver tolerance while
              typically shaving iterations near steady state.
+
+Precision policy: set `TrajConfig.krylov.inner_dtype="float32"` to run
+every implicit step's Arnoldi cycles, preconditioner applies and
+recycle-space updates in fp32 (both engines — the solvers implement the
+fp64 iterative-refinement outer loop internally). The θ-scheme assembly,
+the marched fields u_t, the emitted trajectory labels and the increment
+RHS b − A u_n all stay fp64; the recycle carry ridden across time steps
+and trajectory boundaries is stored fp32 — including in checkpoints, so a
+resumed run continues the fp32 chain exactly.
 """
 from __future__ import annotations
 

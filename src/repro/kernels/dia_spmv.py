@@ -5,6 +5,13 @@ non-stencil operators). The wrapper pre-pads x by the maximum |offset| so
 every in-kernel load is in range: per output tile the kernel reads one
 aligned x slice per diagonal and accumulates coeff·slice — unit-stride VPU
 work, no gather (DESIGN §4.1).
+
+Dtype-polymorphic: the accumulator and output carry
+result_type(data, x) — fp32 operands stay fp32 end to end (the
+mixed-precision inner cycles), nothing assumes f64. Ragged n is padded up
+to a multiple of the block size with zero diagonals/entries (masked tail)
+instead of shrinking the block to a divisor of n, which degraded to a
+one-element grid step for prime-ish n.
 """
 from __future__ import annotations
 
@@ -13,6 +20,27 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+_MAX_GRID_STEPS = 65536
+_LANE = 128
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def padded_tiles(n: int, block_n: int, what: str, steps_factor: int = 1):
+    """(bn, n_pad, nt) for a padded 1-D tiling of n — never a degenerate
+    divisor fallback; fails loudly past the grid-step sanity cap. Shared by
+    every 1-D-tiled kernel (here and fused_orthog); `steps_factor` is the
+    kernel's grid steps per tile (e.g. 3 phases)."""
+    bn = min(block_n, _round_up(n, _LANE))
+    n_pad = _round_up(n, bn)
+    nt = n_pad // bn
+    if nt * steps_factor > _MAX_GRID_STEPS:
+        raise ValueError(f"{what} grid of {nt} steps (n={n}, block_n={bn}) "
+                         f"exceeds the sanity cap {_MAX_GRID_STEPS}")
+    return bn, n_pad, nt
 
 
 def _kernel(data_ref, xpad_ref, o_ref, *, offsets, pad, bn):
@@ -36,24 +64,25 @@ def dia_spmv_pallas(offsets, data: jax.Array, x: jax.Array, *,
     """
     n = x.shape[0]
     pad = max(1, max(abs(o) for o in offsets))
-    bn = min(block_n, n)
-    while n % bn:
-        bn -= 1
-    nt = n // bn
-    xpad = jnp.pad(x, (pad, pad))
+    bn, n_pad, nt = padded_tiles(n, block_n, "dia_spmv")
+    if n_pad != n:
+        data = jnp.pad(data, ((0, 0), (0, n_pad - n)))
+    xpad = jnp.pad(x, (pad, pad + (n_pad - n)))
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
 
-    return pl.pallas_call(
+    y = pl.pallas_call(
         functools.partial(_kernel, offsets=tuple(offsets), pad=pad, bn=bn),
         grid=(nt,),
         in_specs=[
             pl.BlockSpec((len(offsets), bn), lambda t: (0, t)),
             # full padded x resident in VMEM (solver vectors are ≤ O(100k))
-            pl.BlockSpec((n + 2 * pad,), lambda t: (0,)),
+            pl.BlockSpec((n_pad + 2 * pad,), lambda t: (0,)),
         ],
         out_specs=pl.BlockSpec((bn,), lambda t: (t,)),
-        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), out_dtype),
         interpret=interpret,
     )(data, xpad)
+    return y[:n]
 
 
 def _kernel_batched(data_ref, xpad_ref, o_ref, *, offsets, pad, bn):
@@ -85,21 +114,25 @@ def dia_spmv_batched_pallas(offsets, data: jax.Array, x: jax.Array, *,
     """
     bsz, _, n = data.shape
     pad = max(1, max(abs(o) for o in offsets))
-    bn = min(block_n, n)
-    while n % bn:
-        bn -= 1
-    nt = n // bn
-    xpad = jnp.pad(x, ((0, 0), (pad, pad)))
+    bn, n_pad, nt = padded_tiles(n, block_n, "dia_spmv_batched")
+    if bsz * nt > _MAX_GRID_STEPS:
+        raise ValueError(f"dia_spmv_batched grid of {bsz}x{nt} steps exceeds "
+                         f"the sanity cap {_MAX_GRID_STEPS}")
+    if n_pad != n:
+        data = jnp.pad(data, ((0, 0), (0, 0), (0, n_pad - n)))
+    xpad = jnp.pad(x, ((0, 0), (pad, pad + (n_pad - n))))
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
 
-    return pl.pallas_call(
+    y = pl.pallas_call(
         functools.partial(_kernel_batched, offsets=tuple(offsets), pad=pad,
                           bn=bn),
         grid=(bsz, nt),
         in_specs=[
             pl.BlockSpec((1, len(offsets), bn), lambda b, t: (b, 0, t)),
-            pl.BlockSpec((1, n + 2 * pad), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, n_pad + 2 * pad), lambda b, t: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, bn), lambda b, t: (b, t)),
-        out_shape=jax.ShapeDtypeStruct((bsz, n), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_pad), out_dtype),
         interpret=interpret,
     )(data, xpad)
+    return y[:, :n]

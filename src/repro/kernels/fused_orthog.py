@@ -26,8 +26,9 @@ def _kernel(v_ref, w_ref, mask_ref, wout_ref, h_ref, h1_s, h2_s):
     phase = pl.program_id(0)
     t = pl.program_id(1)
     nt = pl.num_programs(1)
-    v = v_ref[...]        # (m1, bn)
+    v = v_ref[...]        # (m1, bn) storage dtype
     mask = mask_ref[...]  # (m1,)
+    acc = h1_s.dtype      # accumulation dtype (== storage unless widened)
 
     @pl.when(jnp.logical_and(phase == 0, t == 0))
     def _init():
@@ -36,31 +37,46 @@ def _kernel(v_ref, w_ref, mask_ref, wout_ref, h_ref, h1_s, h2_s):
 
     @pl.when(phase == 0)
     def _p0():
-        h1_s[...] += mask * (v @ w_ref[...])
+        h1_s[...] += (mask * (v @ w_ref[...])).astype(acc)
 
     @pl.when(phase == 1)
     def _p1():
-        w1 = w_ref[...] - v.T @ h1_s[...]
+        w1 = w_ref[...] - v.T @ h1_s[...].astype(v.dtype)
         wout_ref[...] = w1
-        h2_s[...] += mask * (v @ w1)
+        h2_s[...] += (mask * (v @ w1)).astype(acc)
 
     @pl.when(phase == 2)
     def _p2():
-        wout_ref[...] = wout_ref[...] - v.T @ h2_s[...]
+        wout_ref[...] = wout_ref[...] - v.T @ h2_s[...].astype(v.dtype)
         @pl.when(t == nt - 1)
         def _emit():
-            h_ref[...] = h1_s[...] + h2_s[...]
+            h_ref[...] = (h1_s[...] + h2_s[...]).astype(h_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n",
+                                             "acc_dtype"))
 def fused_orthog_pallas(v_basis: jax.Array, w: jax.Array, mask: jax.Array, *,
-                        interpret: bool = True, block_n: int = 2048):
-    """v_basis (m1, n), w (n,), mask (m1,) → (w_orth (n,), h (m1,))."""
+                        interpret: bool = True, block_n: int = 2048,
+                        acc_dtype=None):
+    """v_basis (m1, n), w (n,), mask (m1,) → (w_orth (n,), h (m1,)).
+
+    Ragged n is handled by padding up to a multiple of the block size with
+    ZERO columns (a masked tail): zero basis columns contribute nothing to
+    h, and the padded slice of w_orth is discarded. This keeps the block
+    size at the requested tile (the old fallback shrank bn until it divided
+    n — degrading to bn = 1, one grid step per element, for prime-ish n).
+
+    acc_dtype: widen ONLY the h accumulation scratch (fp32 storage / fp64
+    accumulate); outputs stay in w.dtype.
+    """
+    from repro.kernels.dia_spmv import padded_tiles
+
     m1, n = v_basis.shape
-    bn = min(block_n, n)
-    while n % bn:
-        bn -= 1
-    nt = n // bn
+    bn, n_pad, nt = padded_tiles(n, block_n, "fused_orthog", steps_factor=3)
+    if n_pad != n:
+        v_basis = jnp.pad(v_basis, ((0, 0), (0, n_pad - n)))
+        w = jnp.pad(w, (0, n_pad - n))
+    acc = jnp.dtype(acc_dtype) if acc_dtype is not None else w.dtype
 
     wout, h = pl.pallas_call(
         _kernel,
@@ -75,13 +91,13 @@ def fused_orthog_pallas(v_basis: jax.Array, w: jax.Array, mask: jax.Array, *,
             pl.BlockSpec((m1,), lambda p, t: (0,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((n_pad,), w.dtype),
             jax.ShapeDtypeStruct((m1,), w.dtype),
         ],
         scratch_shapes=[
-            pltpu.VMEM((m1,), w.dtype),
-            pltpu.VMEM((m1,), w.dtype),
+            pltpu.VMEM((m1,), acc),
+            pltpu.VMEM((m1,), acc),
         ],
         interpret=interpret,
     )(v_basis, w, mask)
-    return wout, h
+    return wout[:n], h

@@ -57,17 +57,22 @@ def dia_spmv(dia, x: jax.Array, *, use_kernel: bool = False,
 
 
 def fused_orthog(v_basis: jax.Array, w: jax.Array, mask: jax.Array, *,
-                 use_kernel: bool = False, interpret: bool = True):
+                 use_kernel: bool = False, interpret: bool = True,
+                 acc_dtype=None):
     """CGS2 projection: orthogonalize w against the masked rows of v_basis.
 
     Returns (w_orth, h) with h the combined projection coefficients —
     the Arnoldi inner-loop hot spot after the matvec (DESIGN §4.4).
+    Dtype-polymorphic: runs in the storage dtype of (v_basis, w); pass
+    acc_dtype (e.g. jnp.float64 under fp32 storage) to widen ONLY the
+    accumulation (KrylovConfig.cgs2_acc="float64").
     """
     if use_kernel:
         from repro.kernels.fused_orthog import fused_orthog_pallas
 
-        return fused_orthog_pallas(v_basis, w, mask, interpret=interpret)
-    return ref.fused_orthog(v_basis, w, mask)
+        return fused_orthog_pallas(v_basis, w, mask, interpret=interpret,
+                                   acc_dtype=acc_dtype)
+    return ref.fused_orthog(v_basis, w, mask, acc_dtype=acc_dtype)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -33,13 +33,28 @@ def dia_spmv(offsets, data: jax.Array, x: jax.Array) -> jax.Array:
     return y
 
 
-def fused_orthog(v_basis: jax.Array, w: jax.Array, mask: jax.Array):
+def fused_orthog(v_basis: jax.Array, w: jax.Array, mask: jax.Array,
+                 acc_dtype=None):
     """Two-pass classical Gram-Schmidt (CGS2) against masked rows of v_basis.
 
     v_basis: (m, n) row basis (rows beyond the active count are arbitrary,
     masked out); w: (n,); mask: (m,) float {0,1}.
+    acc_dtype: None accumulates in the storage dtype; a wider dtype (e.g.
+    jnp.float64 under fp32 storage) widens ONLY the dot-product
+    accumulation (operands stay in storage dtype — the same semantics as
+    the Pallas kernel's widened h scratch) and casts the results back —
+    the mixed-precision robustness knob.
     Returns (w_orth, h_total) — h_total: (m,) combined coefficients.
     """
+    if acc_dtype is not None and jnp.dtype(acc_dtype) != w.dtype:
+        acc = jnp.dtype(acc_dtype)
+        h1 = mask.astype(acc) * jnp.matmul(v_basis, w,
+                                           preferred_element_type=acc)
+        w1 = w - v_basis.T @ h1.astype(w.dtype)
+        h2 = mask.astype(acc) * jnp.matmul(v_basis, w1,
+                                           preferred_element_type=acc)
+        w2 = w1 - v_basis.T @ h2.astype(w.dtype)
+        return w2, (h1 + h2).astype(w.dtype)
     h1 = mask * (v_basis @ w)
     w1 = w - v_basis.T @ h1
     h2 = mask * (v_basis @ w1)

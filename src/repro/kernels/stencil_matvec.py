@@ -43,12 +43,16 @@ def _kernel(c_ref, x_ref, xup_ref, xdn_ref, o_ref, *, nx_tiles: int):
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
 def stencil5_matvec_pallas(coeffs: jax.Array, x: jax.Array, *,
                            interpret: bool = True, block_rows: int = 64) -> jax.Array:
-    """coeffs (5, nx, ny) × x (nx, ny) → (nx, ny)."""
+    """coeffs (5, nx, ny) × x (nx, ny) → (nx, ny).
+
+    Dtype-polymorphic: output/accumulation carry result_type(coeffs, x) —
+    fp32 operands (mixed-precision inner cycles) never silently widen."""
     nx, ny = x.shape
     bx = min(block_rows, nx)
     while nx % bx:
         bx -= 1  # largest divisor ≤ block_rows (grids here are powers of two)
     nt = nx // bx
+    out_dtype = jnp.result_type(coeffs.dtype, x.dtype)
 
     return pl.pallas_call(
         functools.partial(_kernel, nx_tiles=nt),
@@ -61,6 +65,6 @@ def stencil5_matvec_pallas(coeffs: jax.Array, x: jax.Array, *,
             pl.BlockSpec((bx, ny), lambda t: (jnp.minimum(t + 1, nt - 1), 0)),
         ],
         out_specs=pl.BlockSpec((bx, ny), lambda t: (t, 0)),
-        out_shape=jax.ShapeDtypeStruct((nx, ny), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((nx, ny), out_dtype),
         interpret=interpret,
     )(coeffs, x, x, x)

@@ -70,15 +70,24 @@ def _mgs(v, w, j, m):
 
 
 def _arnoldi_cycle_impl(op, c_rows, r0, tol_abs, *, m: int, orthog: str = "cgs2",
-                        use_kernel: bool = False) -> CycleResult:
+                        use_kernel: bool = False,
+                        h_acc: str = "native") -> CycleResult:
     """Run ≤ m deflated Arnoldi steps starting from r0.
 
     op      : operator pytree (PreconditionedOp) — applied via apply_op
     c_rows  : (k, n) rows = C_kᴴ (k == 0 for plain GMRES)
     r0      : (n,) current residual (must be ⊥ range(C) for exact res_est)
     tol_abs : absolute residual target (rtol·‖b‖ computed by the caller)
+    h_acc   : "native" accumulates the CGS2 coefficients in r0's dtype;
+              "float64" keeps fp32 basis STORAGE but fp64 ACCUMULATION in
+              the fused orthogonalization (KrylovConfig.cgs2_acc).
+
+    Every array in the cycle carries r0.dtype — the precision-policy layer
+    runs this whole dispatch in fp32 by handing in a casted operator and an
+    fp32 residual; nothing below assumes f64.
     """
     n = r0.shape[0]
+    acc_dtype = jnp.float64 if h_acc == "float64" else None
     k = c_rows.shape[0]
     dt = r0.dtype
     beta = jnp.linalg.norm(r0)
@@ -106,7 +115,8 @@ def _arnoldi_cycle_impl(op, c_rows, r0, tol_abs, *, m: int, orthog: str = "cgs2"
             b_new = b
         if orthog == "cgs2":
             mask = (jnp.arange(m + 1) <= j).astype(dt)
-            w, hcol = kops.fused_orthog(v, w, mask, use_kernel=use_kernel)
+            w, hcol = kops.fused_orthog(v, w, mask, use_kernel=use_kernel,
+                                        acc_dtype=acc_dtype)
         else:
             w, hcol = _mgs(v, w, j, m)
         hj1 = jnp.linalg.norm(w)
@@ -126,14 +136,16 @@ def _arnoldi_cycle_impl(op, c_rows, r0, tol_abs, *, m: int, orthog: str = "cgs2"
     return CycleResult(v=v, h=h, b=b, j_used=j, res_est=res, breakdown=brk)
 
 
-arnoldi_cycle = partial(jax.jit, static_argnames=("m", "orthog", "use_kernel"))(
+arnoldi_cycle = partial(jax.jit,
+                        static_argnames=("m", "orthog", "use_kernel", "h_acc"))(
     _arnoldi_cycle_impl)
 
 
-@partial(jax.jit, static_argnames=("m", "orthog", "use_kernel"))
+@partial(jax.jit, static_argnames=("m", "orthog", "use_kernel", "h_acc"))
 def arnoldi_cycle_batched(ops, c_rows, r0, tol_abs, *, m: int,
                           orthog: str = "cgs2",
-                          use_kernel: bool = False) -> CycleResult:
+                          use_kernel: bool = False,
+                          h_acc: str = "native") -> CycleResult:
     """B independent (deflated) Arnoldi cycles as ONE lockstep dispatch.
 
     ops     : operator pytree with a leading batch axis on every leaf
@@ -146,5 +158,6 @@ def arnoldi_cycle_batched(ops, c_rows, r0, tol_abs, *, m: int,
     exact. A chain entering with ‖r0‖ ≤ tol_abs takes 0 steps — passing
     tol_abs = +inf freezes a chain entirely (the lockstep "mask out" knob).
     """
-    fn = partial(_arnoldi_cycle_impl, m=m, orthog=orthog, use_kernel=use_kernel)
+    fn = partial(_arnoldi_cycle_impl, m=m, orthog=orthog, use_kernel=use_kernel,
+                 h_acc=h_acc)
     return jax.vmap(fn)(ops, c_rows, r0, tol_abs)

@@ -35,9 +35,19 @@ Wall-time accounting: the batch advances as one device program, so each
 returned `SolveStats.wall_time_s` is the LOCKSTEP latency of the whole
 batched solve (identical across chains) — the honest parallel-latency
 number App. E.2.2 reports (max over workers == the shared wall clock).
+
+Precision policy: `cfg.inner_dtype="float32"` routes `solve_batch` through
+`_solve_batch_mixed` — the fp64 outer iterative-refinement loop of the
+sequential solver lifted to lockstep granularity. All B chains share each
+outer pass (converged chains ride along as zero-RHS padding rows); the
+bandwidth-bound inner machinery — vmapped Arnoldi cycles, preconditioner
+applies, recycle-space updates — runs in fp32 at half the HBM traffic,
+while b, the accumulated x and every residual of record stay fp64. The
+per-chain recycle carries are stored fp32.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -47,7 +57,8 @@ import numpy as np
 from repro.solvers import gcrodr as _seq
 from repro.solvers import hostlinalg as hl
 from repro.solvers.arnoldi import arnoldi_cycle_batched
-from repro.solvers.operator import apply_op
+from repro.solvers.gmres import _ir_accum
+from repro.solvers.operator import apply_op, cast_operator
 from repro.solvers.types import KrylovConfig, SolveStats
 
 _TINY = 1e-300
@@ -63,13 +74,25 @@ _next_cu_b = jax.jit(jax.vmap(_seq._next_cu))
 _apply_cols_b = jax.jit(jax.vmap(jax.vmap(apply_op, in_axes=(None, 1),
                                           out_axes=1)))
 _from_z_b = jax.jit(jax.vmap(lambda op, z: op.from_z(z)))
+# outer iterative-refinement step, per chain: x += d (upcast) + true fp64
+# residual of the UNpreconditioned base — one dispatch per outer pass
+_ir_accum_b = jax.jit(jax.vmap(_ir_accum))
+
+
+@jax.jit
+def _downcast_masked(r, need):
+    """fp32 correction right-hand sides: live rows downcast, the rest zero
+    (a zero row is the lockstep engine's own padding no-op)."""
+    return jnp.where(jnp.asarray(need)[:, None], r, 0.0).astype(jnp.float32)
 
 
 @jax.jit
 def _scaled_cols_b(u, dnorm):
-    """Ũ = U / ‖U cols‖ per chain; the clamp keeps masked chains (U = 0)
-    NaN-free — sequential chains never hit it."""
-    return u / jnp.maximum(dnorm[:, None, :], _TINY)
+    """Ũ = U / ‖U cols‖ per chain; the dtype-aware clamp keeps masked chains
+    (U = 0) NaN-free in BOTH precisions (1e-300 underflows to 0 in fp32) —
+    sequential chains never hit it."""
+    tiny = jnp.finfo(dnorm.dtype).tiny
+    return u / jnp.maximum(dnorm[:, None, :], tiny)
 
 
 @jax.jit
@@ -94,7 +117,8 @@ class BatchedGCRODRSolver:
     `gmres_solve` (triggered when any active chain stalls).
     """
 
-    def __init__(self, cfg: KrylovConfig, use_kernel: bool = False):
+    def __init__(self, cfg: KrylovConfig, use_kernel: bool = False,
+                 stall_break: bool = False):
         if cfg.k > 0 and cfg.ritz_refresh != "cycle":
             raise NotImplementedError(
                 "BatchedGCRODRSolver implements the paper-faithful "
@@ -102,14 +126,23 @@ class BatchedGCRODRSolver:
                 "last-cycle snapshots (use the sequential engine)")
         self.cfg = cfg
         self.use_kernel = use_kernel
+        # stall_break: mask out (as stalled) chains whose cycles stop
+        # reducing the residual instead of spinning the lockstep to maxiter
+        # — set by the mixed-precision outer loop on its inner fp32 solver,
+        # where the fp32 round-off floor is an expected exit
+        self.stall_break = stall_break
         self.u_carry: np.ndarray | None = None   # (B, n, k)
         self.carry_ok: np.ndarray | None = None  # (B,) bool
         self.systems_solved = 0
+        self._inner: BatchedGCRODRSolver | None = None    # fp32 correction
+        self._inner64: BatchedGCRODRSolver | None = None  # fp64 fallback
 
     def reset(self):
         self.u_carry = None
         self.carry_ok = None
         self.systems_solved = 0
+        self._inner = None
+        self._inner64 = None
 
     # ------------------------------------------------------------------
     def solve_batch(self, ops, b):
@@ -124,6 +157,8 @@ class BatchedGCRODRSolver:
         Returns (x (B, n) np.ndarray, [SolveStats] * B).
         """
         cfg = self.cfg
+        if cfg.inner_dtype == "float32":
+            return self._solve_batch_mixed(ops, b)
         k = cfg.k
         t0 = time.perf_counter()
         b = jnp.asarray(b)
@@ -141,6 +176,7 @@ class BatchedGCRODRSolver:
         matvecs = np.zeros(bsz, dtype=int)
         cycles = np.zeros(bsz, dtype=int)
         stalled = np.zeros(bsz, dtype=bool)
+        no_prog = np.zeros(bsz, dtype=int)  # stall_break progress counters
 
         c_dev = jnp.zeros((bsz, n, k), dt)
         u_dev = jnp.zeros((bsz, n, k), dt)
@@ -163,7 +199,7 @@ class BatchedGCRODRSolver:
                         inv_rr[i] = np.linalg.inv(rr_np[i])
                     else:
                         ok[i] = False
-                u_new = _mat_post_b(u_old, jnp.asarray(inv_rr))
+                u_new = _mat_post_b(u_old, jnp.asarray(inv_rr, dt))
                 z2, r2, rn2 = _warm_start_b(u_new, q, z, r)
                 z = _sel(ok, z2, z)
                 r = _sel(ok, r2, r)
@@ -188,7 +224,8 @@ class BatchedGCRODRSolver:
                 m = m_fresh
                 cyc = arnoldi_cycle_batched(ops, empty_c, r, eff_tol, m=m,
                                             orthog=cfg.orthog,
-                                            use_kernel=self.use_kernel)
+                                            use_kernel=self.use_kernel,
+                                            h_acc=cfg.cgs2_acc)
                 j = np.asarray(cyc.j_used)
                 step = j > 0
                 if not step[active].any():
@@ -196,11 +233,15 @@ class BatchedGCRODRSolver:
                 h_np = np.asarray(cyc.h)
                 y = hl.hessenberg_lstsq_stacked(h_np, j, rnorm)
                 rprev = rnorm
-                z, r, rn = _fresh_update_b(ops, b, z, cyc.v, jnp.asarray(y))
+                z, r, rn = _fresh_update_b(ops, b, z, cyc.v,
+                                           jnp.asarray(y, dt))
                 rnorm = np.asarray(rn)
                 iters += np.where(step, j, 0)
                 matvecs += np.where(step, j + 1, 0)
                 cycles += step
+                if self.stall_break:
+                    no_prog = np.where(step & (rnorm > 0.99 * rprev),
+                                       no_prog + 1, 0)
 
                 if k > 0:
                     # establish / re-establish recycle spaces per chain
@@ -224,9 +265,9 @@ class BatchedGCRODRSolver:
                         est_new[i] = True
                     if est_new.any():
                         c_new, yk = _fresh_cu_b(cyc.v, cyc.h,
-                                                jnp.asarray(p_pad),
-                                                jnp.asarray(q_pad))
-                        u_new = _mat_post_b(yk, jnp.asarray(inv_rr))
+                                                jnp.asarray(p_pad, dt),
+                                                jnp.asarray(q_pad, dt))
+                        u_new = _mat_post_b(yk, jnp.asarray(inv_rr, dt))
                         c_dev = _sel(est_new, c_new, c_dev)
                         u_dev = _sel(est_new, u_new, u_dev)
                         established |= est_new
@@ -237,15 +278,19 @@ class BatchedGCRODRSolver:
                             & (rnorm > 0.5 * rprev))
                     if grew.any() and m_fresh < m_cap:
                         m_fresh = min(2 * m_fresh, m_cap)
+                        no_prog[:] = 0  # a longer cycle deserves a fresh shot
                     stalled |= (np.asarray(cyc.breakdown) & step
                                 & (rnorm > tol_abs))
+                if self.stall_break:
+                    stalled |= no_prog >= 3
                 continue
 
             # ---- lockstep deflated cycles (Alg. 2 l.19-33) ---------------
             mi = cfg.m - k
             cyc = arnoldi_cycle_batched(ops, jnp.swapaxes(c_dev, 1, 2), r,
                                         eff_tol, m=mi, orthog=cfg.orthog,
-                                        use_kernel=self.use_kernel)
+                                        use_kernel=self.use_kernel,
+                                        h_acc=cfg.cgs2_acc)
             j = np.asarray(cyc.j_used)
             step = j > 0
             if not step[active].any():
@@ -253,7 +298,7 @@ class BatchedGCRODRSolver:
             ctr, vr, dnorm = _rhs_and_dnorm_b(c_dev, u_dev, cyc.v, r)
             ctr_np = np.asarray(ctr)
             vr_np = np.asarray(vr)
-            dnorm_np = np.maximum(np.asarray(dnorm), _TINY)
+            dnorm_np = np.maximum(np.asarray(dnorm, np.float64), _TINY)
             h_np = np.asarray(cyc.h)
             bb_np = np.asarray(cyc.b)
 
@@ -275,12 +320,18 @@ class BatchedGCRODRSolver:
                 y_k[i] = ys[i][:k]
                 y_m[i, : int(j[i])] = ys[i][k:]
             ut = _scaled_cols_b(u_dev, dnorm)
+            rprev = rnorm
             z, r, rn = _deflated_update_b(ops, b, z, ut, cyc.v,
-                                          jnp.asarray(y_k), jnp.asarray(y_m))
+                                          jnp.asarray(y_k, dt),
+                                          jnp.asarray(y_m, dt))
             rnorm = np.asarray(rn)
             iters += np.where(step, j, 0)
             matvecs += np.where(step, j + 1, 0)
             cycles += step
+            if self.stall_break:
+                no_prog = np.where(step & (rnorm > 0.99 * rprev),
+                                   no_prog + 1, 0)
+                stalled |= no_prog >= 3
 
             # next recycle spaces from the harmonic-Ritz pencils
             cu, cv, vu, vv = [np.asarray(a) for a in
@@ -319,9 +370,11 @@ class BatchedGCRODRSolver:
                 ref_ok[i] = True
             if ref_ok.any():
                 c_new, yk = _next_cu_b(ut, cyc.v, c_dev,
-                                       jnp.asarray(p_k), jnp.asarray(p_m),
-                                       jnp.asarray(q_c), jnp.asarray(q_v))
-                u_new = _mat_post_b(yk, jnp.asarray(inv_rr))
+                                       jnp.asarray(p_k, dt),
+                                       jnp.asarray(p_m, dt),
+                                       jnp.asarray(q_c, dt),
+                                       jnp.asarray(q_v, dt))
+                u_new = _mat_post_b(yk, jnp.asarray(inv_rr, dt))
                 c_dev = _sel(ref_ok, c_new, c_dev)
                 u_dev = _sel(ref_ok, u_new, u_dev)
             stalled |= (np.asarray(cyc.breakdown) & step & (rnorm > tol_abs))
@@ -345,13 +398,155 @@ class BatchedGCRODRSolver:
 
         if k > 0:
             # carry Ỹ_k per chain (Alg. 2 line 34); chains that never owned
-            # a space this solve keep their previous carry
-            if self.u_carry is None:
-                self.u_carry = np.zeros((bsz, n, k))
-                self.carry_ok = np.zeros(bsz, dtype=bool)
+            # a space this solve keep their previous carry. The carry is
+            # stored in the SOLVE dtype (fp32 under the mixed inner solver).
             u_np = np.asarray(u_dev)
+            if self.u_carry is None:
+                self.u_carry = np.zeros((bsz, n, k), dtype=u_np.dtype)
+                self.carry_ok = np.zeros(bsz, dtype=bool)
             keep = established[:, None, None]
-            self.u_carry = np.where(keep, u_np, self.u_carry)
+            self.u_carry = np.where(keep, u_np,
+                                    self.u_carry.astype(u_np.dtype))
             self.carry_ok = self.carry_ok | established
         self.systems_solved += int((~zerob).sum())
         return x, stats
+
+    # ------------------------------------------------------------------
+    def _solve_batch_mixed(self, ops, b):
+        """fp64 iterative refinement over fp32 LOCKSTEP correction solves.
+
+        The whole batch advances through the same outer passes: per pass,
+        every still-unconverged chain's fp64 residual is downcast into the
+        correction right-hand side (converged chains get zero rows — the
+        engine's own padding no-op, so their recycle carries are untouched)
+        and ONE inner lockstep solve reduces each by `cfg.inner_tol`; the
+        fp64 accumulate + true-residual recompute is one batched dispatch.
+        When any chain stagnates in fp32 the WHOLE batch falls back to fp64
+        correction passes (lockstep latency is the max over chains anyway).
+        """
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        b = jnp.asarray(b, jnp.float64)
+        bsz, n = b.shape
+        x = jnp.zeros((bsz, n), b.dtype)
+        r = b
+        bnorm = np.asarray(jnp.linalg.norm(b, axis=1))
+        rnorm = bnorm.copy()
+        tol_abs = cfg.tol * bnorm
+        zerob = bnorm == 0.0
+
+        iters = np.zeros(bsz, dtype=int)
+        matvecs = np.zeros(bsz, dtype=int)
+        cycles = np.zeros(bsz, dtype=int)
+        outer = np.zeros(bsz, dtype=int)
+        fb64 = np.zeros(bsz, dtype=bool)
+        stuck = np.zeros(bsz, dtype=bool)  # no-progress even in fp64
+        ops32 = cast_operator(ops, jnp.float32)
+
+        if self._inner is None:
+            self._inner = BatchedGCRODRSolver(cfg, use_kernel=self.use_kernel,
+                                              stall_break=True)
+        inner = self._inner
+        # push the public carry (possibly from a checkpoint or an earlier
+        # precision) down into the inner solver, stored fp32
+        if self.u_carry is not None:
+            inner.u_carry = np.asarray(self.u_carry, np.float32)
+            inner.carry_ok = (self.carry_ok.copy()
+                              if self.carry_ok is not None else None)
+        fallback = False
+        passes = 0
+        while True:
+            need = ~zerob & (rnorm > tol_abs) & (iters < cfg.maxiter)
+            if not need.any():
+                break
+            # per-pass budget honors the MOST-advanced needy chain's cap
+            # (inner maxiter is batch-wide; a laggard just resumes next
+            # pass), so no chain overshoots cfg.maxiter the way a
+            # least-advanced budget would allow
+            budget = int(max(1, cfg.maxiter - int(iters[need].max())))
+            if not fallback and passes < cfg.ir_max_outer:
+                # ---- fp32 lockstep correction pass ---------------------
+                # per-pass tol follows the MOST demanding chain (lockstep
+                # latency is the max over chains — oversolving easy chains
+                # inside the same dispatch is free)
+                tol_i = min(0.5, max(cfg.inner_tol,
+                                     0.25 * float((tol_abs[need]
+                                                   / rnorm[need]).min())))
+                inner.cfg = dataclasses.replace(cfg, inner_dtype="float64",
+                                                tol=tol_i, maxiter=budget)
+                d, st_in = inner.solve_batch(ops32, _downcast_masked(r, need))
+                outer += need
+            else:
+                # ---- fp64 fallback lockstep pass -----------------------
+                if self._inner64 is None:
+                    # no stall_break: the fp64 backstop may legitimately
+                    # plateau for stretches (indefinite operators) — it gets
+                    # the same patience as the plain fp64 engine
+                    self._inner64 = BatchedGCRODRSolver(
+                        cfg, use_kernel=self.use_kernel)
+                tol_i = min(0.5, max(0.5 * float((tol_abs[need]
+                                                  / rnorm[need]).min()),
+                                     1e-14))
+                self._inner64.cfg = dataclasses.replace(
+                    cfg, inner_dtype="float64", tol=tol_i, maxiter=budget)
+                self._inner64.u_carry = (
+                    np.asarray(inner.u_carry, np.float64)
+                    if inner.u_carry is not None else None)
+                self._inner64.carry_ok = (inner.carry_ok.copy()
+                                          if inner.carry_ok is not None
+                                          else None)
+                rhs = jnp.where(jnp.asarray(need)[:, None], r, 0.0)
+                d, st_in = self._inner64.solve_batch(ops, rhs)
+                if self._inner64.u_carry is not None:
+                    inner.u_carry = np.asarray(self._inner64.u_carry,
+                                               np.float32)
+                    inner.carry_ok = self._inner64.carry_ok.copy()
+                fb64 |= need
+            passes += 1
+            for i in np.nonzero(need)[0]:
+                iters[i] += st_in[i].iterations
+                matvecs[i] += st_in[i].matvecs
+                cycles[i] += st_in[i].cycles
+            rprev, x_prev, r_prev = rnorm, x, r
+            x, r, rn = _ir_accum_b(ops.base, b, x, jnp.asarray(d))
+            matvecs += need
+            rnorm = np.asarray(rn)
+            bad = need & ~np.isfinite(rnorm)
+            if bad.any():   # fp32 overflow on some chains — roll them back
+                x = _sel(~bad, x, x_prev)
+                r = _sel(~bad, r, r_prev)
+                rnorm = np.where(bad, rprev, rnorm)
+            no_prog = need & ~(rnorm <= 0.5 * rprev) & (rnorm > tol_abs)
+            if no_prog.any():
+                if fallback:
+                    stuck |= no_prog  # a true stall, not budget exhaustion
+                    break             # fp64 lockstep is stuck too — stop
+                fallback = True      # fp32 stagnated somewhere → fp64 batch
+
+        # ---- finalize ----------------------------------------------------
+        x_np = np.asarray(x)
+        wall = time.perf_counter() - t0
+        converged = zerob | (rnorm <= tol_abs)
+        stats = []
+        for i in range(bsz):
+            stats.append(SolveStats(
+                iterations=int(iters[i]),
+                matvecs=int(matvecs[i]),
+                cycles=int(cycles[i]),
+                converged=bool(converged[i]),
+                rel_residual=0.0 if zerob[i]
+                else float(rnorm[i] / bnorm[i]),
+                wall_time_s=wall,  # lockstep latency, shared by the batch
+                # breakdown marks a genuine stall (no progress even in the
+                # fp64 fallback) — maxiter exhaustion stays False, matching
+                # the plain engines' semantics
+                breakdown=bool(stuck[i]),
+                outer_refinements=int(outer[i]),
+                fp64_fallback=bool(fb64[i]),
+            ))
+        if cfg.k > 0 and inner.u_carry is not None:
+            self.u_carry = np.asarray(inner.u_carry, np.float32)
+            self.carry_ok = (inner.carry_ok.copy()
+                             if inner.carry_ok is not None else None)
+        self.systems_solved += int((~zerob).sum())
+        return x_np, stats

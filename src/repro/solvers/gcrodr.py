@@ -16,9 +16,18 @@ split PETSc uses, but with ~4 device round-trips per cycle instead of ~15.
 The padded static shapes are also what makes the fused steps below vmap
 cleanly: `solvers/batched.py` lifts each of them over a leading chain axis
 to advance B independent recycling chains in lockstep (App. E.2.2).
+
+Precision policy: `cfg.inner_dtype="float32"` routes `solve` through an
+fp64 outer iterative-refinement loop (`_solve_mixed`): every Arnoldi cycle,
+preconditioner apply and recycle-space update runs in fp32 on the casted
+operator while the operator/RHS of record — and the emitted labels — stay
+fp64. The recycle carry U_k is STORED fp32 (half the checkpoint/HBM
+footprint; it only seeds the next search space, accuracy is owned by the
+outer loop). The fp64 default takes the historical code path unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from functools import partial
 
@@ -27,11 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.solvers.arnoldi import arnoldi_cycle
-from repro.solvers.gmres import _residual, gmres_solve
+from repro.solvers.gmres import (_downcast32, _ir_refine, _residual_norms,
+                                 gmres_solve)
 from repro.solvers.hostlinalg import (harmonic_ritz_deflated,
                                       harmonic_ritz_first_cycle,
                                       hessenberg_lstsq, right_tri_solve)
-from repro.solvers.operator import PreconditionedOp, apply_op, as_operator
+from repro.solvers.operator import (PreconditionedOp, apply_op, as_operator,
+                                    cast_operator)
 from repro.solvers.types import KrylovConfig, SolveStats
 
 _apply_cols = jax.jit(jax.vmap(apply_op, in_axes=(None, 1), out_axes=1))
@@ -110,11 +121,18 @@ class GCRODRSolver:
             x, stats = solver.solve(op_i, b_i)
     """
 
-    def __init__(self, cfg: KrylovConfig, use_kernel: bool = False):
+    def __init__(self, cfg: KrylovConfig, use_kernel: bool = False,
+                 stall_break: bool = False):
         self.cfg = cfg
         self.use_kernel = use_kernel
+        # stall_break: break out of no-progress cycles instead of spinning to
+        # maxiter — set by the mixed-precision outer loop on its inner fp32
+        # solvers, where hitting the fp32 round-off floor is an expected exit
+        self.stall_break = stall_break
         self.u_carry: np.ndarray | None = None  # (n, k) recycle space
         self.systems_solved = 0
+        self._inner: GCRODRSolver | None = None   # fp32 correction solver
+        self._inner64: GCRODRSolver | None = None  # fp64 fallback solver
 
     # -- resumable-datagen support (core/skr.py checkpoints this) --------
     def state_dict(self) -> dict:
@@ -127,6 +145,8 @@ class GCRODRSolver:
     def reset(self):
         self.u_carry = None
         self.systems_solved = 0
+        self._inner = None
+        self._inner64 = None
 
     # --------------------------------------------------------------------
     def _refresh_space(self, last_cycle, k: int, mi: int):
@@ -147,28 +167,84 @@ class GCRODRSolver:
         diag = np.abs(np.diag(rr))
         if diag.min() <= 1e-12 * max(diag.max(), 1e-300):
             return None
+        # host factors ship in the DEVICE dtype (fp32 inner cycles must not
+        # silently re-widen the recycle space; f64 path: no-op casts)
+        dt = ut.dtype
         p_m = np.zeros((mi, k))
         p_m[:j] = p[k:]
         q_v = np.zeros((mi + 1, k))
         q_v[: j + 1] = q[k:]
         c_new, yk = _next_cu(ut, cyc.v, c_dev,
-                             jnp.asarray(p[:k]), jnp.asarray(p_m),
-                             jnp.asarray(q[:k]), jnp.asarray(q_v))
-        return c_new, yk @ jnp.asarray(np.linalg.inv(rr))
+                             jnp.asarray(p[:k], dt), jnp.asarray(p_m, dt),
+                             jnp.asarray(q[:k], dt), jnp.asarray(q_v, dt))
+        return c_new, yk @ jnp.asarray(np.linalg.inv(rr), dt)
+
+    def _solve_mixed(self, op: PreconditionedOp, b, x0=None):
+        """fp64 iterative refinement over fp32 GCRO-DR correction solves
+        (`_ir_refine` with recycling callbacks).
+
+        The fp32 inner solver keeps the sequence-stateful recycle carry —
+        in fp32, across passes AND across systems; an fp64-fallback pass
+        borrows the carry upcast and hands its refreshed space back
+        downcast, so the chain survives precision switches.
+        """
+        cfg = self.cfg
+        op32 = cast_operator(op, jnp.float32)
+        if self._inner is None:
+            self._inner = GCRODRSolver(cfg, use_kernel=self.use_kernel,
+                                       stall_break=True)
+        inner = self._inner
+        # the carry rides the PUBLIC u_carry (checkpointed by core/skr.py),
+        # STORED fp32 — downcast whatever precision last produced it
+        inner.u_carry = (np.asarray(self.u_carry, np.float32)
+                         if self.u_carry is not None else None)
+
+        def solve32(r, tol_i, budget):
+            inner.cfg = dataclasses.replace(cfg, inner_dtype="float64",
+                                            tol=tol_i, maxiter=budget)
+            return inner.solve(op32, _downcast32(r))
+
+        def solve64(r, tol_i, budget):
+            if self._inner64 is None:
+                self._inner64 = GCRODRSolver(cfg, use_kernel=self.use_kernel)
+            self._inner64.cfg = dataclasses.replace(
+                cfg, inner_dtype="float64", tol=tol_i, maxiter=budget)
+            self._inner64.u_carry = (np.asarray(inner.u_carry, np.float64)
+                                     if inner.u_carry is not None else None)
+            d, st_in = self._inner64.solve(op, r)
+            if self._inner64.u_carry is not None:
+                inner.u_carry = np.asarray(self._inner64.u_carry, np.float32)
+            return d, st_in
+
+        x, stats = _ir_refine(op, jnp.asarray(b), cfg, solve32, solve64,
+                              x0=x0)
+        if inner.u_carry is not None:
+            self.u_carry = np.asarray(inner.u_carry, np.float32)
+        self.systems_solved += 1
+        return x, stats
 
     def solve(self, op: PreconditionedOp, b, x0=None):
         cfg = self.cfg
         if cfg.k == 0:
-            x, stats = gmres_solve(op, b, cfg, x0=x0, use_kernel=self.use_kernel)
+            x, stats = gmres_solve(op, b, cfg, x0=x0,
+                                   use_kernel=self.use_kernel,
+                                   stall_break=self.stall_break)
             self.systems_solved += 1
             return x, stats
+        if cfg.inner_dtype == "float32":
+            return self._solve_mixed(op, b, x0=x0)
 
         t0 = time.perf_counter()
         n = int(b.shape[0])
         b = jnp.asarray(b)
         z = jnp.zeros(n, b.dtype) if x0 is None else jnp.asarray(x0)
-        bnorm = float(jnp.linalg.norm(b))
         stats = SolveStats()
+        if x0 is None:
+            r = b
+            bnorm = rnorm = float(jnp.linalg.norm(b))  # ONE host sync
+        else:
+            r, bn_d, rn_d = _residual_norms(op, b, z)  # one fused dispatch
+            bnorm, rnorm = (float(v) for v in jax.device_get((bn_d, rn_d)))
         if bnorm == 0.0:
             stats.converged = True
             stats.rel_residual = 0.0
@@ -176,8 +252,6 @@ class GCRODRSolver:
             self.systems_solved += 1
             return np.zeros(n), stats
         tol_abs = cfg.tol * bnorm
-        r = _residual(op, b, z) if x0 is not None else b
-        rnorm = float(jnp.linalg.norm(r))
 
         c_dev = None  # (n, k) device
         u_dev = None
@@ -200,7 +274,9 @@ class GCRODRSolver:
                 rnorm = float(rn)
 
         empty_c = jnp.zeros((0, n), b.dtype)
+        dt = b.dtype        # host factors ship back in the device dtype
         last_cycle = None   # (j, g, ut, cyc, c) of the latest deflated cycle
+        no_prog = 0         # consecutive no-progress cycles (stall_break)
 
         while True:
             if rnorm <= tol_abs:
@@ -208,23 +284,28 @@ class GCRODRSolver:
                 break
             if stats.iterations >= cfg.maxiter:
                 break
+            if self.stall_break and no_prog >= 3:
+                break  # round-off floor — hand back to the outer IR loop
+            rprev = rnorm
 
             if c_dev is None:
                 # ---- fresh GMRES(m) cycle + first recycle space (l.9-18) --
                 m = cfg.m
                 cyc = arnoldi_cycle(op, empty_c, r, tol_abs, m=m,
-                                    orthog=cfg.orthog, use_kernel=self.use_kernel)
+                                    orthog=cfg.orthog, use_kernel=self.use_kernel,
+                                    h_acc=cfg.cgs2_acc)
                 j = int(cyc.j_used)
                 if j == 0:
                     break
                 h = np.asarray(cyc.h)                       # (m+1, m) small
-                y = np.zeros(m)
+                y = np.zeros(m, dtype=h.dtype)
                 y[:j] = hessenberg_lstsq(h[: j + 1, :j], rnorm)
                 z, r, rn = _fresh_update(op, b, z, cyc.v, jnp.asarray(y))
                 rnorm = float(rn)
                 stats.iterations += j
                 stats.matvecs += j + 1
                 stats.cycles += 1
+                no_prog = no_prog + 1 if rnorm > 0.99 * rprev else 0
                 k_eff = min(k, j - 1)
                 if k_eff >= 1:
                     p = harmonic_ritz_first_cycle(h, j, k_eff)
@@ -232,31 +313,33 @@ class GCRODRSolver:
                         q, rr = np.linalg.qr(h[: j + 1, :j] @ p)
                         diag = np.abs(np.diag(rr))
                         if diag.min() > 1e-12 * max(diag.max(), 1e-300):
-                            p_pad = np.zeros((m, k))
+                            p_pad = np.zeros((m, k), dtype=h.dtype)
                             p_pad[:j] = p
-                            q_pad = np.zeros((m + 1, k))
+                            q_pad = np.zeros((m + 1, k), dtype=h.dtype)
                             q_pad[: j + 1] = q
                             c_dev, yk = _fresh_cu(cyc.v, cyc.h,
                                                   jnp.asarray(p_pad),
                                                   jnp.asarray(q_pad))
-                            u_dev = yk @ jnp.asarray(np.linalg.inv(rr))
+                            u_dev = yk @ jnp.asarray(np.linalg.inv(rr), dt)
                 continue
 
             # ---- deflated cycle (Alg. 2 lines 19-33) ----------------------
             mi = cfg.m - k
             cyc = arnoldi_cycle(op, c_dev.T, r, tol_abs, m=mi,
-                                orthog=cfg.orthog, use_kernel=self.use_kernel)
+                                orthog=cfg.orthog, use_kernel=self.use_kernel,
+                                h_acc=cfg.cgs2_acc)
             j = int(cyc.j_used)
             if j == 0:
                 break
             ctr, vr, dnorm = _rhs_and_dnorm(c_dev, u_dev, cyc.v, r)
             h = np.asarray(cyc.h)[: j + 1, :j]               # effective block
             bb = np.asarray(cyc.b)[:, :j]
-            dnorm_np = np.maximum(np.asarray(dnorm), 1e-300)
+            dnorm_np = np.maximum(np.asarray(dnorm, np.float64), 1e-300)
             ut = u_dev / dnorm                               # device Ũ_k
 
             # host pencil at the EFFECTIVE width j (padded columns would
-            # feed spurious θ≈0 null directions to the harmonic-Ritz eig)
+            # feed spurious θ≈0 null directions to the harmonic-Ritz eig);
+            # host LS runs in f64 regardless — factors ship back in dt
             g = np.zeros((k + j + 1, k + j))
             g[:k, :k] = np.diag(1.0 / dnorm_np)
             g[:k, k:] = bb
@@ -268,12 +351,13 @@ class GCRODRSolver:
             y_m[:j] = y[k:]
 
             z, r, rn = _deflated_update(op, b, z, ut, cyc.v,
-                                        jnp.asarray(y[:k]),
-                                        jnp.asarray(y_m))
+                                        jnp.asarray(y[:k], dt),
+                                        jnp.asarray(y_m, dt))
             rnorm = float(rn)
             stats.iterations += j
             stats.matvecs += j + 1
             stats.cycles += 1
+            no_prog = no_prog + 1 if rnorm > 0.99 * rprev else 0
 
             # next recycle space from the harmonic Ritz pencil — either
             # every cycle (paper-faithful) or deferred to the last cycle

@@ -111,6 +111,24 @@ def apply_op(op, v: jax.Array) -> jax.Array:
     return op.apply(v)
 
 
+def cast_operator(op, dtype):
+    """Cast every floating leaf of an operator/preconditioner pytree.
+
+    The precision-policy layer builds the fp32 twin of a PreconditionedOp
+    with this: static structure (offsets, kind tags, degrees) rides in the
+    treedef and is untouched, so the casted twin shares jit caches keyed on
+    treedef + (shape, dtype) and retraces exactly once per precision."""
+    dtype = jnp.dtype(dtype)
+
+    def _cast(leaf):
+        a = jnp.asarray(leaf)
+        if jnp.issubdtype(a.dtype, jnp.floating) and a.dtype != dtype:
+            return a.astype(dtype)
+        return leaf
+
+    return jax.tree_util.tree_map(_cast, op)
+
+
 def as_operator(problem_op, use_kernel: bool = False):
     """Stencil5 | DIA → solver operator."""
     if isinstance(problem_op, Stencil5):

@@ -17,6 +17,15 @@ class SolveStats:
     rel_residual: float = np.inf
     wall_time_s: float = 0.0
     breakdown: bool = False
+    # mixed-precision accounting (inner_dtype="float32" runs only):
+    outer_refinements: int = 0  # fp64 iterative-refinement passes taken
+    fp64_fallback: bool = False  # fp32 cycles stagnated → finished in fp64
+
+    def merge_inner(self, other: "SolveStats"):
+        """Fold an inner (correction-solve) pass into this outer record."""
+        self.iterations += other.iterations
+        self.matvecs += other.matvecs
+        self.cycles += other.cycles
 
 
 @dataclasses.dataclass
@@ -88,6 +97,31 @@ class KrylovConfig:
                "final" — only once per system, from its last cycle (beyond-
                paper: drops the per-cycle O(m³) host eig + 2 device round
                trips; EXPERIMENTS.md §Perf iter 4)
+
+    Precision policy (the mixed-precision axis; see README "Precision
+    policy"):
+
+    inner_dtype : "float64" (paper-parity default — every Arnoldi cycle,
+               preconditioner apply and recycle-space update runs in fp64,
+               the exact historical path) | "float32" — the inner Krylov
+               machinery runs in fp32 while the operator/RHS of record stay
+               fp64: an fp64 outer iterative-refinement loop downcasts the
+               current TRUE residual, solves the correction system A·d = r
+               in fp32 to `inner_tol`, accumulates x += d in fp64 and
+               recomputes the true fp64 residual until `tol` (classic
+               inexact-Krylov/IR; the recycled U_k only seeds the search
+               space, so accuracy is owned by the outer loop and dataset
+               labels stay at fp64 tolerance).
+    inner_tol : relative residual reduction target of ONE fp32 correction
+               solve (per outer pass). The outer residual contracts by
+               ~max(inner_tol, κ·eps_f32) per pass.
+    ir_max_outer : cap on fp32 refinement passes per system; exceeded (or a
+               pass reduces the residual by < 2×) → the solver falls back to
+               fp64 correction cycles, guarding against fp32 stagnation.
+    cgs2_acc : "native" — CGS2 accumulates h in the basis dtype (fp32 inner
+               cycles accumulate in fp32) | "float64" — fp32 storage with
+               fp64 accumulation in the fused orthogonalization (robustness
+               knob for ill-scaled bases).
     """
 
     m: int = 40
@@ -97,9 +131,17 @@ class KrylovConfig:
     orthog: str = "cgs2"
     ritz_refresh: str = "cycle"
     m_max: int = 0
+    inner_dtype: str = "float64"
+    inner_tol: float = 1e-4
+    ir_max_outer: int = 10
+    cgs2_acc: str = "native"
 
     def __post_init__(self):
         assert 0 <= self.k < self.m, "need 0 <= k < m"
         assert self.orthog in ("cgs2", "mgs")
         assert self.ritz_refresh in ("cycle", "final")
         assert self.m_max == 0 or self.m_max >= self.m, "need m_max >= m"
+        assert self.inner_dtype in ("float64", "float32")
+        assert 0.0 < self.inner_tol < 1.0, "inner_tol is a relative reduction"
+        assert self.ir_max_outer >= 1
+        assert self.cgs2_acc in ("native", "float64")

@@ -1,0 +1,336 @@
+"""Precision-policy layer: fp32 inner cycles + fp64 iterative refinement.
+
+Covers the tentpole's contract end to end: fp64-tolerance parity of the
+fp32-inner path on every registered steady + time-dependent family, the
+stagnation fallback to fp64 on an ill-conditioned (near-resonant)
+Helmholtz operator, bitwise regression of the fp64 default path, fp32
+carry / fp64 label dtypes, and dtype polymorphism of the kernels in both
+the ref and interpret-mode Pallas paths (incl. the padded-tail fallback
+and the f32-storage/f64-accum CGS2 knob)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.pde.dia import DIA, Stencil5
+from repro.pde.registry import (get_family, get_timedep_family,
+                                list_families, list_timedep_families)
+from repro.solvers.batched import BatchedGCRODRSolver
+from repro.solvers.gcrodr import GCRODRSolver
+from repro.solvers.gmres import gmres_solve, solve_gmres
+from repro.solvers.operator import (PreconditionedOp, StencilOp, as_operator,
+                                    cast_operator)
+from repro.solvers.precond import (make_preconditioner,
+                                   make_preconditioner_batched)
+from repro.solvers.types import KrylovConfig
+
+CFG = KrylovConfig(m=30, k=10, tol=1e-8, maxiter=10_000)
+CFG32 = dataclasses.replace(CFG, inner_dtype="float32")
+
+
+def _true_rel_res(prob, x):
+    a = prob.op.to_dense()
+    b = np.asarray(prob.b, np.float64).reshape(-1)
+    return np.linalg.norm(b - a @ np.asarray(x).reshape(-1)) / np.linalg.norm(b)
+
+
+# ------------------------------------------------------ fp64-parity, steady
+
+@pytest.mark.parametrize("family", list_families())
+def test_gmres_fp32_inner_reaches_fp64_tolerance(family):
+    """The outer refinement loop owns the accuracy: the final TRUE fp64
+    relative residual of the fp32-inner path sits at cfg.tol on every
+    registered steady family, and labels come back fp64."""
+    fam = get_family(family, nx=16, ny=16)
+    p = fam.sample(jax.random.PRNGKey(0))
+    x32, st32 = solve_gmres(p.op, p.b, CFG32)
+    assert st32.converged, (family, st32)
+    assert st32.outer_refinements >= 1
+    assert np.asarray(x32).dtype == np.float64
+    assert _true_rel_res(p, x32) <= CFG.tol * 1.01
+    x64, _ = solve_gmres(p.op, p.b, CFG)
+    np.testing.assert_allclose(np.asarray(x32), np.asarray(x64), rtol=1e-4,
+                               atol=1e-7)
+
+
+@pytest.mark.parametrize("family", ["poisson", "helmholtz"])
+def test_gcrodr_fp32_inner_sequence_parity(family):
+    """Recycling chain under the mixed policy: every system of a sequence
+    converges to the fp64 tolerance and the carry is STORED fp32."""
+    fam = get_family(family, nx=16, ny=16)
+    solver = GCRODRSolver(CFG32)
+    for s in range(3):
+        p = fam.sample(jax.random.PRNGKey(s))
+        pre = make_preconditioner("jacobi", p.op)
+        op = PreconditionedOp(as_operator(p.op), pre)
+        x, st = solver.solve(op, jnp.asarray(p.b).reshape(-1))
+        assert st.converged, (family, s, st)
+        assert _true_rel_res(p, x) <= CFG.tol * 1.01
+        assert np.asarray(x).dtype == np.float64       # labels fp64
+    assert solver.u_carry is not None
+    assert solver.u_carry.dtype == np.float32          # carry fp32
+
+
+@pytest.mark.parametrize("family", list_timedep_families())
+def test_timedep_fp32_inner_trajectory_parity(family):
+    """θ-scheme marching with fp32 inner cycles matches the fp64 engine to
+    solver tolerance on every registered time-dependent family."""
+    from repro.core.trajectory import TrajConfig, march_trajectory
+
+    fam = get_timedep_family(family, nx=12, ny=12, nt=4)
+    spec = fam.sample_spec(jax.random.PRNGKey(0))
+    kc = dataclasses.replace(CFG, tol=1e-9)
+    t64, s64 = march_trajectory(fam, spec, TrajConfig(krylov=kc,
+                                                      precond="jacobi"))
+    kc32 = dataclasses.replace(kc, inner_dtype="float32")
+    t32, s32 = march_trajectory(fam, spec, TrajConfig(krylov=kc32,
+                                                      precond="jacobi"))
+    assert s32.num_converged == s32.num
+    assert t32.dtype == np.float64
+    scale = np.abs(t64).max()
+    np.testing.assert_allclose(t32, t64, atol=1e-6 * scale)
+
+
+def test_batched_fp32_inner_matches_fp64_lockstep():
+    """Lockstep mixed engine: per-chain solutions agree with the fp64
+    lockstep engine to solver tolerance; per-chain carries stored fp32."""
+    fam = get_family("poisson", nx=12, ny=12)
+    batch = fam.sample_batch(jax.random.PRNGKey(3), 4)
+    coeffs = jnp.asarray(batch.op.coeffs)
+    b_all = np.asarray(batch.b).reshape(4, -1)
+    outs = {}
+    for tag, cfg in (("f64", CFG), ("f32", CFG32)):
+        solver = BatchedGCRODRSolver(cfg)
+        xs = []
+        for t in range(2):
+            idx = np.array([2 * w + t for w in range(2)])
+            st5 = Stencil5(coeffs).take(jnp.asarray(idx))
+            pre = make_preconditioner_batched("jacobi", st5)
+            opsb = PreconditionedOp(StencilOp(st5.coeffs), pre)
+            x, sts = solver.solve_batch(opsb, jnp.asarray(b_all[idx]))
+            assert all(s.converged for s in sts), (tag, t)
+            xs.append(x)
+        outs[tag] = np.concatenate(xs)
+        if tag == "f32":
+            assert solver.u_carry.dtype == np.float32
+            assert all(s.outer_refinements >= 1 for s in sts)
+    rel = (np.linalg.norm(outs["f32"] - outs["f64"], axis=1)
+           / np.linalg.norm(outs["f64"], axis=1))
+    assert (rel <= 1e-6).all(), rel
+
+
+def test_batched_fp32_zero_rhs_padding_noop():
+    """Padded chains stay a no-op under the mixed policy: 0 iterations,
+    x = 0, recycle carry untouched."""
+    fam = get_family("poisson", nx=12, ny=12)
+    batch = fam.sample_batch(jax.random.PRNGKey(5), 2)
+    coeffs = jnp.asarray(batch.op.coeffs)
+    b_all = np.asarray(batch.b).reshape(2, -1)
+    st5 = Stencil5(coeffs).take(jnp.asarray([0, 1]))
+    pre = make_preconditioner_batched("jacobi", st5)
+    opsb = PreconditionedOp(StencilOp(st5.coeffs), pre)
+    solver = BatchedGCRODRSolver(CFG32)
+    solver.solve_batch(opsb, jnp.asarray(b_all))
+    before = solver.u_carry.copy()
+    b_pad = b_all.copy()
+    b_pad[1] = 0.0
+    xs, sts = solver.solve_batch(opsb, jnp.asarray(b_pad))
+    assert sts[1].converged and sts[1].iterations == 0
+    np.testing.assert_array_equal(xs[1], np.zeros_like(xs[1]))
+    np.testing.assert_array_equal(solver.u_carry[1], before[1])
+    assert sts[0].converged and sts[0].iterations > 0
+
+
+# ------------------------------------------------------ stagnation fallback
+
+def _near_resonant_helmholtz(nx=12, kappa=1e8):
+    """Helmholtz operator shifted to within ‖A‖/kappa of resonance — fp32
+    cycles cannot contract the residual (κ·eps_f32 ≫ 1)."""
+    fam = get_family("helmholtz", nx=nx, ny=nx)
+    p = fam.sample(jax.random.PRNGKey(0))
+    a = np.asarray(p.op.to_dense())
+    evals = np.linalg.eigvalsh(0.5 * (a + a.T))
+    mu = evals[np.argmin(np.abs(evals))]
+    eps = np.abs(evals).max() / kappa
+    coeffs = p.op.coeffs.at[Stencil5.C].add(-mu + eps)
+    return Stencil5(coeffs), p.b
+
+
+def test_fp32_stagnation_falls_back_to_fp64():
+    """Ill-conditioned helmholtz: the fp32 passes stagnate, the solver must
+    flag the fallback AND still converge to the fp64 tolerance."""
+    op_ill, b = _near_resonant_helmholtz()
+    n = int(np.asarray(b).size)
+    cfg = KrylovConfig(m=n + 8, k=12, tol=1e-8, maxiter=20_000,
+                       inner_dtype="float32")
+    solver = GCRODRSolver(cfg)
+    op = PreconditionedOp(as_operator(op_ill), None)
+    x, st = solver.solve(op, jnp.asarray(b).reshape(-1))
+    assert st.converged, st
+    assert st.fp64_fallback
+    assert st.outer_refinements >= 1
+    ad = op_ill.to_dense()
+    bv = np.asarray(b).reshape(-1)
+    res = np.linalg.norm(bv - ad @ np.asarray(x)) / np.linalg.norm(bv)
+    assert res <= cfg.tol * 1.01
+
+
+# ------------------------------------------------- fp64-default regression
+
+def test_fp64_default_path_bitwise_identical():
+    """inner_dtype="float64" (and the default) must take the historical
+    code path: bitwise-identical solutions and identical iterate counts."""
+    fam = get_family("poisson", nx=16, ny=16)
+    p = fam.sample(jax.random.PRNGKey(1))
+    x_def, st_def = solve_gmres(p.op, p.b, CFG)
+    x_f64, st_f64 = solve_gmres(
+        p.op, p.b, dataclasses.replace(CFG, inner_dtype="float64"))
+    np.testing.assert_array_equal(np.asarray(x_def), np.asarray(x_f64))
+    assert st_def.iterations == st_f64.iterations
+    assert st_f64.outer_refinements == 0 and not st_f64.fp64_fallback
+
+    op = PreconditionedOp(as_operator(p.op), None)
+    b = jnp.asarray(p.b).reshape(-1)
+    x1, st1 = GCRODRSolver(CFG).solve(op, b)
+    x2, st2 = GCRODRSolver(
+        dataclasses.replace(CFG, inner_dtype="float64")).solve(op, b)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    assert st1.iterations == st2.iterations
+
+
+def test_cast_operator_preserves_structure():
+    fam = get_family("darcy", nx=12, ny=12)
+    p = fam.sample(jax.random.PRNGKey(0))
+    pre = make_preconditioner("bjacobi", p.op)
+    op = PreconditionedOp(as_operator(p.op), pre)
+    op32 = cast_operator(op, jnp.float32)
+    assert op32.base.coeffs.dtype == jnp.float32
+    assert op32.precond.inv_blocks.dtype == jnp.float32
+    # same treedef (static structure untouched)
+    assert (jax.tree_util.tree_structure(op)
+            == jax.tree_util.tree_structure(op32))
+    v = jnp.ones(op.n, jnp.float32)
+    assert op32.apply(v).dtype == jnp.float32
+
+
+# ------------------------------------------- kernel dtype polymorphism
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_stencil5_matvec_dtype_polymorphic(dtype, use_kernel):
+    key = jax.random.PRNGKey(0)
+    coeffs = jax.random.normal(key, (5, 16, 16), dtype)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (16, 16), dtype)
+    y = ops.stencil5_matvec(coeffs, x, use_kernel=use_kernel, interpret=True)
+    assert y.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.stencil5_matvec(
+            coeffs.astype(jnp.float64), x.astype(jnp.float64))),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("batched", [False, True])
+def test_dia_spmv_dtype_polymorphic(dtype, batched):
+    rng = np.random.default_rng(0)
+    offsets = (-8, -1, 0, 1, 8)
+    n = 200
+    shape = (3, len(offsets), n) if batched else (len(offsets), n)
+    data = jnp.asarray(rng.standard_normal(shape), dtype)
+    x = jnp.asarray(rng.standard_normal(shape[:-2] + (n,)), dtype)
+    dia = DIA(offsets=offsets, data=data)
+    y = ops.dia_spmv(dia, x, use_kernel=True, interpret=True)
+    assert y.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.dia_spmv(offsets, data, x)),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n", [521, 1000, 4096])  # prime / ragged / aligned
+def test_fused_orthog_padded_tail_matches_ref(n):
+    """The padded-tail fallback (prime-ish n must NOT degrade to a 1-element
+    block) is exact: zero columns contribute nothing."""
+    key = jax.random.PRNGKey(n)
+    m = 12
+    v = jax.random.normal(key, (m, n))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    mask = (jnp.arange(m) < 9).astype(w.dtype)
+    got_w, got_h = ops.fused_orthog(v, w, mask, use_kernel=True,
+                                    interpret=True)
+    want_w, want_h = ref.fused_orthog(v, w, mask)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
+                               rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_fused_orthog_grid_cap_raises():
+    from repro.kernels.fused_orthog import fused_orthog_pallas
+
+    v = jnp.zeros((4, 1 << 22))
+    w = jnp.zeros(1 << 22)
+    mask = jnp.ones(4)
+    with pytest.raises(ValueError, match="sanity cap"):
+        fused_orthog_pallas(v, w, mask, interpret=True, block_n=128)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_fused_orthog_f64_accum_knob(use_kernel):
+    """cgs2_acc="float64": fp32 storage, fp64 accumulation — at least as
+    close to the fp64 oracle as the all-fp32 run, and fp32 outputs."""
+    key = jax.random.PRNGKey(7)
+    m, n = 16, 512
+    v64 = jnp.linalg.qr(jax.random.normal(key, (n, m)))[0].T
+    w64 = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    mask = jnp.ones((m,), jnp.float32)
+    v32, w32 = v64.astype(jnp.float32), w64.astype(jnp.float32)
+    ww, hw = ops.fused_orthog(v32, w32, mask, use_kernel=use_kernel,
+                              interpret=True, acc_dtype=jnp.float64)
+    assert ww.dtype == jnp.float32 and hw.dtype == jnp.float32
+    w_ref, h_ref = ref.fused_orthog(v64, w64, mask.astype(jnp.float64))
+    np.testing.assert_allclose(np.asarray(hw), np.asarray(h_ref), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ww), np.asarray(w_ref), atol=1e-5)
+
+
+def test_arnoldi_cgs2_acc64_converges():
+    """End-to-end: the f64-accum knob through a mixed-precision solve."""
+    fam = get_family("poisson", nx=12, ny=12)
+    p = fam.sample(jax.random.PRNGKey(0))
+    cfg = dataclasses.replace(CFG32, cgs2_acc="float64")
+    x, st = solve_gmres(p.op, p.b, cfg)
+    assert st.converged
+    assert _true_rel_res(p, x) <= cfg.tol * 1.01
+
+
+# ------------------------------------------------- chunked-datagen parity
+
+def test_chunked_datagen_fp32_inner_labels_match():
+    """generate_dataset_chunked with the mixed policy: fp64 labels at
+    solver tolerance, both engines, carry checkpoint-compatible."""
+    from repro.core.skr import SKRConfig, generate_dataset_chunked
+
+    fam = get_family("poisson", nx=12, ny=12)
+    kc = dataclasses.replace(CFG, tol=1e-9)
+    key = jax.random.PRNGKey(7)
+    base = generate_dataset_chunked(
+        fam, key, 6, SKRConfig(krylov=kc, precond="jacobi"), workers=2,
+        engine="batched")
+    mixed = generate_dataset_chunked(
+        fam, key, 6,
+        SKRConfig(krylov=dataclasses.replace(kc, inner_dtype="float32"),
+                  precond="jacobi"),
+        workers=2, engine="batched")
+    for cb, cm in zip(base, mixed):
+        np.testing.assert_array_equal(cb.order, cm.order)
+        assert cm.solutions.dtype == np.float64
+        assert cm.stats.num_converged == len(cm.order)
+        for pos in range(len(cb.order)):
+            rel = (np.linalg.norm(cm.solutions[pos] - cb.solutions[pos])
+                   / max(np.linalg.norm(cb.solutions[pos]), 1e-300))
+            assert rel <= 1e-6, (pos, rel)
