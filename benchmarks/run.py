@@ -10,6 +10,8 @@
                        (precision-policy tentpole; lockstep engine)
   trajectory_recycle   time-dependent θ-stepping: recycled vs cold-start,
                        sequential vs lockstep trajectory engines
+  sharded_datagen      multi-device sharded pipeline: per-device throughput
+                       at 1/2/4/8 virtual CPU devices (subprocess sweep)
   table33_no_training  Table 33 (FNO on SKR vs GMRES data)
   roofline_report      §Roofline (aggregates dry-run artifacts)
 
@@ -24,12 +26,14 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
 import time
 
 from benchmarks import (batched_solver, convergence_fig11, mixed_precision,
-                        parallel_e22, roofline_report, stability_fig13,
-                        table1_speedup, table2_sort_ablation,
-                        table33_no_training, trajectory_recycle)
+                        parallel_e22, roofline_report, sharded_datagen,
+                        stability_fig13, table1_speedup,
+                        table2_sort_ablation, table33_no_training,
+                        trajectory_recycle)
 
 BENCHES = [
     ("table1_speedup", table1_speedup.run),
@@ -40,6 +44,7 @@ BENCHES = [
     ("batched_solver", batched_solver.run),
     ("mixed_precision", mixed_precision.run),
     ("trajectory_recycle", trajectory_recycle.run),
+    ("sharded_datagen", sharded_datagen.run),
     ("table33_no_training", table33_no_training.run),
     ("roofline_report", roofline_report.run),
 ]
@@ -64,14 +69,29 @@ def _jsonable(obj):
 
 
 def _write_artifact(name: str, wall_s: float, quick: bool, metrics):
+    """Atomic artifact publish: write to a UNIQUE tmp file in results/ (same
+    filesystem), then `os.replace`. A fixed tmp name would let two
+    concurrent runs of the same bench interleave writes and publish a
+    truncated JSON; mkstemp gives every writer its own file and the rename
+    is atomic, so `benchmarks/trend.py` never sees a half-written artifact."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump({"name": name, "wall_s": round(wall_s, 3), "quick": quick,
-                   "metrics": _jsonable(metrics)}, f, indent=2)
-        f.write("\n")
-    os.replace(tmp, path)
+    fd, tmp = tempfile.mkstemp(dir=RESULTS_DIR, prefix=f"BENCH_{name}.",
+                               suffix=".tmp")
+    try:
+        os.fchmod(fd, 0o644)  # mkstemp defaults to 0600; keep artifacts
+        with os.fdopen(fd, "w") as f:  # world-readable like plain open()
+            json.dump({"name": name, "wall_s": round(wall_s, 3),
+                       "quick": quick, "metrics": _jsonable(metrics)}, f,
+                      indent=2)
+            f.write("\n")
+        os.replace(tmp, path)  # atomic publish
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     print(f"[artifact: {os.path.relpath(path)}]")
 
 

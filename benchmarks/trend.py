@@ -15,6 +15,7 @@ import argparse
 import glob
 import json
 import os
+import sys
 
 RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "results")
@@ -40,21 +41,35 @@ def _headline(metrics) -> str:
     return str(metrics)[:60] if metrics is not None else "-"
 
 
-def load_artifacts(results_dir: str) -> list[dict]:
-    arts = []
+def load_artifacts(results_dir: str) -> tuple[list[dict], list[tuple[str, str]]]:
+    """Parse every BENCH_*.json; unparseable or malformed artifacts (e.g.
+    truncated by an interrupted writer) are SKIPPED with a warning on
+    stderr — one bad file must never take down the whole trend report.
+    Returns (good artifacts, [(skipped file, short reason)]) so the report
+    keeps a visible one-line trace of what was dropped."""
+    arts, skipped = [], []
     for path in sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json"))):
+        name = os.path.basename(path)
         try:
             with open(path) as f:
                 art = json.load(f)
         except (OSError, json.JSONDecodeError) as e:
-            arts.append({"name": os.path.basename(path), "error": str(e)})
+            print(f"[trend] WARNING: skipping unparseable artifact "
+                  f"{name}: {e}", file=sys.stderr)
+            skipped.append((name, "unparseable JSON"))
             continue
-        art["_file"] = os.path.basename(path)
+        if not isinstance(art, dict):
+            print(f"[trend] WARNING: skipping malformed artifact "
+                  f"{name}: expected a JSON object, got "
+                  f"{type(art).__name__}", file=sys.stderr)
+            skipped.append((name, f"not a JSON object ({type(art).__name__})"))
+            continue
+        art["_file"] = name
         arts.append(art)
-    return arts
+    return arts, skipped
 
 
-def render(arts: list[dict]) -> str:
+def render(arts: list[dict], skipped: list[tuple[str, str]] = ()) -> str:
     lines = [
         "# Benchmark trend",
         "",
@@ -67,18 +82,16 @@ def render(arts: list[dict]) -> str:
         "| --- | --- | --- | --- |",
     ]
     for art in arts:
-        if "error" in art:
-            lines.append(f"| {art['name']} | - | - | unreadable: "
-                         f"{art['error']} |")
-            continue
         mode = "quick" if art.get("quick") else "full"
         lines.append(f"| {art.get('name', '?')} | {mode} | "
                      f"{art.get('wall_s', '-')} | "
                      f"{_headline(art.get('metrics'))} |")
+    # dropped artifacts stay visible as one-line rows (their metrics are
+    # untrusted, so only the fact and the reason are reported)
+    for name, reason in skipped:
+        lines.append(f"| {name} | - | - | SKIPPED: {reason} |")
     lines.append("")
     for art in arts:
-        if "error" in art:
-            continue
         lines.append(f"## {art.get('name', '?')}")
         lines.append("")
         lines.append("```json")
@@ -92,17 +105,18 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--results-dir", default=RESULTS_DIR)
     args = ap.parse_args(argv)
-    arts = load_artifacts(args.results_dir)
-    if not arts:
+    arts, skipped = load_artifacts(args.results_dir)
+    if not arts and not skipped:
         print(f"no BENCH_*.json artifacts under {args.results_dir}")
         return 1
     out = os.path.join(args.results_dir, "TREND.md")
     tmp = out + ".tmp"
     with open(tmp, "w") as f:
-        f.write(render(arts))
+        f.write(render(arts, skipped))
         f.write("\n")
     os.replace(tmp, out)
-    print(f"[trend: {os.path.relpath(out)} — {len(arts)} benches]")
+    note = f", {len(skipped)} skipped" if skipped else ""
+    print(f"[trend: {os.path.relpath(out)} — {len(arts)} benches{note}]")
     return 0
 
 

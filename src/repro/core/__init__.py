@@ -2,12 +2,15 @@
 Recycling) as a first-class, resumable, chunk-parallel data-generation
 pipeline for neural-operator training."""
 from repro.core.metrics import delta_subspace, smallest_invariant_subspace
+from repro.core.pipeline import plan_chains, run_chunked, run_resumable
 from repro.core.skr import (DataGenResult, SKRConfig, SKRGenerator,
-                            generate_dataset, generate_dataset_baseline,
+                            SteadyWork, generate_dataset,
+                            generate_dataset_baseline,
                             generate_dataset_chunked)
 from repro.core.sorting import (chain_length, greedy_sort, grouped_greedy_sort,
                                 hilbert_sort, sort_features)
-from repro.core.trajectory import (TrajConfig, TrajectoryGenerator, TrajResult,
+from repro.core.trajectory import (TrajConfig, TrajectoryGenerator,
+                                   TrajectoryWork, TrajResult,
                                    generate_trajectories,
                                    generate_trajectories_baseline,
                                    generate_trajectories_chunked,
@@ -15,9 +18,10 @@ from repro.core.trajectory import (TrajConfig, TrajectoryGenerator, TrajResult,
 
 __all__ = [
     "delta_subspace", "smallest_invariant_subspace",
-    "DataGenResult", "SKRConfig", "SKRGenerator",
+    "plan_chains", "run_chunked", "run_resumable",
+    "DataGenResult", "SKRConfig", "SKRGenerator", "SteadyWork",
     "generate_dataset", "generate_dataset_baseline", "generate_dataset_chunked",
-    "TrajConfig", "TrajectoryGenerator", "TrajResult",
+    "TrajConfig", "TrajectoryGenerator", "TrajectoryWork", "TrajResult",
     "generate_trajectories", "generate_trajectories_baseline",
     "generate_trajectories_chunked", "march_trajectory",
     "chain_length", "greedy_sort", "grouped_greedy_sort", "hilbert_sort",

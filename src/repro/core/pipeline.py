@@ -1,0 +1,236 @@
+"""Unified datagen pipeline: one scheduler for every recycling workload.
+
+Both datagen subsystems — steady systems (core/skr.py) and time-dependent
+trajectories (core/trajectory.py) — run the SAME four-stage schedule; only
+the per-item solve differs. This module owns the schedule once:
+
+  1. SORT   the work items by similarity features (core/sorting.py,
+             paper Algorithm 1 — what makes recycling pay),
+  2. CHAIN  partition the sorted order into contiguous recycle chains
+             (paper App. E.2.2: each chain owns an independent carry U_k),
+  3. PACK   align the chains into lockstep rows, padding shorter chains
+             with zero right-hand sides (0 iterations, x = 0, carry
+             untouched — the engines' first-class padding no-op),
+  4. DISPATCH to an engine:
+       sequential  chains back-to-back through the per-system
+                   `GCRODRSolver` (paper-parity baseline; `workers=1`
+                   is bitwise-identical to the plain generators)
+       batched     all chains in lockstep through `BatchedGCRODRSolver`
+                   (one vmapped device program per row)
+       sharded     the lockstep batch with its chain axis SHARDED over
+                   the `data` mesh axis (`distributed.sharding
+                   .ChainSharding`): every row dispatch is one SPMD
+                   program across all devices. Chains never exchange
+                   Krylov information, so the axis is embarrassingly
+                   data-parallel — the chain count is padded with empty
+                   chains to divide the device count, and per-chain
+                   carries/residuals live chain-sharded on device while
+                   the small host eigen/LS solves stay replicated per
+                   shard.
+
+The lockstep engines overlap HOST work against DEVICE solves: while the
+device advances row t, a single prefetch thread assembles row t+1 on host
+(operator gather, stacked preconditioner factorization, RHS packing) — the
+classic input-pipeline overlap, here for solver rows.
+
+Workload specifics ride in a WORK ADAPTER owned by the domain module
+(`skr.SteadyWork`, `trajectory.TrajectoryWork`) so this scheduler never
+imports a PDE. The adapter protocol:
+
+  sample(key, num) -> feats        sample the batch; return sort features
+  solve_chunk_sequential(sub)      one chain, per-system loop -> result
+  begin_lockstep(subs)             allocate per-chain output buffers
+  prepare_row(t, idx) -> prepared  HOST-side row assembly (prefetchable)
+  execute_row(solver, t, idx, prepared)   device solve(s) + writeback
+  chunk_result(w) -> result        finalize chain w
+  alloc_full / restore_outputs / solve_item / full_result
+                                   the resumable single-chain path
+  item_noun, ckpt_key              checkpoint format compatibility
+
+Solver construction and the lockstep-compatibility predicate (`batchable`,
+`make_solver`, `make_lockstep_solver`) are shared scaffolding on the
+`WorkAdapter` base below — one copy of the routing rule for all workloads.
+
+Resumability (`run_resumable`) is the old generators' loop hoisted here
+verbatim: atomic npz snapshots every `ckpt_every` items (progress, order,
+outputs, recycle carry) with the exact historical field names, so existing
+checkpoints keep loading.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.ckpt import decode_carry, encode_carry
+from repro.core.sorting import chain_length, sort_features
+from repro.solvers.types import SequenceStats
+
+ENGINES = ("sequential", "batched", "sharded")
+
+
+class WorkAdapter:
+    """Shared adapter scaffolding: solver construction and the
+    lockstep-compatibility predicate live HERE so the rule cannot drift
+    between workloads. Subclasses must define `cfg` (with `.krylov`,
+    `.precond`, `.use_kernel`) plus the workload hooks in the module
+    docstring."""
+
+    item_noun = "item"
+    ckpt_key = "outputs"
+
+    def batchable(self) -> bool:
+        """False routes the lockstep engines to sequential: `ilu_host` is a
+        single-slot host callback, `ritz_refresh="final"` needs per-chain
+        last-cycle snapshots the batched solver does not keep."""
+        cfg = self.cfg
+        return not (cfg.precond == "ilu_host"
+                    or (cfg.krylov.k > 0
+                        and cfg.krylov.ritz_refresh == "final"))
+
+    def make_solver(self):
+        from repro.solvers.gcrodr import GCRODRSolver
+
+        return GCRODRSolver(self.cfg.krylov, use_kernel=self.cfg.use_kernel)
+
+    def make_lockstep_solver(self, sharding=None):
+        from repro.solvers.batched import BatchedGCRODRSolver
+
+        return BatchedGCRODRSolver(self.cfg.krylov,
+                                   use_kernel=self.cfg.use_kernel,
+                                   sharding=sharding)
+
+
+def plan_chains(order: np.ndarray, workers: int) -> List[np.ndarray]:
+    """Split a sorted order into `workers` contiguous recycle chains
+    (App. E.2.2 task decomposition; lengths differ by at most one)."""
+    n = len(order)
+    bounds = np.linspace(0, n, workers + 1).astype(int)
+    return [order[bounds[w]: bounds[w + 1]] for w in range(workers)]
+
+
+def resolve_engine(work, engine: str) -> str:
+    """Validate the engine name; auto-route configs the lockstep engines
+    cannot batch (`ilu_host`, `ritz_refresh="final"`) to sequential."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (one of {ENGINES})")
+    if engine != "sequential" and not work.batchable():
+        return "sequential"
+    return engine
+
+
+def _row_index(subs: List[np.ndarray], t: int) -> np.ndarray:
+    """Lockstep row t: the t-th item of every chain, -1 marks padding."""
+    return np.array([int(s[t]) if t < len(s) else -1 for s in subs])
+
+
+def _run_lockstep(work, subs, solver, prefetch: bool = True):
+    """Advance all chains through the lockstep rows, overlapping the next
+    row's host-side assembly against the current row's device solves."""
+    length = max((len(s) for s in subs), default=0)
+    if length == 0:
+        return
+    if not prefetch:
+        for t in range(length):
+            idx = _row_index(subs, t)
+            work.execute_row(solver, t, idx, work.prepare_row(t, idx))
+        return
+    with ThreadPoolExecutor(max_workers=1) as ex:
+        idx = _row_index(subs, 0)
+        fut = ex.submit(work.prepare_row, 0, idx)
+        for t in range(length):
+            prepared = fut.result()
+            cur_idx = idx
+            if t + 1 < length:
+                idx = _row_index(subs, t + 1)
+                fut = ex.submit(work.prepare_row, t + 1, idx)
+            work.execute_row(solver, t, cur_idx, prepared)
+
+
+def run_chunked(work, key, num: int, workers: int, engine: str,
+                prefetch: bool = True) -> list:
+    """The chunk-parallel pipeline: sort once, partition into `workers`
+    chains, dispatch to the chosen engine. Returns one result per chain
+    (sharding fill chains are dropped)."""
+    engine = resolve_engine(work, engine)
+    feats = work.sample(key, num)
+    order = sort_features(feats, work.cfg.sort_method)
+    subs = plan_chains(order, workers)
+    if engine == "sequential" or workers == 1:
+        return [work.solve_chunk_sequential(sub) for sub in subs]
+
+    sharding = None
+    fill = 0
+    if engine == "sharded":
+        from repro.distributed.sharding import ChainSharding, datagen_mesh
+
+        mesh = datagen_mesh()
+        if mesh is not None:
+            sharding = ChainSharding(mesh)
+            # the chain axis must divide the shard count: pad with EMPTY
+            # chains — every row sees them as zero-RHS padding slots
+            fill = -len(subs) % sharding.num_shards
+            subs = subs + [np.zeros(0, dtype=np.int64)] * fill
+
+    solver = work.make_lockstep_solver(sharding)
+    work.begin_lockstep(subs)
+    _run_lockstep(work, subs, solver, prefetch=prefetch)
+    return [work.chunk_result(w) for w in range(len(subs) - fill)]
+
+
+def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
+                  progress_cb: Optional[Callable[[int, int], None]] = None,
+                  fail_at: Optional[int] = None):
+    """The resumable single-chain pipeline (the plain generators' engine):
+    sort, then solve the whole order on ONE recycling chain, snapshotting
+    state atomically every `ckpt_every` items. `fail_at` is the
+    fault-injection hook (raises after that many items; a rerun resumes
+    warm from the checkpoint, recycle space intact)."""
+    cfg = work.cfg
+    feats = work.sample(key, num)
+
+    t0 = time.perf_counter()
+    order = sort_features(feats, cfg.sort_method)
+    sort_s = time.perf_counter() - t0
+    clen = chain_length(feats, order)
+
+    work.alloc_full(num)
+    solver = work.make_solver()
+    start_pos = 0
+    iters, times = [], []
+    enabled = ckpt is not None and ckpt.ckpt_dir
+
+    def _save(pos):
+        ckpt.save(pos=pos, order=order, u_carry=encode_carry(solver),
+                  iters=np.asarray(iters), times=np.asarray(times),
+                  **{work.ckpt_key: work.outputs})
+
+    state = ckpt.load() if enabled else None
+    if state is not None and len(state["order"]) == num:
+        order = state["order"]
+        work.restore_outputs(state[work.ckpt_key])
+        start_pos = int(state["pos"])
+        solver.u_carry = decode_carry(state)
+        iters, times = list(state["iters"]), list(state["times"])
+
+    stats = SequenceStats()
+    for pos in range(start_pos, num):
+        if fail_at is not None and pos >= fail_at:
+            if enabled:
+                _save(pos)
+            raise RuntimeError(
+                f"injected datagen fault at {work.item_noun} {pos}")
+        i = int(order[pos])
+        for st in work.solve_item(i, solver, stats):
+            iters.append(st.iterations)
+            times.append(st.wall_time_s)
+        if ckpt_every and enabled and (pos + 1) % ckpt_every == 0:
+            _save(pos + 1)
+        if progress_cb:
+            progress_cb(pos + 1, num)
+
+    if enabled:
+        _save(num)
+    return work.full_result(order, stats, sort_s, clen)

@@ -25,26 +25,28 @@ Production posture:
     chunks with independent recycle carries, one per worker / `data`-axis
     shard; sorting makes chunk-locality free.
 
-Batched execution (`generate_dataset_chunked`, engine="batched"):
-  The chunk-parallel path is genuinely concurrent, not simulated: the W
-  chunks advance in LOCKSTEP through a `BatchedGCRODRSolver` — at step t one
-  batched device program solves the t-th system of EVERY chunk (vmapped
-  Arnoldi/update dispatches + one batched stencil operator), each chunk
-  keeping its own recycle carry U_k. Semantics:
-  * padding: chunk lengths may differ by one (linspace bounds); short chunks
-    are padded with zero right-hand sides, which converge at 0 iterations,
-    return x = 0, and leave that chunk's recycle carry untouched — padded
-    slots are never written back to the dataset.
-  * early exit: within a lockstep solve, chunks that converge first are
-    frozen (masked) while the rest iterate; the reported per-system
-    `wall_time_s` is therefore the shared lockstep latency (= max over
-    chunks), the honest App. E.2.2 parallel-latency number.
-  * workers=1 (or engine="sequential") routes through the per-system
-    sequential loop — bitwise-identical to `SKRGenerator.generate` on the
-    same key, and the paper-parity baseline the benchmarks compare against.
+Scheduling lives in `core/pipeline.py` (sort → chain partition → lockstep
+packing → engine dispatch); this module supplies the steady-state WORK
+ADAPTER (`SteadyWork`) and keeps the historical entry points as thin
+frontends. Engines (`generate_dataset_chunked(engine=...)`):
+  * "sequential" — chunks back-to-back through the per-system solver
+    (paper-parity simulation; `workers=1` is bitwise-identical to
+    `SKRGenerator.generate`).
+  * "batched" — the W chunks advance in LOCKSTEP through a
+    `BatchedGCRODRSolver`: at step t one batched device program solves the
+    t-th system of EVERY chunk, each chunk keeping its own recycle carry.
+    Shorter chunks are padded with zero right-hand sides (0 iterations,
+    x = 0, carry untouched; padded slots are never written back and are
+    excluded from the per-chunk stats). Host-side row assembly (operator
+    gather + stacked preconditioner) is prefetched one row ahead of the
+    device solves.
+  * "sharded" — the lockstep batch with its chain axis sharded over the
+    `data` mesh axis: one SPMD program per row across every device (test
+    on CPU with XLA_FLAGS=--xla_force_host_platform_device_count=8; on a
+    single device it degenerates to "batched").
 
 Precision policy: set `SKRConfig.krylov.inner_dtype="float32"` to run the
-inner Krylov machinery of BOTH engines in fp32 (the solvers wrap it in an
+inner Krylov machinery of ALL engines in fp32 (the solvers wrap it in an
 fp64 iterative-refinement outer loop — see solvers/gcrodr.py). The
 operators/RHS of record and the emitted dataset labels stay fp64 at
 `cfg.tol`; the recycle carry is stored fp32, halving the datagen
@@ -53,19 +55,20 @@ checkpoint footprint (`ckpt_every` snapshots include the carry).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ckpt import NpzCheckpointer, decode_carry, encode_carry
-from repro.core.sorting import chain_length, sort_features
+from repro.core import pipeline
+from repro.core.ckpt import NpzCheckpointer
+from repro.core.sorting import chain_length
 from repro.pde.problems import LinearProblem, ProblemFamily
 from repro.solvers.gcrodr import GCRODRSolver
-from repro.solvers.operator import PreconditionedOp, as_operator
-from repro.solvers.precond import make_preconditioner
+from repro.solvers.operator import (PreconditionedOp, StencilOp, as_operator)
+from repro.solvers.precond import (make_preconditioner,
+                                   make_preconditioner_batched)
 from repro.solvers.types import KrylovConfig, SequenceStats
 
 
@@ -100,8 +103,134 @@ def _problem_op_of(batch: LinearProblem, i: int):
     return Stencil5(batch.op.coeffs[i])
 
 
+class SteadyWork(pipeline.WorkAdapter):
+    """Pipeline work adapter for steady-state linear systems (Figure 1).
+
+    Owns the sampled `LinearProblem` batch and the per-engine solve
+    plumbing; `core/pipeline.py` owns sorting, chain partitioning, lockstep
+    padding/prefetch, sharding and checkpoint cadence."""
+
+    item_noun = "system"
+    ckpt_key = "solutions"   # historical checkpoint field name
+
+    def __init__(self, family: ProblemFamily, cfg: SKRConfig):
+        self.family = family
+        self.cfg = cfg
+        self.batch: Optional[LinearProblem] = None
+        self.feats: Optional[np.ndarray] = None
+        self.outputs: Optional[np.ndarray] = None
+        self.snapshots: list = []
+
+    # ------------------------------------------------------- sampling
+    def sample(self, key: jax.Array, num: int) -> np.ndarray:
+        self.batch = self.family.sample_batch(key, num)
+        self.feats = np.asarray(self.batch.features)
+        return self.feats
+
+    # ------------------------------------- sequential (single-chain)
+    def alloc_full(self, num: int):
+        self.outputs = np.zeros((num, self.family.nx, self.family.ny))
+
+    def restore_outputs(self, arr: np.ndarray):
+        self.outputs = arr
+
+    def _solve_one(self, i: int, solver: GCRODRSolver):
+        cfg = self.cfg
+        prob_op = _problem_op_of(self.batch, i)
+        b = np.asarray(self.batch.b[i]).reshape(-1)
+        precond = make_preconditioner(cfg.precond, prob_op,
+                                      use_kernel=cfg.use_kernel)
+        op = PreconditionedOp(as_operator(prob_op, cfg.use_kernel), precond)
+        return solver.solve(op, b)
+
+    def solve_item(self, i: int, solver: GCRODRSolver,
+                   stats: SequenceStats) -> list:
+        x, st = self._solve_one(i, solver)
+        self.outputs[i] = x.reshape(self.family.nx, self.family.ny)
+        stats.append(st)
+        if self.cfg.record_recycle and solver.u_carry is not None:
+            self.snapshots.append((i, solver.u_carry.copy()))
+        return [st]
+
+    def full_result(self, order, stats, sort_s, clen) -> DataGenResult:
+        return DataGenResult(
+            inputs=np.asarray(self.batch.no_input),
+            solutions=self.outputs,
+            order=np.asarray(order),
+            stats=stats,
+            sort_seconds=sort_s,
+            chain_len=clen,
+            recycle_snapshots=self.snapshots,
+        )
+
+    # ---------------------------------------------- chunked engines
+    def solve_chunk_sequential(self, sub) -> DataGenResult:
+        """One chunk through the per-system sequential solver (paper-parity
+        baseline; bitwise-matches the single-chain generator per chunk)."""
+        solver = self.make_solver()
+        stats = SequenceStats()
+        nx, ny = self.family.nx, self.family.ny
+        sols = np.zeros((len(sub), nx, ny))
+        for pos, i in enumerate(sub):
+            x, st = self._solve_one(int(i), solver)
+            sols[pos] = x.reshape(nx, ny)
+            stats.append(st)
+        return self._chunk_result(sub, sols, stats)
+
+    def begin_lockstep(self, subs):
+        from repro.pde.dia import Stencil5
+
+        nx, ny = self.family.nx, self.family.ny
+        num = int(np.asarray(self.batch.b).shape[0])
+        self._subs = subs
+        self._sols = [np.zeros((len(s), nx, ny)) for s in subs]
+        self._stats = [SequenceStats() for _ in subs]
+        self._all_st5 = Stencil5(jnp.asarray(self.batch.op.coeffs))
+        self._b_all = np.asarray(self.batch.b).reshape(num, -1)
+
+    def prepare_row(self, t: int, idx: np.ndarray):
+        """HOST-side row assembly (runs on the prefetch thread): gather the
+        row's operators, factor the stacked preconditioner, pack the RHS."""
+        cfg = self.cfg
+        clamped = np.where(idx >= 0, idx, 0)
+        st5 = self._all_st5.take(jnp.asarray(clamped))   # (W, 5, nx, ny)
+        precond = make_preconditioner_batched(cfg.precond, st5,
+                                              use_kernel=cfg.use_kernel)
+        ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), precond)
+        bvec = self._b_all[clamped].copy()
+        bvec[idx < 0] = 0.0                              # padded slots
+        return ops, jnp.asarray(bvec)
+
+    def execute_row(self, solver, t: int, idx: np.ndarray, prepared):
+        ops, bvec = prepared
+        nx, ny = self.family.nx, self.family.ny
+        xs, st_list = solver.solve_batch(ops, bvec, padded_rows=idx < 0)
+        for w, i in enumerate(idx):
+            if i < 0:
+                continue                                 # padding row
+            self._sols[w][t] = xs[w].reshape(nx, ny)
+            self._stats[w].append(st_list[w])
+
+    def chunk_result(self, w: int) -> DataGenResult:
+        return self._chunk_result(self._subs[w], self._sols[w],
+                                  self._stats[w])
+
+    def _chunk_result(self, sub, sols, stats) -> DataGenResult:
+        sub = np.asarray(sub, dtype=np.int64)
+        return DataGenResult(
+            inputs=np.asarray(self.batch.no_input)[sub],
+            solutions=sols,
+            order=sub,
+            stats=stats,
+            sort_seconds=0.0,
+            chain_len=chain_length(self.feats, sub),
+            recycle_snapshots=[],
+        )
+
+
 class SKRGenerator:
-    """Resumable SKR data generator over one problem family."""
+    """Resumable SKR data generator over one problem family (a thin
+    frontend over `core/pipeline.run_resumable`)."""
 
     def __init__(self, family: ProblemFamily, cfg: SKRConfig,
                  ckpt_dir: Optional[str] = None):
@@ -110,21 +239,6 @@ class SKRGenerator:
         self.ckpt_dir = ckpt_dir
         self._ckpt = NpzCheckpointer(ckpt_dir, "datagen_state.npz")
 
-    # ------------------------------------------------------------- ckpt
-    def _save_ckpt(self, pos, order, solutions, solver, iters, times):
-        self._ckpt.save(pos=pos, order=order, solutions=solutions,
-                        u_carry=encode_carry(solver),
-                        iters=np.asarray(iters), times=np.asarray(times))
-
-    def _load_ckpt(self):
-        z = self._ckpt.load()
-        if z is None:
-            return None
-        return dict(pos=int(z["pos"]), order=z["order"], solutions=z["solutions"],
-                    u_carry=decode_carry(z),
-                    iters=list(z["iters"]), times=list(z["times"]))
-
-    # ------------------------------------------------------------- main
     def generate(self, key: jax.Array, num: int,
                  progress_cb: Optional[Callable[[int, int], None]] = None,
                  fail_at: Optional[int] = None) -> DataGenResult:
@@ -134,64 +248,11 @@ class SKRGenerator:
         that many systems (simulating preemption); a rerun resumes from the
         checkpoint, recycle space intact.
         """
-        cfg = self.cfg
-        batch = self.family.sample_batch(key, num)
-        feats = np.asarray(batch.features)
-
-        t0 = time.perf_counter()
-        order = sort_features(feats, cfg.sort_method)
-        sort_s = time.perf_counter() - t0
-        clen = chain_length(feats, order)
-
-        nx, ny = self.family.nx, self.family.ny
-        solutions = np.zeros((num, nx, ny))
-        solver = GCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
-        start_pos = 0
-        iters, times = [], []
-
-        state = self._load_ckpt()
-        if state is not None and len(state["order"]) == num:
-            order = state["order"]
-            solutions = state["solutions"]
-            start_pos = state["pos"]
-            solver.u_carry = state["u_carry"]
-            iters, times = state["iters"], state["times"]
-
-        stats = SequenceStats()
-        snapshots = []
-        for pos in range(start_pos, num):
-            if fail_at is not None and pos >= fail_at:
-                self._save_ckpt(pos, order, solutions, solver, iters, times)
-                raise RuntimeError(f"injected datagen fault at system {pos}")
-            i = int(order[pos])
-            prob_op = _problem_op_of(batch, i)
-            b = np.asarray(batch.b[i]).reshape(-1)
-            precond = make_preconditioner(cfg.precond, prob_op,
-                                          use_kernel=cfg.use_kernel)
-            op = PreconditionedOp(as_operator(prob_op, cfg.use_kernel), precond)
-            x, st = solver.solve(op, b)
-            solutions[i] = x.reshape(nx, ny)
-            iters.append(st.iterations)
-            times.append(st.wall_time_s)
-            stats.append(st)
-            if cfg.record_recycle and solver.u_carry is not None:
-                snapshots.append((i, solver.u_carry.copy()))
-            if cfg.ckpt_every and self.ckpt_dir and (pos + 1) % cfg.ckpt_every == 0:
-                self._save_ckpt(pos + 1, order, solutions, solver, iters, times)
-            if progress_cb:
-                progress_cb(pos + 1, num)
-
-        if self.ckpt_dir:
-            self._save_ckpt(num, order, solutions, solver, iters, times)
-        return DataGenResult(
-            inputs=np.asarray(batch.no_input),
-            solutions=solutions,
-            order=np.asarray(order),
-            stats=stats,
-            sort_seconds=sort_s,
-            chain_len=clen,
-            recycle_snapshots=snapshots,
-        )
+        work = SteadyWork(self.family, self.cfg)
+        return pipeline.run_resumable(work, key, num, ckpt=self._ckpt,
+                                      ckpt_every=self.cfg.ckpt_every,
+                                      progress_cb=progress_cb,
+                                      fail_at=fail_at)
 
 
 def generate_dataset(family: ProblemFamily, key: jax.Array, num: int,
@@ -211,78 +272,6 @@ def generate_dataset_baseline(family: ProblemFamily, key: jax.Array, num: int,
     return SKRGenerator(family, cfg).generate(key, num)
 
 
-def _chunk_result(family: ProblemFamily, batch: LinearProblem, feats, sub,
-                  sols, stats: SequenceStats) -> DataGenResult:
-    return DataGenResult(
-        inputs=np.asarray(batch.no_input)[sub],
-        solutions=sols,
-        order=np.asarray(sub),
-        stats=stats,
-        sort_seconds=0.0,
-        chain_len=chain_length(feats, sub),
-        recycle_snapshots=[],
-    )
-
-
-def _solve_chunk_sequential(family: ProblemFamily, batch: LinearProblem,
-                            feats, sub, cfg: SKRConfig) -> DataGenResult:
-    """One chunk through the per-system sequential solver (paper-parity
-    baseline; bitwise-matches `SKRGenerator.generate` for the whole order)."""
-    solver = GCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
-    stats = SequenceStats()
-    nx, ny = family.nx, family.ny
-    sols = np.zeros((len(sub), nx, ny))
-    for pos, i in enumerate(sub):
-        prob_op = _problem_op_of(batch, int(i))
-        b = np.asarray(batch.b[int(i)]).reshape(-1)
-        precond = make_preconditioner(cfg.precond, prob_op,
-                                      use_kernel=cfg.use_kernel)
-        op = PreconditionedOp(as_operator(prob_op, cfg.use_kernel), precond)
-        x, st = solver.solve(op, b)
-        sols[pos] = x.reshape(nx, ny)
-        stats.append(st)
-    return _chunk_result(family, batch, feats, sub, sols, stats)
-
-
-def _solve_chunks_batched(family: ProblemFamily, batch: LinearProblem,
-                          feats, subs, cfg: SKRConfig) -> list[DataGenResult]:
-    """All chunks in lockstep: one batched device program per system "row"
-    (see module docstring, Batched execution)."""
-    from repro.pde.dia import Stencil5
-    from repro.solvers.batched import BatchedGCRODRSolver
-    from repro.solvers.operator import StencilOp
-    from repro.solvers.precond import make_preconditioner_batched
-
-    nx, ny = family.nx, family.ny
-    num = int(np.asarray(batch.b).shape[0])
-    workers = len(subs)
-    length = max(len(s) for s in subs)
-    coeffs_all = jnp.asarray(batch.op.coeffs)
-    b_all = np.asarray(batch.b).reshape(num, -1)
-
-    solver = BatchedGCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
-    sols = [np.zeros((len(s), nx, ny)) for s in subs]
-    stats = [SequenceStats() for _ in subs]
-    all_st5 = Stencil5(coeffs_all)
-    for t in range(length):
-        idx = np.array([int(s[t]) if t < len(s) else -1 for s in subs])
-        clamped = np.where(idx >= 0, idx, 0)
-        st5 = all_st5.take(jnp.asarray(clamped))        # (W, 5, nx, ny)
-        precond = make_preconditioner_batched(cfg.precond, st5,
-                                              use_kernel=cfg.use_kernel)
-        ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), precond)
-        bvec = b_all[clamped].copy()
-        bvec[idx < 0] = 0.0                             # padded slots
-        xs, st_list = solver.solve_batch(ops, jnp.asarray(bvec))
-        for w, i in enumerate(idx):
-            if i < 0:
-                continue
-            sols[w][t] = xs[w].reshape(nx, ny)
-            stats[w].append(st_list[w])
-    return [_chunk_result(family, batch, feats, subs[w], sols[w], stats[w])
-            for w in range(workers)]
-
-
 def generate_dataset_chunked(family: ProblemFamily, key: jax.Array, num: int,
                              cfg: SKRConfig, workers: int = 8,
                              engine: str = "batched") -> list[DataGenResult]:
@@ -290,24 +279,13 @@ def generate_dataset_chunked(family: ProblemFamily, key: jax.Array, num: int,
     `workers` contiguous chunks, each chunk gets its OWN recycle carry.
 
     engine="batched" (default) advances all chunks concurrently through the
-    lockstep `BatchedGCRODRSolver`; engine="sequential" is the per-system
-    loop (chunks back-to-back — the paper-parity simulation). `workers=1`
-    always uses the sequential path: it is bitwise-identical to
-    `SKRGenerator.generate`. Configs the lockstep engine cannot batch
-    (`ilu_host`, `ritz_refresh="final"`) auto-route to the sequential path.
+    lockstep `BatchedGCRODRSolver`; engine="sharded" additionally shards the
+    chunk-chain axis over the `data` mesh (all available devices);
+    engine="sequential" is the per-system loop (chunks back-to-back — the
+    paper-parity simulation). `workers=1` always uses the sequential path:
+    it is bitwise-identical to `SKRGenerator.generate`. Configs the lockstep
+    engine cannot batch (`ilu_host`, `ritz_refresh="final"`) auto-route to
+    the sequential path.
     """
-    if engine not in ("batched", "sequential"):
-        raise ValueError(f"unknown engine {engine!r}")
-    if engine == "batched" and (
-            cfg.precond == "ilu_host"
-            or (cfg.krylov.k > 0 and cfg.krylov.ritz_refresh == "final")):
-        engine = "sequential"
-    batch = family.sample_batch(key, num)
-    feats = np.asarray(batch.features)
-    order = sort_features(feats, cfg.sort_method)
-    bounds = np.linspace(0, num, workers + 1).astype(int)
-    subs = [order[bounds[w]: bounds[w + 1]] for w in range(workers)]
-    if engine == "sequential" or workers == 1:
-        return [_solve_chunk_sequential(family, batch, feats, sub, cfg)
-                for sub in subs]
-    return _solve_chunks_batched(family, batch, feats, subs, cfg)
+    work = SteadyWork(family, cfg)
+    return pipeline.run_chunked(work, key, num, workers, engine)

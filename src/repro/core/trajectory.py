@@ -17,7 +17,15 @@ drift slowly with t. This engine exploits both levels:
      solves time step s of the current trajectory of EVERY chunk (all
      trajectories share nt/Δt, so the rows align with no phase drift).
      Shorter chunks are padded with zero right-hand sides — 0 iterations,
-     x = 0, recycle carry untouched — exactly the skr.py padding semantics.
+     x = 0, recycle carry untouched, excluded from the chunk stats. With
+     engine="sharded" the chunk-chain axis additionally shards over the
+     `data` mesh axis: one SPMD program per implicit step across every
+     device.
+
+The schedule (sort → chain partition → lockstep packing/prefetch → engine
+dispatch, plus the resumable single-chain loop) lives in
+`core/pipeline.py`; this module supplies the trajectory WORK ADAPTER
+(`TrajectoryWork`) and the θ-scheme marching.
 
 Resumable like `SKRGenerator`: the sequential engine checkpoints atomically
 every `ckpt_every` TRAJECTORIES (completed fields + solver recycle space);
@@ -33,7 +41,7 @@ RHS modes:
 
 Precision policy: set `TrajConfig.krylov.inner_dtype="float32"` to run
 every implicit step's Arnoldi cycles, preconditioner applies and
-recycle-space updates in fp32 (both engines — the solvers implement the
+recycle-space updates in fp32 (all engines — the solvers implement the
 fp64 iterative-refinement outer loop internally). The θ-scheme assembly,
 the marched fields u_t, the emitted trajectory labels and the increment
 RHS b − A u_n all stay fp64; the recycle carry ridden across time steps
@@ -43,15 +51,15 @@ resumed run continues the fp32 chain exactly.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ckpt import NpzCheckpointer, decode_carry, encode_carry
-from repro.core.sorting import chain_length, sort_features
+from repro.core import pipeline
+from repro.core.ckpt import NpzCheckpointer
+from repro.core.sorting import chain_length
 from repro.pde.dia import Stencil5, stencil5_matvec
 from repro.pde.timedep import TimeDepFamily, TrajectorySpec
 from repro.solvers.gcrodr import GCRODRSolver
@@ -129,9 +137,134 @@ def march_trajectory(family: TimeDepFamily, spec: TrajectorySpec,
     return traj, stats
 
 
+class TrajectoryWork(pipeline.WorkAdapter):
+    """Pipeline work adapter for θ-scheme trajectories: one work item = one
+    trajectory (nt implicit-step solves on the item's recycle chain)."""
+
+    item_noun = "trajectory"
+    ckpt_key = "trajs"   # historical checkpoint field name
+
+    def __init__(self, family: TimeDepFamily, cfg: TrajConfig):
+        self.family = family
+        self.cfg = cfg
+        self.specs: Optional[TrajectorySpec] = None
+        self.feats: Optional[np.ndarray] = None
+        self.outputs: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------- sampling
+    def sample(self, key: jax.Array, num: int) -> np.ndarray:
+        self.specs = self.family.sample_specs(key, num)
+        self.feats = np.asarray(self.specs.features)
+        return self.feats
+
+    # ------------------------------------- sequential (single-chain)
+    def alloc_full(self, num: int):
+        self.outputs = np.zeros((num, self.family.nt + 1,
+                                 self.family.nx, self.family.ny))
+
+    def restore_outputs(self, arr: np.ndarray):
+        self.outputs = arr
+
+    def solve_item(self, i: int, solver: GCRODRSolver,
+                   stats: SequenceStats) -> list:
+        before = len(stats.per_system)
+        self.outputs[i] = _march_one(self.family, _spec_at(self.specs, i),
+                                     self.cfg, solver, stats)
+        return stats.per_system[before:]
+
+    def full_result(self, order, stats, sort_s, clen) -> TrajResult:
+        return TrajResult(
+            trajectories=self.outputs,
+            no_input=np.asarray(self.specs.no_input),
+            order=np.asarray(order),
+            stats=stats,
+            sort_seconds=sort_s,
+            chain_len=clen,
+        )
+
+    # ---------------------------------------------- chunked engines
+    def solve_chunk_sequential(self, sub) -> TrajResult:
+        """One chunk of sorted trajectories through the per-system
+        sequential solver (fresh recycle chain per chunk, carried across the
+        chunk's trajectories — bitwise-matches the single-chain generator
+        when workers=1)."""
+        solver = self.make_solver()
+        stats = SequenceStats()
+        trajs = np.zeros((len(sub), self.family.nt + 1,
+                          self.family.nx, self.family.ny))
+        for pos, i in enumerate(sub):
+            trajs[pos] = _march_one(self.family, _spec_at(self.specs, int(i)),
+                                    self.cfg, solver, stats)
+        return self._chunk_result(sub, trajs, stats)
+
+    def begin_lockstep(self, subs):
+        self._subs = subs
+        self._trajs = [np.zeros((len(s), self.family.nt + 1,
+                                 self.family.nx, self.family.ny))
+                       for s in subs]
+        self._stats = [SequenceStats() for _ in subs]
+        self._stepB = self.family.step_fn_batched()
+        self._u0_all = jnp.asarray(self.specs.u0)
+
+    def prepare_row(self, t: int, idx: np.ndarray):
+        """Row assembly (prefetch thread): gather the row's trajectory
+        latents + initial fields; padded slots get zero fields."""
+        clamped = jnp.asarray(np.where(idx >= 0, idx, 0))
+        live = idx >= 0
+        live_dev = jnp.asarray(live)[:, None, None]
+        lat = jax.tree_util.tree_map(lambda a: a[clamped], self.specs.latent)
+        u = jnp.where(live_dev, self._u0_all[clamped], 0.0)
+        return lat, u, live, live_dev
+
+    def execute_row(self, solver, j: int, idx: np.ndarray, prepared):
+        """March row j: at step s, ONE batched (possibly sharded) device
+        program advances the s-th implicit step of every chunk's current
+        trajectory."""
+        family, cfg = self.family, self.cfg
+        nx, ny = family.nx, family.ny
+        workers = len(idx)
+        lat, u, live, live_dev = prepared
+        u_np = np.asarray(u)
+        for w in np.nonzero(live)[0]:
+            self._trajs[w][j, 0] = u_np[w]
+        for step in range(family.nt):
+            t_old, t_new = step * family.dt, (step + 1) * family.dt
+            a, b = self._stepB(lat, u, t_old, t_new)
+            rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
+            rhs = jnp.where(live_dev, rhs, 0.0)      # padded chunks, on device
+            st5 = Stencil5(a)                        # (W, 5, nx, ny)
+            pre = make_preconditioner_batched(cfg.precond, st5,
+                                              use_kernel=cfg.use_kernel)
+            ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
+            xs, st_list = solver.solve_batch(ops, rhs.reshape(workers, -1),
+                                             padded_rows=~live)
+            delta = jnp.asarray(xs.reshape(workers, nx, ny))
+            u = u + delta if cfg.rhs_mode == "increment" else delta
+            u_np = np.asarray(u)                     # one sync per step
+            for w in np.nonzero(live)[0]:
+                self._trajs[w][j, step + 1] = u_np[w]
+                self._stats[w].append(st_list[w])
+
+    def chunk_result(self, w: int) -> TrajResult:
+        return self._chunk_result(self._subs[w], self._trajs[w],
+                                  self._stats[w])
+
+    def _chunk_result(self, sub, trajs, stats) -> TrajResult:
+        sub = np.asarray(sub, dtype=np.int64)
+        return TrajResult(
+            trajectories=trajs,
+            no_input=np.asarray(self.specs.no_input)[sub],
+            order=sub,
+            stats=stats,
+            sort_seconds=0.0,
+            chain_len=chain_length(self.feats, sub),
+        )
+
+
 class TrajectoryGenerator:
     """Resumable trajectory data generator over one time-dependent family
-    (the `SKRGenerator` of the trajectory subsystem)."""
+    (the `SKRGenerator` of the trajectory subsystem — a thin frontend over
+    `core/pipeline.run_resumable`)."""
 
     def __init__(self, family: TimeDepFamily, cfg: TrajConfig,
                  ckpt_dir: Optional[str] = None):
@@ -140,21 +273,6 @@ class TrajectoryGenerator:
         self.ckpt_dir = ckpt_dir
         self._ckpt = NpzCheckpointer(ckpt_dir, "trajgen_state.npz")
 
-    # ------------------------------------------------------------- ckpt
-    def _save_ckpt(self, pos, order, trajs, solver, iters, times):
-        self._ckpt.save(pos=pos, order=order, trajs=trajs,
-                        u_carry=encode_carry(solver),
-                        iters=np.asarray(iters), times=np.asarray(times))
-
-    def _load_ckpt(self):
-        z = self._ckpt.load()
-        if z is None:
-            return None
-        return dict(pos=int(z["pos"]), order=z["order"], trajs=z["trajs"],
-                    u_carry=decode_carry(z),
-                    iters=list(z["iters"]), times=list(z["times"]))
-
-    # ------------------------------------------------------------- main
     def generate(self, key: jax.Array, num: int,
                  progress_cb: Optional[Callable[[int, int], None]] = None,
                  fail_at: Optional[int] = None) -> TrajResult:
@@ -164,55 +282,11 @@ class TrajectoryGenerator:
         that many trajectories; a rerun resumes from the checkpoint with the
         recycle space intact, mirroring `SKRGenerator.generate`.
         """
-        family, cfg = self.family, self.cfg
-        specs = family.sample_specs(key, num)
-        feats = np.asarray(specs.features)
-
-        t0 = time.perf_counter()
-        order = sort_features(feats, cfg.sort_method)
-        sort_s = time.perf_counter() - t0
-        clen = chain_length(feats, order)
-
-        nx, ny = family.nx, family.ny
-        trajs = np.zeros((num, family.nt + 1, nx, ny))
-        solver = GCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
-        start_pos = 0
-        iters, times = [], []
-
-        state = self._load_ckpt()
-        if state is not None and len(state["order"]) == num:
-            order = state["order"]
-            trajs = state["trajs"]
-            start_pos = state["pos"]
-            solver.u_carry = state["u_carry"]
-            iters, times = state["iters"], state["times"]
-
-        stats = SequenceStats()
-        for pos in range(start_pos, num):
-            if fail_at is not None and pos >= fail_at:
-                self._save_ckpt(pos, order, trajs, solver, iters, times)
-                raise RuntimeError(f"injected datagen fault at trajectory {pos}")
-            i = int(order[pos])
-            trajs[i] = _march_one(family, _spec_at(specs, i), cfg, solver,
-                                  stats)
-            for st in stats.per_system[-family.nt:]:
-                iters.append(st.iterations)
-                times.append(st.wall_time_s)
-            if cfg.ckpt_every and self.ckpt_dir and (pos + 1) % cfg.ckpt_every == 0:
-                self._save_ckpt(pos + 1, order, trajs, solver, iters, times)
-            if progress_cb:
-                progress_cb(pos + 1, num)
-
-        if self.ckpt_dir:
-            self._save_ckpt(num, order, trajs, solver, iters, times)
-        return TrajResult(
-            trajectories=trajs,
-            no_input=np.asarray(specs.no_input),
-            order=np.asarray(order),
-            stats=stats,
-            sort_seconds=sort_s,
-            chain_len=clen,
-        )
+        work = TrajectoryWork(self.family, self.cfg)
+        return pipeline.run_resumable(work, key, num, ckpt=self._ckpt,
+                                      ckpt_every=self.cfg.ckpt_every,
+                                      progress_cb=progress_cb,
+                                      fail_at=fail_at)
 
 
 def generate_trajectories(family: TimeDepFamily, key: jax.Array, num: int,
@@ -232,79 +306,6 @@ def generate_trajectories_baseline(family: TimeDepFamily, key: jax.Array,
     return TrajectoryGenerator(family, cfg).generate(key, num)
 
 
-# ---------------------------------------------------------------- chunked
-
-def _chunk_result(specs, feats, sub, trajs, stats) -> TrajResult:
-    return TrajResult(
-        trajectories=trajs,
-        no_input=np.asarray(specs.no_input)[np.asarray(sub)],
-        order=np.asarray(sub),
-        stats=stats,
-        sort_seconds=0.0,
-        chain_len=chain_length(feats, sub),
-    )
-
-
-def _solve_chunk_sequential(family, specs, feats, sub, cfg) -> TrajResult:
-    """One chunk of sorted trajectories through the per-system sequential
-    solver (fresh recycle chain per chunk, carried across the chunk's
-    trajectories — bitwise-matches `TrajectoryGenerator.generate` when
-    workers=1)."""
-    solver = GCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
-    stats = SequenceStats()
-    trajs = np.zeros((len(sub), family.nt + 1, family.nx, family.ny))
-    for pos, i in enumerate(sub):
-        trajs[pos] = _march_one(family, _spec_at(specs, int(i)), cfg, solver,
-                                stats)
-    return _chunk_result(specs, feats, sub, trajs, stats)
-
-
-def _solve_chunks_batched(family, specs, feats, subs, cfg) -> list[TrajResult]:
-    """All chunks in lockstep: at trajectory row j, step s, ONE batched
-    device program advances the s-th implicit step of chunk w's j-th
-    trajectory for every w (see module docstring, level 3)."""
-    from repro.solvers.batched import BatchedGCRODRSolver
-
-    nx, ny = family.nx, family.ny
-    workers = len(subs)
-    length = max(len(s) for s in subs)
-    stepB = family.step_fn_batched()
-    u0_all = jnp.asarray(specs.u0)
-
-    solver = BatchedGCRODRSolver(cfg.krylov, use_kernel=cfg.use_kernel)
-    trajs = [np.zeros((len(s), family.nt + 1, nx, ny)) for s in subs]
-    stats = [SequenceStats() for _ in subs]
-    for j in range(length):
-        idx = np.array([int(s[j]) if j < len(s) else -1 for s in subs])
-        clamped = jnp.asarray(np.where(idx >= 0, idx, 0))
-        live = idx >= 0
-        live_dev = jnp.asarray(live)[:, None, None]
-        lat = jax.tree_util.tree_map(lambda a: a[clamped],
-                                     specs.latent)
-        u = jnp.where(live_dev, u0_all[clamped], 0.0)
-        u_np = np.asarray(u)
-        for w in np.nonzero(live)[0]:
-            trajs[w][j, 0] = u_np[w]
-        for step in range(family.nt):
-            t_old, t_new = step * family.dt, (step + 1) * family.dt
-            a, b = stepB(lat, u, t_old, t_new)
-            rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
-            rhs = jnp.where(live_dev, rhs, 0.0)      # padded chunks, on device
-            st5 = Stencil5(a)                        # (W, 5, nx, ny)
-            pre = make_preconditioner_batched(cfg.precond, st5,
-                                              use_kernel=cfg.use_kernel)
-            ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
-            xs, st_list = solver.solve_batch(ops, rhs.reshape(workers, -1))
-            delta = jnp.asarray(xs.reshape(workers, nx, ny))
-            u = u + delta if cfg.rhs_mode == "increment" else delta
-            u_np = np.asarray(u)                     # one sync per step
-            for w in np.nonzero(live)[0]:
-                trajs[w][j, step + 1] = u_np[w]
-                stats[w].append(st_list[w])
-    return [_chunk_result(specs, feats, subs[w], trajs[w], stats[w])
-            for w in range(workers)]
-
-
 def generate_trajectories_chunked(family: TimeDepFamily, key: jax.Array,
                                   num: int, cfg: TrajConfig, workers: int = 4,
                                   engine: str = "batched") -> list[TrajResult]:
@@ -313,24 +314,13 @@ def generate_trajectories_chunked(family: TimeDepFamily, key: jax.Array,
     chunk (the App. E.2.2 decomposition lifted to trajectory granularity).
 
     engine="batched" advances all chunks concurrently in lockstep;
-    engine="sequential" runs chunks back-to-back (paper-parity simulation).
-    workers=1 always takes the sequential path and is bitwise-identical to
+    engine="sharded" additionally shards the chunk-chain axis over the
+    `data` mesh (all available devices); engine="sequential" runs chunks
+    back-to-back (paper-parity simulation). workers=1 always takes the
+    sequential path and is bitwise-identical to
     `TrajectoryGenerator.generate` on the same key. Configs the lockstep
     engine cannot batch (`ilu_host`, `ritz_refresh="final"`) auto-route to
     the sequential path, mirroring `generate_dataset_chunked`.
     """
-    if engine not in ("batched", "sequential"):
-        raise ValueError(f"unknown engine {engine!r}")
-    if engine == "batched" and (
-            cfg.precond == "ilu_host"
-            or (cfg.krylov.k > 0 and cfg.krylov.ritz_refresh == "final")):
-        engine = "sequential"
-    specs = family.sample_specs(key, num)
-    feats = np.asarray(specs.features)
-    order = sort_features(feats, cfg.sort_method)
-    bounds = np.linspace(0, num, workers + 1).astype(int)
-    subs = [order[bounds[w]: bounds[w + 1]] for w in range(workers)]
-    if engine == "sequential" or workers == 1:
-        return [_solve_chunk_sequential(family, specs, feats, sub, cfg)
-                for sub in subs]
-    return _solve_chunks_batched(family, specs, feats, subs, cfg)
+    work = TrajectoryWork(family, cfg)
+    return pipeline.run_chunked(work, key, num, workers, engine)

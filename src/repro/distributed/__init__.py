@@ -1,6 +1,8 @@
-"""Distributed runtime: mesh-aware sharding rules, logical-axis helpers and
-gradient compression."""
-from repro.distributed.sharding import (batch_axes, logical_to_spec,
+"""Distributed runtime: mesh-aware sharding rules, logical-axis helpers,
+datagen chunk-chain sharding and gradient compression."""
+from repro.distributed.sharding import (ChainSharding, batch_axes,
+                                        datagen_mesh, logical_to_spec,
                                         param_specs, shard_act)
 
-__all__ = ["batch_axes", "logical_to_spec", "param_specs", "shard_act"]
+__all__ = ["ChainSharding", "batch_axes", "datagen_mesh", "logical_to_spec",
+           "param_specs", "shard_act"]

@@ -1,5 +1,18 @@
 """Sharding rules: logical activation/parameter axes → mesh PartitionSpecs.
 
+Two consumers live here:
+
+  * the TRAINING/SERVING stack (launch/mesh.py meshes) — logical
+    activation/parameter axes resolved against the ACTIVE abstract mesh
+    (`logical_to_spec`, `shard_act`, `param_specs`);
+  * the DATAGEN pipeline (core/pipeline.py) — solver-array specs for the
+    lockstep batched GCRO-DR engine, resolved against an EXPLICIT 1-D
+    `data` mesh (`datagen_mesh`, `ChainSharding`): arrays with a leading
+    chain axis (right-hand sides, residuals, per-chain recycle carries
+    U_k/C_k, batched operator/preconditioner leaves) shard on "dp"; the
+    small host eigen/LS factors never touch the mesh — they are computed
+    replicated-per-shard on host from the gathered row.
+
 Mesh layout (launch/mesh.py):
     single-pod : (data=16, model=16)
     multi-pod  : (pod=2, data=16, model=16)
@@ -21,6 +34,9 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 
@@ -180,3 +196,68 @@ def param_specs(params_shape_tree) -> "jax.tree_util.PyTreeDef":
         return _validate_divisibility(spec, tuple(leaf.shape))
 
     return jax.tree_util.tree_map_with_path(visit, params_shape_tree)
+
+
+# --------------------------------------------------------------------------
+# Datagen solver-array sharding: the lockstep batched GCRO-DR engine
+# (solvers/batched.py) advances B independent recycle chains; the chains
+# never exchange Krylov information, so the leading chain axis is a pure
+# data-parallel ("dp") axis. `ChainSharding` is the spec table the solver
+# consults: shard the chain axis of every large device array over a 1-D
+# `data` mesh, keep everything else (scalars, small host factors) replicated.
+# --------------------------------------------------------------------------
+
+
+def datagen_mesh(max_shards: Optional[int] = None) -> Optional[Mesh]:
+    """1-D (data,) mesh over the available devices for chunk-chain sharding.
+
+    Returns None on a single device (the sharded engine then degenerates to
+    the plain batched engine — no mesh, no resharding cost). Test sharding
+    on CPU with XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    devs = jax.devices()
+    n = len(devs) if max_shards is None else min(len(devs), int(max_shards))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), ("data",))
+
+
+class ChainSharding:
+    """Solver-array specs for lockstep chunk-chain sharding.
+
+    Logical rule (the datagen analogue of the "dp" activation axis): any
+    solver array whose LEADING axis is the chain axis — right-hand sides
+    (B, n), running solutions/residuals (B, n), Krylov bases (B, m+1, n),
+    per-chain recycle carries U_k/C_k (B, n, k), batched operator and
+    preconditioner leaves (B, ...) — shards that axis over the `data` mesh
+    axis. Host eigen/LS inputs are gathered to numpy (replicated per shard)
+    exactly as in the unsharded engine, so the O(m³) cleanup stays on host.
+
+    Arrays whose leading dim does not divide the shard count fall back to
+    replicated (the pipeline pads the chain count so the hot arrays always
+    divide)."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    @property
+    def num_shards(self) -> int:
+        return int(dict(self.mesh.shape)["data"])
+
+    def spec(self, ndim: int) -> P:
+        """PartitionSpec sharding only the leading (chain) axis on "dp"."""
+        return P("data", *((None,) * (ndim - 1)))
+
+    def put(self, x):
+        """device_put one solver array with the chain axis sharded; arrays
+        that cannot shard (scalars, non-divisible leading dim) replicate."""
+        x = jnp.asarray(x)
+        if x.ndim == 0 or x.shape[0] % self.num_shards != 0:
+            spec = P()
+        else:
+            spec = self.spec(x.ndim)
+        return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+    def put_tree(self, tree):
+        """Shard every array leaf of an operator/preconditioner pytree
+        (batched leaves all carry the leading chain axis)."""
+        return jax.tree_util.tree_map(self.put, tree)

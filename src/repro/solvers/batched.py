@@ -36,6 +36,16 @@ returned `SolveStats.wall_time_s` is the LOCKSTEP latency of the whole
 batched solve (identical across chains) — the honest parallel-latency
 number App. E.2.2 reports (max over workers == the shared wall clock).
 
+Sharding (the multi-device axis): the chains are data-parallel — they share
+no Krylov information — so the leading chain axis of every large device
+array shards cleanly over a 1-D `data` mesh. Construct the solver with a
+`distributed.sharding.ChainSharding` and every lockstep dispatch runs as
+ONE SPMD program across the mesh: right-hand sides, residuals, bases and
+per-chain recycle carries live chain-sharded on device, while the small
+host eigen/LS solves stay replicated-per-shard on host (gathered rows),
+exactly as in the unsharded engine. The caller owns making the chain count
+divide the shard count (core/pipeline.py pads with zero-RHS chains).
+
 Precision policy: `cfg.inner_dtype="float32"` routes `solve_batch` through
 `_solve_batch_mixed` — the fp64 outer iterative-refinement loop of the
 sequential solver lifted to lockstep granularity. All B chains share each
@@ -118,7 +128,7 @@ class BatchedGCRODRSolver:
     """
 
     def __init__(self, cfg: KrylovConfig, use_kernel: bool = False,
-                 stall_break: bool = False):
+                 stall_break: bool = False, sharding=None):
         if cfg.k > 0 and cfg.ritz_refresh != "cycle":
             raise NotImplementedError(
                 "BatchedGCRODRSolver implements the paper-faithful "
@@ -126,6 +136,10 @@ class BatchedGCRODRSolver:
                 "last-cycle snapshots (use the sequential engine)")
         self.cfg = cfg
         self.use_kernel = use_kernel
+        # sharding: optional distributed.sharding.ChainSharding — shards the
+        # leading chain axis of every large device array over the `data`
+        # mesh axis, turning each lockstep dispatch into one SPMD program
+        self.sharding = sharding
         # stall_break: mask out (as stalled) chains whose cycles stop
         # reducing the residual instead of spinning the lockstep to maxiter
         # — set by the mixed-precision outer loop on its inner fp32 solver,
@@ -144,8 +158,13 @@ class BatchedGCRODRSolver:
         self._inner = None
         self._inner64 = None
 
+    def _dev(self, x):
+        """Place one solver array: chain-sharded over the mesh when a
+        ChainSharding is configured, default single-device otherwise."""
+        return x if self.sharding is None else self.sharding.put(x)
+
     # ------------------------------------------------------------------
-    def solve_batch(self, ops, b):
+    def solve_batch(self, ops, b, padded_rows=None):
         """Solve B independent systems, one per chain.
 
         ops : PreconditionedOp pytree whose EVERY leaf carries a leading
@@ -153,19 +172,25 @@ class BatchedGCRODRSolver:
         b   : (B, n) right-hand sides. A zero row marks a padded chain
               (shorter chunk): it converges at 0 iterations with x = 0 and
               leaves the chain's recycle carry untouched.
+        padded_rows : optional (B,) bool — which rows are PADDING (drive
+              `SolveStats.padded` + the zeroed wall time). Defaults to the
+              zero-RHS rows; the pipeline passes its own mask so a
+              legitimate b = 0 system is not miscounted as padding.
 
         Returns (x (B, n) np.ndarray, [SolveStats] * B).
         """
         cfg = self.cfg
         if cfg.inner_dtype == "float32":
-            return self._solve_batch_mixed(ops, b)
+            return self._solve_batch_mixed(ops, b, padded_rows)
         k = cfg.k
         t0 = time.perf_counter()
-        b = jnp.asarray(b)
+        b = self._dev(jnp.asarray(b))
+        if self.sharding is not None:
+            ops = self.sharding.put_tree(ops)
         bsz, n = b.shape
         dt = b.dtype
 
-        z = jnp.zeros((bsz, n), dt)
+        z = self._dev(jnp.zeros((bsz, n), dt))
         r = b
         bnorm = np.asarray(jnp.linalg.norm(b, axis=1))
         rnorm = bnorm.copy()
@@ -178,15 +203,15 @@ class BatchedGCRODRSolver:
         stalled = np.zeros(bsz, dtype=bool)
         no_prog = np.zeros(bsz, dtype=int)  # stall_break progress counters
 
-        c_dev = jnp.zeros((bsz, n, k), dt)
-        u_dev = jnp.zeros((bsz, n, k), dt)
+        c_dev = self._dev(jnp.zeros((bsz, n, k), dt))
+        u_dev = self._dev(jnp.zeros((bsz, n, k), dt))
         established = np.zeros(bsz, dtype=bool)
 
         # ---- warm start: re-biorthogonalize carried spaces (Alg. 2 l.2-7)
         if k > 0 and self.u_carry is not None:
             want = self.carry_ok & ~zerob & (rnorm > tol_abs)
             if want.any():
-                u_old = jnp.asarray(self.u_carry)
+                u_old = self._dev(jnp.asarray(self.u_carry))
                 au = _apply_cols_b(ops, u_old)
                 matvecs += np.where(want, k, 0)
                 q, rr = jnp.linalg.qr(au)
@@ -208,7 +233,7 @@ class BatchedGCRODRSolver:
                 u_dev = _sel(ok, u_new, u_dev)
                 established = ok
 
-        empty_c = jnp.zeros((bsz, 0, n), dt)
+        empty_c = self._dev(jnp.zeros((bsz, 0, n), dt))
         m_fresh = cfg.m  # k=0: grows adaptively, mirroring gmres_solve
         m_cap = min(n, cfg.m_max if cfg.m_max else 8 * cfg.m)
 
@@ -383,6 +408,7 @@ class BatchedGCRODRSolver:
         x = np.asarray(_from_z_b(ops, z))
         wall = time.perf_counter() - t0
         converged = zerob | (rnorm <= tol_abs)
+        pad = zerob if padded_rows is None else np.asarray(padded_rows)
         stats = []
         for i in range(bsz):
             stats.append(SolveStats(
@@ -392,8 +418,12 @@ class BatchedGCRODRSolver:
                 converged=bool(converged[i]),
                 rel_residual=0.0 if zerob[i]
                 else float(rnorm[i] / bnorm[i]),
-                wall_time_s=wall,  # lockstep latency, shared by the batch
+                # lockstep latency, shared by the batch; a padding row
+                # solved nothing and reports 0 so engine comparisons of
+                # per-chunk totals stay honest
+                wall_time_s=0.0 if pad[i] else wall,
                 breakdown=bool(stalled[i]),
+                padded=bool(pad[i]),
             ))
 
         if k > 0:
@@ -412,7 +442,7 @@ class BatchedGCRODRSolver:
         return x, stats
 
     # ------------------------------------------------------------------
-    def _solve_batch_mixed(self, ops, b):
+    def _solve_batch_mixed(self, ops, b, padded_rows=None):
         """fp64 iterative refinement over fp32 LOCKSTEP correction solves.
 
         The whole batch advances through the same outer passes: per pass,
@@ -426,9 +456,11 @@ class BatchedGCRODRSolver:
         """
         cfg = self.cfg
         t0 = time.perf_counter()
-        b = jnp.asarray(b, jnp.float64)
+        b = self._dev(jnp.asarray(b, jnp.float64))
+        if self.sharding is not None:
+            ops = self.sharding.put_tree(ops)
         bsz, n = b.shape
-        x = jnp.zeros((bsz, n), b.dtype)
+        x = self._dev(jnp.zeros((bsz, n), b.dtype))
         r = b
         bnorm = np.asarray(jnp.linalg.norm(b, axis=1))
         rnorm = bnorm.copy()
@@ -445,7 +477,8 @@ class BatchedGCRODRSolver:
 
         if self._inner is None:
             self._inner = BatchedGCRODRSolver(cfg, use_kernel=self.use_kernel,
-                                              stall_break=True)
+                                              stall_break=True,
+                                              sharding=self.sharding)
         inner = self._inner
         # push the public carry (possibly from a checkpoint or an earlier
         # precision) down into the inner solver, stored fp32
@@ -483,7 +516,8 @@ class BatchedGCRODRSolver:
                     # plateau for stretches (indefinite operators) — it gets
                     # the same patience as the plain fp64 engine
                     self._inner64 = BatchedGCRODRSolver(
-                        cfg, use_kernel=self.use_kernel)
+                        cfg, use_kernel=self.use_kernel,
+                        sharding=self.sharding)
                 tol_i = min(0.5, max(0.5 * float((tol_abs[need]
                                                   / rnorm[need]).min()),
                                      1e-14))
@@ -527,6 +561,7 @@ class BatchedGCRODRSolver:
         x_np = np.asarray(x)
         wall = time.perf_counter() - t0
         converged = zerob | (rnorm <= tol_abs)
+        pad = zerob if padded_rows is None else np.asarray(padded_rows)
         stats = []
         for i in range(bsz):
             stats.append(SolveStats(
@@ -536,13 +571,15 @@ class BatchedGCRODRSolver:
                 converged=bool(converged[i]),
                 rel_residual=0.0 if zerob[i]
                 else float(rnorm[i] / bnorm[i]),
-                wall_time_s=wall,  # lockstep latency, shared by the batch
+                # shared lockstep latency; 0 for padding rows
+                wall_time_s=0.0 if pad[i] else wall,
                 # breakdown marks a genuine stall (no progress even in the
                 # fp64 fallback) — maxiter exhaustion stays False, matching
                 # the plain engines' semantics
                 breakdown=bool(stuck[i]),
                 outer_refinements=int(outer[i]),
                 fp64_fallback=bool(fb64[i]),
+                padded=bool(pad[i]),
             ))
         if cfg.k > 0 and inner.u_carry is not None:
             self.u_carry = np.asarray(inner.u_carry, np.float32)

@@ -20,6 +20,11 @@ class SolveStats:
     # mixed-precision accounting (inner_dtype="float32" runs only):
     outer_refinements: int = 0  # fp64 iterative-refinement passes taken
     fp64_fallback: bool = False  # fp32 cycles stagnated → finished in fp64
+    # lockstep-engine padding accounting: True marks a zero-RHS padding row
+    # (shorter chunk / sharding fill) — it costs nothing (0 iterations,
+    # wall_time_s = 0.0) and is EXCLUDED from SequenceStats aggregates so
+    # iteration/time totals compare cleanly across engines
+    padded: bool = False
 
     def merge_inner(self, other: "SolveStats"):
         """Fold an inner (correction-solve) pass into this outer record."""
@@ -30,7 +35,12 @@ class SolveStats:
 
 @dataclasses.dataclass
 class SequenceStats:
-    """Aggregates over a sorted sequence of systems (one dataset)."""
+    """Aggregates over a sorted sequence of systems (one dataset).
+
+    Zero-RHS padding rows emitted by the lockstep engines (`padded=True`)
+    are kept in `per_system` for auditability but excluded from every
+    aggregate — a padded slot solved nothing, so counting it would skew
+    per-system means when comparing engines with different padding."""
 
     per_system: List[SolveStats] = dataclasses.field(default_factory=list)
 
@@ -38,12 +48,21 @@ class SequenceStats:
         self.per_system.append(s)
 
     @property
+    def solved(self) -> List[SolveStats]:
+        """Real (non-padding) solves — the aggregation population."""
+        return [s for s in self.per_system if not s.padded]
+
+    @property
     def num(self) -> int:
-        return len(self.per_system)
+        return len(self.solved)
+
+    @property
+    def num_padded(self) -> int:
+        return len(self.per_system) - self.num
 
     @property
     def total_iterations(self) -> int:
-        return int(sum(s.iterations for s in self.per_system))
+        return int(sum(s.iterations for s in self.solved))
 
     @property
     def mean_iterations(self) -> float:
@@ -51,7 +70,7 @@ class SequenceStats:
 
     @property
     def total_time_s(self) -> float:
-        return float(sum(s.wall_time_s for s in self.per_system))
+        return float(sum(s.wall_time_s for s in self.solved))
 
     @property
     def mean_time_s(self) -> float:
@@ -59,7 +78,7 @@ class SequenceStats:
 
     @property
     def num_converged(self) -> int:
-        return int(sum(s.converged for s in self.per_system))
+        return int(sum(s.converged for s in self.solved))
 
     @property
     def num_hit_maxiter(self) -> int:
@@ -73,6 +92,7 @@ class SequenceStats:
             "total_time_s": self.total_time_s,
             "converged": self.num_converged,
             "hit_maxiter": self.num_hit_maxiter,
+            "padded": self.num_padded,
         }
 
 

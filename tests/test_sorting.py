@@ -94,3 +94,39 @@ def test_sorting_scales_to_large_n():
     feats = _feats(20_000, f=16)
     order = hilbert_sort(feats)
     assert sorted(order.tolist()) == list(range(20_000))
+
+
+def _grf_feature_cloud(n=96, seed=4):
+    """Sorting features of an actual GRF-sampled family (what the datagen
+    pipeline hands to `sort_features`), not synthetic gaussians."""
+    import jax
+
+    from repro.pde.registry import get_family
+
+    fam = get_family("darcy", nx=12, ny=12)
+    batch = fam.sample_batch(jax.random.PRNGKey(seed), n)
+    return np.asarray(batch.features)
+
+
+def test_hilbert_beats_unsorted_on_grf_cloud():
+    """The scalable App. E.2.2 variant must still shorten the recycle chain
+    on a realistic GRF feature cloud (small greedy buckets force the
+    Hilbert-index stage itself to do the work)."""
+    feats = _grf_feature_cloud()
+    base = chain_length(feats, np.arange(len(feats)))
+    sortd = chain_length(feats, hilbert_sort(feats, greedy_bucket=16))
+    assert sortd < base, (sortd, base)
+
+
+def test_grouped_greedy_beats_unsorted_on_grf_cloud():
+    """grouped_greedy with groups far smaller than N (the parallel-sort
+    regime) must still beat the unsorted order on chain length."""
+    feats = _grf_feature_cloud()
+    base = chain_length(feats, np.arange(len(feats)))
+    sortd = chain_length(feats, grouped_greedy_sort(feats, group_size=24))
+    assert sortd < base, (sortd, base)
+
+
+def test_sort_features_rejects_unknown_method():
+    with pytest.raises(KeyError, match="unknown sort method"):
+        sort_features(_feats(8), "simulated-annealing")
