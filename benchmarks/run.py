@@ -8,8 +8,9 @@
   batched_solver       lockstep batched vs per-system chunked datagen
   mixed_precision      fp32-inner + fp64 refinement vs fp64 baseline
                        (precision-policy tentpole; lockstep engine)
-  trajectory_recycle   time-dependent θ-stepping: recycled vs cold-start,
-                       sequential vs lockstep trajectory engines
+  trajectory_recycle   time-dependent stepping: recycled vs cold-start
+                       (heat, convdiff-t, wave M≠I), sequential vs lockstep
+                       engines, adaptive-Δt step counts vs fixed
   sharded_datagen      multi-device sharded pipeline: per-device throughput
                        at 1/2/4/8 virtual CPU devices (subprocess sweep)
   table33_no_training  Table 33 (FNO on SKR vs GMRES data)

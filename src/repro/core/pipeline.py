@@ -10,7 +10,12 @@ the per-item solve differs. This module owns the schedule once:
              (paper App. E.2.2: each chain owns an independent carry U_k),
   3. PACK   align the chains into lockstep rows, padding shorter chains
              with zero right-hand sides (0 iterations, x = 0, carry
-             untouched — the engines' first-class padding no-op),
+             untouched — the engines' first-class padding no-op). Rows
+             whose chains advance at DIFFERENT RATES inside one row
+             (adaptive-Δt trajectories: per-chain step sequences) carry a
+             per-chunk `PhaseMask`: chains that finished their row's work
+             (reached t_end / exhausted their step budget) flip to padded
+             rows while the rest keep stepping in the same SPMD dispatch,
   4. DISPATCH to an engine:
        sequential  chains back-to-back through the per-system
                    `GCRODRSolver` (paper-parity baseline; `workers=1`
@@ -101,6 +106,37 @@ class WorkAdapter:
         return BatchedGCRODRSolver(self.cfg.krylov,
                                    use_kernel=self.cfg.use_kernel,
                                    sharding=sharding)
+
+
+class PhaseMask:
+    """Active-chain mask for lockstep rows whose chains advance at
+    different rates (the adaptive-Δt trajectory engine).
+
+    Fixed-Δt lockstep rows stay aligned by construction; with per-chain
+    adaptive stepping each chain takes its own number of internal steps
+    per row, so the engine iterates until EVERY chain finished and masks
+    the early finishers: a finished (or never-live padding-slot) chain
+    rides along as a zero-RHS padded row — `SolveStats.padded`, 0
+    iterations, x = 0, recycle carry untouched — while the live chains
+    keep stepping inside the same SPMD dispatch. One copy of the mask
+    bookkeeping lives here so workload adapters cannot drift."""
+
+    def __init__(self, live: np.ndarray):
+        self.active = np.asarray(live, dtype=bool).copy()
+
+    @property
+    def any_active(self) -> bool:
+        return bool(self.active.any())
+
+    @property
+    def padded_rows(self) -> np.ndarray:
+        """The `solve_batch(padded_rows=...)` mask: every inactive chain."""
+        return ~self.active
+
+    def finish(self, w: int):
+        """Chain `w` is done with this row (trajectory complete or step
+        budget exhausted) — padded from the next dispatch on."""
+        self.active[w] = False
 
 
 def plan_chains(order: np.ndarray, workers: int) -> List[np.ndarray]:

@@ -39,6 +39,23 @@ RHS modes:
              marched trajectory matches "full" to solver tolerance while
              typically shaving iterations near steady state.
 
+Stepping stack (pde/timedep.py): families with `integrator="bdf2"`, a mass
+matrix M ≠ I, or an `AdaptConfig` route through the GENERALIZED marching
+paths here (`_march_one_stepped` sequentially, the phase-masked lockstep in
+`TrajectoryWork`); plain fixed-Δt θ-scheme families keep the ORIGINAL code
+path bitwise-unchanged. Under adaptive Δt the per-trajectory step sequences
+diverge, so the lockstep engine drops the rows-align-by-construction
+assumption: every lockstep iteration assembles PER-CHAIN systems (each
+chain at its own t, Δt, bootstrap phase — one vmapped build serves all),
+masks finished/budget-exhausted chains as zero-RHS padded rows via
+`pipeline.PhaseMask`, and keeps iterating until every chain of the row
+delivered its trajectory. Accept/reject decisions come from ONE shared
+host-side PI controller (`PIStepController`, quantized decisions), so the
+sequential and lockstep engines take bitwise-identical Δt paths and the
+recycle carry rides across accepted AND rejected steps — a rejected step's
+cycles still update the chain's deflation space, which is exactly what
+makes the immediate retry cheap.
+
 Precision policy: set `TrajConfig.krylov.inner_dtype="float32"` to run
 every implicit step's Arnoldi cycles, preconditioner applies and
 recycle-space updates in fp32 (all engines — the solvers implement the
@@ -61,7 +78,8 @@ from repro.core import pipeline
 from repro.core.ckpt import NpzCheckpointer
 from repro.core.sorting import chain_length
 from repro.pde.dia import Stencil5, stencil5_matvec
-from repro.pde.timedep import TimeDepFamily, TrajectorySpec
+from repro.pde.timedep import (PIStepController, TimeDepFamily,
+                               TrajectorySpec)
 from repro.solvers.gcrodr import GCRODRSolver
 from repro.solvers.operator import PreconditionedOp, StencilOp
 from repro.solvers.precond import (make_preconditioner,
@@ -94,17 +112,79 @@ class TrajResult:
 
 _inc_rhs = jax.jit(lambda a, b, u: b - stencil5_matvec(a, u))
 
+# per-chain pytree select (accept/reject the candidate StepState of every
+# chain of a lockstep row in one dispatch)
+_sel_tree = jax.jit(lambda m, new, old: jax.tree_util.tree_map(
+    lambda a, b: jnp.where(m.reshape((-1,) + (1,) * (a.ndim - 1)), a, b),
+    new, old))
+
 
 def _spec_at(specs: TrajectorySpec, i) -> TrajectorySpec:
     return jax.tree_util.tree_map(lambda a: a[i], specs)
 
 
+def _solve_stencil(a, rhs, cfg: TrajConfig, solver: GCRODRSolver,
+                   nx: int, ny: int):
+    """One implicit-step Stencil5 system through the sequential solver."""
+    st5 = Stencil5(a)
+    pre = make_preconditioner(cfg.precond, st5, use_kernel=cfg.use_kernel)
+    op = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
+    x, st = solver.solve(op, np.asarray(rhs).reshape(-1))
+    return jnp.asarray(np.asarray(x).reshape(nx, ny)), st
+
+
+class _FixedStepPolicy:
+    """Fixed-Δt drop-in for `PIStepController` used by the generalized
+    stack when `family.adapt is None` (BDF2 / mass-matrix families at a
+    constant step): every save interval is exactly one accepted step, so
+    `propose` returns the full remaining interval and `decide` always
+    accepts — same interface, no controller state beyond the Δt history
+    the BDF2 coefficients need."""
+
+    def __init__(self, dt: float):
+        self.dt = float(dt)
+        self.dt_prev = float(dt)
+        self.dt_pprev = float(dt)
+        self.naccept = 0
+        self.nsolves = 0
+
+    def propose(self, remaining: float) -> float:
+        return remaining
+
+    def decide(self, est: float, dt_used: float) -> bool:
+        self.nsolves += 1
+        self.dt_pprev = self.dt_prev
+        self.dt_prev = dt_used
+        self.naccept += 1
+        return True
+
+    @property
+    def boot(self) -> bool:
+        return self.naccept == 0
+
+    @property
+    def exhausted(self) -> bool:
+        return False
+
+
+def _make_policy(family: TimeDepFamily):
+    if family.adapt is not None:
+        return PIStepController(family.adapt, family.order, family.dt)
+    return _FixedStepPolicy(family.dt)
+
+
 def _march_one(family: TimeDepFamily, spec: TrajectorySpec, cfg: TrajConfig,
                solver: GCRODRSolver, stats: Optional[SequenceStats] = None
                ) -> np.ndarray:
-    """March ONE trajectory through the θ-scheme with the (stateful) solver;
-    returns the (nt+1, nx, ny) field sequence. The carry in `solver`
-    survives the call — that is the across-trajectory recycling."""
+    """March ONE trajectory with the (stateful) solver; returns the
+    (nt+1, nx, ny) field sequence at the uniform save grid. The carry in
+    `solver` survives the call — that is the across-trajectory recycling.
+
+    Classic families (fixed-Δt θ-scheme, M = I) take the ORIGINAL loop
+    below, bitwise-unchanged; BDF2 / mass-matrix / adaptive families route
+    through `_march_one_stepped`."""
+    if not family.classic:
+        return _march_one_stepped(family, spec, cfg, solver, stats)
     nx, ny = family.nx, family.ny
     step1 = family.step_fn()
     out = np.zeros((family.nt + 1, nx, ny))
@@ -114,13 +194,60 @@ def _march_one(family: TimeDepFamily, spec: TrajectorySpec, cfg: TrajConfig,
         t_old, t_new = step * family.dt, (step + 1) * family.dt
         a, b = step1(spec.latent, u, t_old, t_new)
         rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
-        st5 = Stencil5(a)
-        pre = make_preconditioner(cfg.precond, st5, use_kernel=cfg.use_kernel)
-        op = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
-        x, st = solver.solve(op, np.asarray(rhs).reshape(-1))
-        delta = jnp.asarray(np.asarray(x).reshape(nx, ny))
-        u = u + delta if cfg.rhs_mode == "increment" else delta
+        x, st = _solve_stencil(a, rhs, cfg, solver, nx, ny)
+        u = u + x if cfg.rhs_mode == "increment" else x
         out[step + 1] = np.asarray(u)
+        if stats is not None:
+            stats.append(st)
+    return out
+
+
+def _march_one_stepped(family: TimeDepFamily, spec: TrajectorySpec,
+                       cfg: TrajConfig, solver: GCRODRSolver,
+                       stats: Optional[SequenceStats] = None) -> np.ndarray:
+    """Generalized sequential march (BDF2 / mass matrices / adaptive Δt).
+
+    Internal steps follow the step policy (PI controller or fixed); labels
+    are recorded on the UNIFORM save grid nt × (t_end/nt) — the controller
+    clamps/stretches trial steps to land exactly on save times, so the
+    output shape matches the classic path. Rejected steps still solve (and
+    still update the recycle carry — that is what makes the retry cheap);
+    their SolveStats are appended with `rejected=True`. A trajectory that
+    exhausts `AdaptConfig.max_steps` freezes: remaining save points repeat
+    the last accepted field."""
+    nx, ny = family.nx, family.ny
+    build1, eval1 = family.build_fn(), family.eval_fn()
+    nt = family.nt
+    save_dt = family.t_end / nt
+    out = np.zeros((nt + 1, nx, ny))
+    state = family.init_state(spec)
+    out[0] = np.asarray(state.u)
+    pol = _make_policy(family)
+    t, save_i = 0.0, 1
+    while save_i <= nt:
+        if pol.exhausted:
+            out[save_i:] = np.asarray(state.u)
+            break
+        remaining = save_i * save_dt - t
+        dt_step = pol.propose(remaining)
+        boot = pol.boot
+        a, b = build1(spec.latent, state, t, dt_step, pol.dt_prev, boot,
+                      boot)
+        rhs = _inc_rhs(a, b, state.u) if cfg.rhs_mode == "increment" else b
+        x, st = _solve_stencil(a, rhs, cfg, solver, nx, ny)
+        xf = state.u + x if cfg.rhs_mode == "increment" else x
+        cand, est = eval1(spec.latent, state, xf, t, dt_step, pol.dt_prev,
+                          pol.dt_pprev, boot, pol.naccept >= 2)
+        if pol.decide(float(est), dt_step):
+            state = cand
+            if dt_step == remaining:      # landed exactly on a save time
+                t = save_i * save_dt
+                out[save_i] = np.asarray(state.u)
+                save_i += 1
+            else:
+                t += dt_step
+        else:
+            st.rejected = True
         if stats is not None:
             stats.append(st)
     return out
@@ -203,23 +330,41 @@ class TrajectoryWork(pipeline.WorkAdapter):
                                  self.family.nx, self.family.ny))
                        for s in subs]
         self._stats = [SequenceStats() for _ in subs]
-        self._stepB = self.family.step_fn_batched()
         self._u0_all = jnp.asarray(self.specs.u0)
+        if self.family.classic:
+            self._stepB = self.family.step_fn_batched()
+        else:
+            # the classic θ-stepper would assemble the WRONG system for
+            # mass/BDF2 families — never build it, so misuse is impossible
+            self._buildB = self.family.build_fn_batched()
+            self._evalB = self.family.eval_fn_batched()
+            self._initB = jax.jit(jax.vmap(self.family.init_state))
 
     def prepare_row(self, t: int, idx: np.ndarray):
         """Row assembly (prefetch thread): gather the row's trajectory
-        latents + initial fields; padded slots get zero fields."""
+        latents + initial fields; padded slots get zero fields. The
+        generalized stack gathers full batched `StepState`s instead (the
+        family's own `init_state`, so e.g. wave velocity ICs survive)."""
         clamped = jnp.asarray(np.where(idx >= 0, idx, 0))
         live = idx >= 0
         live_dev = jnp.asarray(live)[:, None, None]
         lat = jax.tree_util.tree_map(lambda a: a[clamped], self.specs.latent)
+        if not self.family.classic:
+            specs_b = jax.tree_util.tree_map(lambda a: a[clamped], self.specs)
+            states = self._initB(specs_b)
+            states = jax.tree_util.tree_map(
+                lambda a: jnp.where(live_dev, a, 0.0), states)
+            return lat, states, live, live_dev
         u = jnp.where(live_dev, self._u0_all[clamped], 0.0)
         return lat, u, live, live_dev
 
     def execute_row(self, solver, j: int, idx: np.ndarray, prepared):
-        """March row j: at step s, ONE batched (possibly sharded) device
-        program advances the s-th implicit step of every chunk's current
-        trajectory."""
+        """March row j: at each lockstep iteration, ONE batched (possibly
+        sharded) device program advances the current implicit step of every
+        chunk's current trajectory. Classic fixed-Δt families keep the
+        original aligned loop; the generalized stack phase-masks."""
+        if not self.family.classic:
+            return self._execute_row_stepped(solver, j, idx, prepared)
         family, cfg = self.family, self.cfg
         nx, ny = family.nx, family.ny
         workers = len(idx)
@@ -244,6 +389,98 @@ class TrajectoryWork(pipeline.WorkAdapter):
             for w in np.nonzero(live)[0]:
                 self._trajs[w][j, step + 1] = u_np[w]
                 self._stats[w].append(st_list[w])
+
+    def _execute_row_stepped(self, solver, j: int, idx: np.ndarray,
+                             prepared):
+        """Phase-masked lockstep march of row j (the generalized stack).
+
+        Each chain advances at its OWN (t, Δt, bootstrap) phase — one
+        vmapped `build_step` assembles all per-chain systems, one
+        `solve_batch` dispatch advances them, one vmapped `step_eval`
+        produces candidate states + embedded error estimates. Accept/reject
+        runs per chain through the same quantized host controller the
+        sequential engine uses, so both engines take identical Δt paths.
+        Chains that delivered their trajectory (or exhausted their step
+        budget) flip to zero-RHS padded rows (`pipeline.PhaseMask`) until
+        the whole row is done; recycle carries persist across accepted and
+        rejected steps alike."""
+        family, cfg = self.family, self.cfg
+        nx, ny = family.nx, family.ny
+        workers = len(idx)
+        lat, states, live, live_dev = prepared
+        nt = family.nt
+        save_dt = family.t_end / nt
+        u_np = np.asarray(states.u)
+        for w in np.nonzero(live)[0]:
+            self._trajs[w][j, 0] = u_np[w]
+        pols = {int(w): _make_policy(family) for w in np.nonzero(live)[0]}
+        mask = pipeline.PhaseMask(live)
+        t = np.zeros(workers)
+        save_i = np.ones(workers, dtype=np.int64)
+        while True:
+            # freeze budget-exhausted chains at the sequential path's exact
+            # point (loop top), repeating the last accepted field
+            for w in np.nonzero(mask.active)[0]:
+                if pols[int(w)].exhausted:
+                    self._trajs[w][j, save_i[w]:] = u_np[w]
+                    mask.finish(w)
+            act = mask.active.copy()
+            if not act.any():
+                break
+            dt_step = np.full(workers, save_dt)
+            dtp = np.full(workers, save_dt)
+            dtpp = np.full(workers, save_dt)
+            boot = np.zeros(workers, dtype=bool)
+            have2 = np.zeros(workers, dtype=bool)
+            for w in np.nonzero(act)[0]:
+                pol = pols[int(w)]
+                dt_step[w] = pol.propose(save_i[w] * save_dt - t[w])
+                dtp[w] = pol.dt_prev
+                dtpp[w] = pol.dt_pprev
+                boot[w] = pol.boot
+                have2[w] = pol.naccept >= 2
+            a, b = self._buildB(lat, states, jnp.asarray(t),
+                                jnp.asarray(dt_step), jnp.asarray(dtp),
+                                jnp.asarray(boot), bool(boot.any()))
+            rhs = (_inc_rhs(a, b, states.u) if cfg.rhs_mode == "increment"
+                   else b)
+            rhs = jnp.where(jnp.asarray(act)[:, None, None], rhs, 0.0)
+            st5 = Stencil5(a)
+            pre = make_preconditioner_batched(cfg.precond, st5,
+                                              use_kernel=cfg.use_kernel)
+            ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
+            xs, st_list = solver.solve_batch(ops, rhs.reshape(workers, -1),
+                                             padded_rows=mask.padded_rows)
+            delta = jnp.asarray(xs.reshape(workers, nx, ny))
+            xf = states.u + delta if cfg.rhs_mode == "increment" else delta
+            cand, est = self._evalB(lat, states, xf, jnp.asarray(t),
+                                    jnp.asarray(dt_step), jnp.asarray(dtp),
+                                    jnp.asarray(dtpp), jnp.asarray(boot),
+                                    jnp.asarray(have2))
+            est_np = np.asarray(est)
+            accept = np.zeros(workers, dtype=bool)
+            recorded = []
+            for w in np.nonzero(act)[0]:
+                pol = pols[int(w)]
+                remaining = save_i[w] * save_dt - t[w]
+                ok = pol.decide(float(est_np[w]), float(dt_step[w]))
+                accept[w] = ok
+                st_list[w].rejected = not ok
+                self._stats[w].append(st_list[w])
+                if not ok:
+                    continue
+                if dt_step[w] == remaining:   # landed on a save time
+                    t[w] = save_i[w] * save_dt
+                    recorded.append(int(w))
+                else:
+                    t[w] += dt_step[w]
+            states = _sel_tree(jnp.asarray(accept), cand, states)
+            u_np = np.asarray(states.u)       # one sync per iteration
+            for w in recorded:
+                self._trajs[w][j, save_i[w]] = u_np[w]
+                save_i[w] += 1
+                if save_i[w] > nt:
+                    mask.finish(w)
 
     def chunk_result(self, w: int) -> TrajResult:
         return self._chunk_result(self._subs[w], self._trajs[w],

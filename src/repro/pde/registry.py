@@ -10,7 +10,8 @@ from repro.pde.helmholtz import HelmholtzFamily
 from repro.pde.poisson import PoissonFamily
 from repro.pde.problems import ProblemFamily
 from repro.pde.thermal import ThermalFamily
-from repro.pde.timedep import ConvDiffTimeFamily, HeatTimeFamily, TimeDepFamily
+from repro.pde.timedep import (ConvDiffTimeFamily, HeatTimeFamily,
+                               TimeDepFamily, WaveTimeFamily)
 
 _FAMILIES: Dict[str, Type[ProblemFamily]] = {
     "darcy": DarcyFamily,
@@ -25,6 +26,7 @@ _FAMILIES: Dict[str, Type[ProblemFamily]] = {
 _TIMEDEP_FAMILIES: Dict[str, Type[TimeDepFamily]] = {
     "heat": HeatTimeFamily,
     "convdiff-t": ConvDiffTimeFamily,
+    "wave": WaveTimeFamily,  # M ≠ I mass matrix, first-order form
 }
 
 

@@ -33,16 +33,49 @@ Families registered in `pde/registry.py`:
   convdiff-t  ∂u/∂t = ν∇²u − v(x,y,t)·∇u, v = a rigidly ROTATING copy of a
               GRF-stream-function velocity field (first-order upwind —
               nonsymmetric A_t, M-matrix preserved)
+  wave        M ∂²u/∂t² = ∇·(c(x,y)²∇u) in first-order form (u, v = u_t),
+              compact 5-point mass matrix M ≠ I — each implicit step still
+              exports ONE Stencil5 system (β₀²M + Δt²K) u_{n+1} = rhs
+
+THE STEPPING STACK (beyond the fixed-Δt θ-scheme):
+
+* Mass matrices: `MassMatrix` wraps an SPD 5-point stencil M (DIA export via
+  `to_dia()`); the implicit step generalizes from I + θΔtL to β₀M + γΔtL.
+  Families opt in via the `mass()` hook (None = identity, the historical
+  path — kept bitwise-identical by routing, see `classic` below).
+* BDF2: `integrator="bdf2"` uses the variable-step two-step formula
+      (β₀ u_{n+1} − α₁ u_n + α₂ u_{n−1}) / Δtₙ = −L u_{n+1} + f,
+      ρ = Δtₙ/Δtₙ₋₁, β₀ = (1+2ρ)/(1+ρ), α₁ = 1+ρ, α₂ = ρ²/(1+ρ)
+  with a θ-scheme bootstrap on each trajectory's first step (θ = 1/2 keeps
+  the global order at 2). O(Δt²) at ~the per-step cost of backward Euler.
+* Adaptive Δt: `AdaptConfig` + `PIStepController` — an embedded local-error
+  estimate (predictor–corrector difference: the implicit solution against
+  the variable-step extrapolant of the method's order) drives a standard
+  PI controller (accept/reject + step growth). Controller decisions are
+  QUANTIZED to 2 significant digits so the ~1e-9 float-reassociation drift
+  between the sequential and lockstep engines can never fork the Δt
+  sequence: both engines take bitwise-identical step paths, which is what
+  makes the phase-masked lockstep equivalence testable. Consecutive
+  operators differ only through the Δtₙ drift — exactly the "inherent
+  similarity" regime recycling targets — so the GCRO-DR carry rides across
+  accepted AND rejected steps.
+
+The generalized stack marches a `StepState` pytree (u, history, auxiliary
+first-order state) through family hooks `build_step` / `step_eval`; the
+fixed-Δt M = I θ-scheme (`classic` families) keeps the ORIGINAL
+`step_system` code path untouched, bitwise.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+import math
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.pde.dia import Stencil5, stencil5_matvec, zero_boundary_neighbors
+from repro.pde.dia import (DIA, Stencil5, stencil5_matvec,
+                           zero_boundary_neighbors)
 from repro.pde.grf import GRFSpec, sample_grf
 from repro.pde.problems import ProblemFamily
 
@@ -73,6 +106,236 @@ class TrajectorySpec:
     @classmethod
     def tree_unflatten(cls, _, children):
         return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MassMatrix:
+    """SPD mass matrix in 5-point stencil field form (the M of M u_t = −Lu).
+
+    Stored exactly like the spatial operators (Stencil5 coeffs, so the
+    implicit-step system β₀M + γΔtL assembles as one stencil add and stays
+    on the existing batched/sharded SpMV paths); `to_dia()` exports the DIA
+    banded form for the dense/scipy test oracles. Constructors guarantee
+    positive diagonal + weak diagonal dominance, so β₀M + γΔtL inherits the
+    M-matrix-shifted conditioning story of the θ-scheme."""
+
+    coeffs: jax.Array  # (5, nx, ny)
+
+    def tree_flatten(self):
+        return (self.coeffs,), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(coeffs=children[0])
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return stencil5_matvec(self.coeffs, x)
+
+    def as_stencil5(self) -> Stencil5:
+        return Stencil5(self.coeffs)
+
+    def to_dia(self) -> DIA:
+        return Stencil5(self.coeffs).to_dia()
+
+    @staticmethod
+    def identity(nx: int, ny: int) -> "MassMatrix":
+        c = jnp.zeros((5, nx, ny), jnp.float64).at[Stencil5.C].set(1.0)
+        return MassMatrix(c)
+
+    @staticmethod
+    def compact(nx: int, ny: int) -> "MassMatrix":
+        """The compact (Numerov-type) mass M = I + (hx²/12)Dxx + (hy²/12)Dyy
+        — the standard 5-point consistent-mass surrogate (4th-order spatial
+        pairing with the Laplacian). On a uniform grid the h² factors cancel
+        against Dxx's 1/h² entries, so the stencil is spacing-free: center
+        1 − 4/12 = 2/3, legs +1/12; eigenvalues in (1/3, 1): SPD,
+        diagonally dominant, M ≠ I."""
+        c = jnp.full((nx, ny), 1.0 - 4.0 / 12.0, jnp.float64)
+        leg = jnp.full((nx, ny), 1.0 / 12.0, jnp.float64)
+        return MassMatrix(zero_boundary_neighbors(
+            jnp.stack([c, leg, leg, leg, leg])))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StepState:
+    """Integrator state marched by the generalized stepping stack.
+
+    u        : current field u(t) — the recorded label channel
+    u_prev   : u one ACCEPTED step back (BDF2 history / linear predictor)
+    u_pprev  : u two accepted steps back (quadratic predictor for the BDF2
+               embedded error estimate)
+    v        : auxiliary first-order state (wave: velocity u_t), zeros for
+               parabolic families
+    v_prev   : v one accepted step back (wave BDF2 history)
+
+    All five slots are (nx, ny) fields (unused ones ride as zeros — tiny on
+    these grids, and a uniform pytree is what lets ONE vmapped device select
+    advance/reject every chain of a lockstep row)."""
+
+    u: jax.Array
+    u_prev: jax.Array
+    u_pprev: jax.Array
+    v: jax.Array
+    v_prev: jax.Array
+
+    def tree_flatten(self):
+        return (self.u, self.u_prev, self.u_pprev, self.v, self.v_prev), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """PI-controller adaptive-Δt policy (per trajectory).
+
+    step_tol  : relative local-error target per step — the embedded
+                estimate ‖u_{n+1} − u_pred‖/‖u_{n+1}‖ a step must meet to
+                be ACCEPTED (predictor constants are absorbed here)
+    dt_init   : first trial step (None → the family's dt)
+    dt_min/max: hard Δt clamps (dt_min also breaks rejection death spirals)
+    safety    : classic headroom factor on the controller's step proposal
+    fac_min/max: per-step growth/shrink clamps
+    kp, ki    : PI gains, applied as exponents /(p+1) with p the method
+                order (the textbook elementary PI controller)
+    max_steps : per-trajectory solve budget (accepted + rejected); an
+                exhausted trajectory freezes and its remaining save points
+                repeat the last field (the lockstep engine masks it as a
+                zero-RHS padded row from then on)
+    """
+
+    step_tol: float = 1e-3
+    dt_init: Optional[float] = None
+    dt_min: float = 1e-9
+    dt_max: float = math.inf
+    safety: float = 0.9
+    fac_min: float = 0.2
+    fac_max: float = 4.0
+    kp: float = 0.4
+    ki: float = 0.3
+    max_steps: int = 10_000
+
+    def __post_init__(self):
+        assert 0.0 < self.step_tol < 1.0
+        assert 0.0 < self.fac_min < 1.0 < self.fac_max
+        assert self.max_steps >= 1
+
+
+def quantize_sig(v: float, digits: int = 2) -> float:
+    """Round to `digits` significant decimal digits.
+
+    Controller inputs (error estimates) and outputs (step factors) are
+    quantized so the ~1e-9 relative float-reassociation drift between the
+    sequential and lockstep solvers cannot flip an accept/reject or fork
+    the Δt sequence: a flip would need the exact value to sit within 1e-9
+    of a 1e-2-spaced rounding boundary. Both engines therefore take
+    bitwise-identical step paths (the property the phase-masked lockstep
+    equivalence tests pin)."""
+    if v == 0.0 or not math.isfinite(v):
+        return v
+    p = digits - 1 - math.floor(math.log10(abs(v)))
+    return round(v, p)
+
+
+class PIStepController:
+    """Per-trajectory PI step-size controller over the embedded estimate.
+
+    Pure host-float logic shared VERBATIM by the sequential and lockstep
+    engines (one copy ⇒ identical decisions). The controller owns Δt
+    bookkeeping: trial step proposal (clamped/stretched to land exactly on
+    the uniform save grid), accept/reject, PI growth, and the accepted-step
+    history (Δtₙ₋₁, Δtₙ₋₂) the variable-step BDF2 coefficients and the
+    quadratic predictor need."""
+
+    def __init__(self, cfg: AdaptConfig, order: int, dt0: float):
+        self.cfg = cfg
+        self.order = int(order)
+        self.dt = float(min(max(cfg.dt_init or dt0, cfg.dt_min), cfg.dt_max))
+        self.dt_prev = self.dt    # last ACCEPTED step (BDF2 ρ denominator)
+        self.dt_pprev = self.dt   # one before (quadratic predictor gap)
+        self.err_prev = 1.0       # previous accepted est/step_tol ratio
+        self.naccept = 0          # accepted steps (drives bootstrap flags)
+        self.nsolves = 0          # accepted + rejected (budget)
+        self.dt_bad = math.inf    # smallest Δt REJECTED at the current
+        #                           position (reset on accept): the error
+        #                           estimate is deterministic per (state, t,
+        #                           Δt), so re-trying a rejected size is
+        #                           guaranteed futile
+
+    # -- trial step ------------------------------------------------------
+    def propose(self, remaining: float) -> float:
+        """Trial Δt for this solve: the controller step, stretched up to
+        1.25x (or clipped) to land EXACTLY on the next save time. The
+        stretch never violates the dt_max hard cap (when the remaining
+        interval exceeds dt_max the controller just steps dt and lands on
+        the save boundary a step later), and never re-proposes a step the
+        estimator already rejected at this position — without the `dt_bad`
+        guard, a marginal rejection (shrink factor > 1/1.25) would be
+        stretched straight back to the rejected size and the controller
+        would livelock on the save boundary."""
+        dt = self.dt
+        if (1.25 * dt >= remaining and remaining <= self.cfg.dt_max
+                and remaining < self.dt_bad):
+            dt = remaining
+        return dt
+
+    # -- decision --------------------------------------------------------
+    def decide(self, est: float, dt_used: float) -> bool:
+        """Accept/reject `dt_used` given the embedded estimate; updates the
+        controller state either way and returns the verdict. A failing step
+        already at (or below) the dt_min floor is accepted anyway — the
+        controller cannot do better, and rejecting it forever would only
+        re-solve the identical system until the budget froze the trajectory
+        (dt_min's documented death-spiral guard)."""
+        c = self.cfg
+        self.nsolves += 1
+        est_q = quantize_sig(est)
+        if not math.isfinite(est_q):      # solver blew up: halve and retry
+            if dt_used <= c.dt_min:
+                raise FloatingPointError(
+                    "adaptive step produced a non-finite error estimate at "
+                    "the dt_min floor")
+            self.dt = max(0.5 * dt_used, c.dt_min)
+            self.dt_bad = min(self.dt_bad, dt_used)
+            return False
+        e = max(est_q / c.step_tol, 1e-12)
+        p1 = self.order + 1
+        if e <= 1.0 or dt_used <= c.dt_min:
+            fac = (c.safety * e ** (-(c.ki + c.kp) / p1)
+                   * self.err_prev ** (c.kp / p1))
+            fac = quantize_sig(min(max(fac, c.fac_min), c.fac_max))
+            self.dt_pprev = self.dt_prev
+            self.dt_prev = dt_used
+            # growth base: the controller's own step, not a save-boundary
+            # clip — a tiny landing step must not collapse the step size
+            # (the clip carries no error information; the next full step
+            # can jump straight back, and if the jump's BDF2 ratio is too
+            # aggressive the estimate rejects it and halves, so accuracy
+            # still owns the outcome)
+            self.dt = min(max(max(dt_used, self.dt) * fac, c.dt_min),
+                          c.dt_max)
+            self.err_prev = e
+            self.naccept += 1
+            self.dt_bad = math.inf    # new position: old rejections void
+            return True
+        fac = quantize_sig(min(max(c.safety * e ** (-1.0 / p1), c.fac_min),
+                               0.9))
+        self.dt = max(dt_used * fac, c.dt_min)
+        self.dt_bad = min(self.dt_bad, dt_used)
+        return False
+
+    @property
+    def boot(self) -> bool:
+        """True until the first accepted step: BDF2 runs its θ-scheme
+        bootstrap, the predictor has no history."""
+        return self.naccept == 0
+
+    @property
+    def exhausted(self) -> bool:
+        return self.nsolves >= self.cfg.max_steps
 
 
 def assemble_diffusion_stencil(k_field: jax.Array, hx: float, hy: float) -> jax.Array:
@@ -124,21 +387,50 @@ class TimeDepFamily(ProblemFamily):
     `ProblemFamily`). Subclasses implement `sample_spec` and
     `spatial_coeffs(latent, t)`; the θ-scheme export is shared.
 
-    nt / dt / theta are trajectory-level constants: every trajectory in a
-    dataset marches the same nt steps of size dt (what keeps the lockstep
-    rows of `core/trajectory.py` aligned across chunks)."""
+    nt / dt / theta are trajectory-level constants. With the default
+    fixed-Δt θ-scheme every trajectory marches the same nt steps of size dt
+    (lockstep rows align for free); `integrator="bdf2"` and/or an
+    `AdaptConfig` route through the generalized stepping stack instead —
+    nt·dt then defines the UNIFORM SAVE GRID (labels stay (nt+1, nx, ny)
+    and comparable across engines) while the internal steps float, and the
+    lockstep engine phase-masks chains that stepped at different rates."""
 
     name = "timedep-base"
 
     def __init__(self, nx: int, ny: int, nt: int = 10, dt: float = 1e-3,
-                 theta: float = 1.0):
+                 theta: float = 1.0, integrator: str = "theta",
+                 adapt: Optional[AdaptConfig] = None):
         super().__init__(nx, ny)
         assert nt >= 1 and dt > 0.0 and 0.0 < theta <= 1.0
+        assert integrator in ("theta", "bdf2")
         self.nt = int(nt)
         self.dt = float(dt)
         self.theta = float(theta)
+        self.integrator = integrator
+        self.adapt = adapt
         self._step1 = None
         self._stepB = None
+        self._build1 = None
+        self._buildB = None
+        self._eval1 = None
+        self._evalB = None
+
+    @property
+    def order(self) -> int:
+        """Temporal order of accuracy (drives the PI controller exponents
+        and the embedded predictor's degree)."""
+        if self.integrator == "bdf2":
+            return 2
+        return 2 if self.theta == 0.5 else 1
+
+    @property
+    def classic(self) -> bool:
+        """True ⇒ the ORIGINAL fixed-Δt, M = I, θ-scheme code path is used
+        (kept bitwise-identical to the pre-stepping-stack engine); any of
+        BDF2 / mass matrix / adaptivity routes through the generalized
+        stack."""
+        return (self.integrator == "theta" and self.adapt is None
+                and self.mass() is None)
 
     @property
     def t_end(self) -> float:
@@ -196,6 +488,132 @@ class TimeDepFamily(ProblemFamily):
                                            in_axes=(0, 0, None, None)))
         return self._stepB
 
+    # -- generalized stepping stack (mass / BDF2 / adaptive) --------------
+    def mass(self) -> Optional[MassMatrix]:
+        """Mass matrix M of M u_t = −L u + f; None ⇒ identity (and, for
+        θ-scheme fixed-Δt families, the untouched historical code path)."""
+        return None
+
+    def init_state(self, spec: TrajectorySpec) -> StepState:
+        z = jnp.zeros_like(spec.u0)
+        return StepState(u=spec.u0, u_prev=spec.u0, u_pprev=spec.u0,
+                         v=z, v_prev=z)
+
+    def _two_step_coeffs(self, rho, boot):
+        """(β₀, α₁, α₂, γ, δ) of the unified implicit step
+
+            A = β₀ M + γ Δt L(t+Δt)
+            b = M(α₁ u − α₂ u_prev) − δ Δt L(t) u + Δt (γ f_new + δ f_old)
+
+        θ-scheme: (1, 1, 0, θ, 1−θ); variable-step BDF2: (β₀, α₁, α₂, 1, 0)
+        with ρ = Δtₙ/Δtₙ₋₁. `boot` (traced, per chain) selects the θ-scheme
+        bootstrap on a trajectory's first step."""
+        th = self.theta
+        if self.integrator != "bdf2":
+            return 1.0, 1.0, 0.0, th, 1.0 - th
+        b0 = jnp.where(boot, 1.0, (1.0 + 2.0 * rho) / (1.0 + rho))
+        a1 = jnp.where(boot, 1.0, 1.0 + rho)
+        a2 = jnp.where(boot, 0.0, rho * rho / (1.0 + rho))
+        gam = jnp.where(boot, th, 1.0)
+        dlt = jnp.where(boot, 1.0 - th, 0.0)
+        return b0, a1, a2, gam, dlt
+
+    def build_step(self, latent, state: StepState, t, dt, dt_prev, boot,
+                   any_boot: bool = True) -> Tuple[jax.Array, jax.Array]:
+        """One implicit step t → t+Δt of the generalized stack as a linear
+        system (a_coeffs (5, nx, ny), b (nx, ny)). Every scalar (t, dt,
+        dt_prev, boot) is traced, so ONE jitted builder serves every step
+        of every chain at any phase — per-chain Δt included. `any_boot` is
+        STATIC (the cached builders compile both variants): BDF2's
+        bootstrap-only explicit L(t)u term multiplies a runtime zero on
+        every non-boot step, so once no chain is booting the False variant
+        skips the second operator assembly + SpMV outright (its
+        contribution is an exact 0, so both variants are bitwise-equal)."""
+        rho = dt / jnp.maximum(dt_prev, 1e-300)
+        b0, a1, a2, gam, dlt = self._two_step_coeffs(rho, boot)
+        t_new = t + dt
+        l_new = self.spatial_coeffs(latent, t_new)
+        a = gam * dt * l_new
+        mass = self.mass()
+        hist = a1 * state.u - a2 * state.u_prev
+        if mass is None:
+            a = a.at[Stencil5.C].add(b0)
+        else:
+            a = a + b0 * mass.coeffs
+            hist = mass.matvec(hist)
+        b = hist + dt * (gam * self.source(latent, t_new)
+                         + dlt * self.source(latent, t))
+        if self.theta < 1.0 and (self.integrator != "bdf2" or any_boot):
+            l_old = self.spatial_coeffs(latent, t)
+            b = b - dlt * dt * stencil5_matvec(l_old, state.u)
+        return a, b
+
+    def advance_state(self, latent, state: StepState, x, t, dt, dt_prev,
+                      boot) -> StepState:
+        """Candidate post-step state from the solver solution x = u(t+Δt)
+        (parabolic default: shift the history)."""
+        return StepState(u=x, u_prev=state.u, u_pprev=state.u_prev,
+                         v=state.v, v_prev=state.v)
+
+    def step_eval(self, latent, state: StepState, x, t, dt, dt_prev,
+                  dt_pprev, boot, have2):
+        """Candidate state + embedded local-error estimate, one dispatch.
+
+        The estimate is the predictor–corrector difference: the implicit
+        solution x against the variable-step extrapolant through the
+        accepted history, degree matched to the method order (linear for
+        order 1, quadratic for order 2 once two accepted steps exist —
+        `have2`). On the bootstrap step (no history) the zeroth-order
+        predictor u(t) makes the estimate conservative: the controller
+        starts small and grows, the classic safe start."""
+        cand = self.advance_state(latent, state, x, t, dt, dt_prev, boot)
+        r1 = dt / jnp.maximum(dt_prev, 1e-300)
+        lin = (1.0 + r1) * state.u - r1 * state.u_prev
+        if self.order >= 2:
+            s1 = dt + dt_prev
+            s2 = s1 + dt_pprev
+            c0 = s1 * s2 / jnp.maximum(dt_prev * (dt_prev + dt_pprev), 1e-300)
+            c1 = -dt * s2 / jnp.maximum(dt_prev * dt_pprev, 1e-300)
+            c2 = dt * s1 / jnp.maximum((dt_prev + dt_pprev) * dt_pprev,
+                                       1e-300)
+            quad = c0 * state.u + c1 * state.u_prev + c2 * state.u_pprev
+            pred = jnp.where(have2, quad, lin)
+        else:
+            pred = lin
+        pred = jnp.where(boot, state.u, pred)
+        est = (jnp.linalg.norm(x - pred)
+               / jnp.maximum(jnp.linalg.norm(x), 1e-300))
+        return cand, est
+
+    def build_fn(self):
+        """Jitted single-chain generalized step builder (cached; `any_boot`
+        is static — at most two compiled variants)."""
+        if self._build1 is None:
+            self._build1 = jax.jit(self.build_step, static_argnums=6)
+        return self._build1
+
+    def build_fn_batched(self):
+        """Jitted vmapped builder with PER-CHAIN scalars (t, Δt, Δt_prev,
+        boot) — one SPMD dispatch assembles every chain's system at its own
+        phase, the device half of the phase-masked lockstep. The trailing
+        `any_boot` flag is static and unbatched."""
+        if self._buildB is None:
+            self._buildB = jax.jit(
+                jax.vmap(self.build_step,
+                         in_axes=(0, 0, 0, 0, 0, 0, None)),
+                static_argnums=6)
+        return self._buildB
+
+    def eval_fn(self):
+        if self._eval1 is None:
+            self._eval1 = jax.jit(self.step_eval)
+        return self._eval1
+
+    def eval_fn_batched(self):
+        if self._evalB is None:
+            self._evalB = jax.jit(jax.vmap(self.step_eval))
+        return self._evalB
+
 
 class HeatTimeFamily(TimeDepFamily):
     """Heat / diffusion trajectories with DRIFTING log-normal conductivity:
@@ -212,8 +630,11 @@ class HeatTimeFamily(TimeDepFamily):
 
     def __init__(self, nx: int = 32, ny: int = 32, nt: int = 10,
                  dt: float = 2e-3, theta: float = 1.0, sigma: float = 0.8,
-                 alpha: float = 2.5, tau: float = 7.0, ic_amp: float = 1.0):
-        super().__init__(nx, ny, nt=nt, dt=dt, theta=theta)
+                 alpha: float = 2.5, tau: float = 7.0, ic_amp: float = 1.0,
+                 integrator: str = "theta",
+                 adapt: Optional[AdaptConfig] = None):
+        super().__init__(nx, ny, nt=nt, dt=dt, theta=theta,
+                         integrator=integrator, adapt=adapt)
         self.sigma = float(sigma)
         self.ic_amp = float(ic_amp)
         self.spec = GRFSpec(nx=nx, ny=ny, alpha=alpha, tau=tau, scale=nx**1.5)
@@ -260,8 +681,10 @@ class ConvDiffTimeFamily(TimeDepFamily):
     def __init__(self, nx: int = 32, ny: int = 32, nt: int = 10,
                  dt: float = 2e-3, theta: float = 1.0, nu: float = 1.0,
                  vmax: float = 30.0, omega: float = jnp.pi / 4,
-                 ic_amp: float = 1.0):
-        super().__init__(nx, ny, nt=nt, dt=dt, theta=theta)
+                 ic_amp: float = 1.0, integrator: str = "theta",
+                 adapt: Optional[AdaptConfig] = None):
+        super().__init__(nx, ny, nt=nt, dt=dt, theta=theta,
+                         integrator=integrator, adapt=adapt)
         self.nu = float(nu)
         self.vmax = float(vmax)
         self.omega = float(omega)
@@ -293,3 +716,119 @@ class ConvDiffTimeFamily(TimeDepFamily):
         vx = c * vx0 - s * vy0
         vy = s * vx0 + c * vy0
         return assemble_upwind_convection(vx, vy, self.nu, self.hx, self.hy)
+
+
+class WaveTimeFamily(TimeDepFamily):
+    """Second-order wave trajectories with a heterogeneous speed field and a
+    NON-identity mass matrix, in first-order form:
+
+        M ∂u/∂t = M v,   M ∂v/∂t = −K u,   K = −∇·(c(x,y)²∇·),
+        c = exp(σ_c g) (log-normal GRF wave speed),  M = compact 5-point mass
+
+    Eliminating v turns each implicit step into ONE Stencil5 system — the
+    θ-scheme gives (M + θ²Δt²K) u_{n+1} = M(u_n + Δt v_n) − θ(1−θ)Δt²K u_n,
+    variable-step BDF2 gives (β₀²M + Δt²K) u_{n+1} = M(β₀ĥ_u + Δt ĥ_v) with
+    ĥ = α₁(·)_n − α₂(·)_{n−1} — so the wave family rides the existing
+    batched/sharded solver paths unchanged, M ≠ I and all. The velocity is
+    recovered explicitly after each solve and carried in `StepState.v`.
+
+    θ = 1/2 (the default) is the trapezoid rule: it conserves the discrete
+    energy E = ½(vᵀMv + uᵀKu) exactly up to solver tolerance (the
+    energy-boundedness test pins this); BDF2 is mildly dissipative. K is
+    time-independent, so consecutive operators differ only through the
+    Δt drift — under adaptive stepping exactly the paper's "inherent
+    similarity" regime, and under fixed Δt the recycling best case."""
+
+    name = "wave"
+
+    def __init__(self, nx: int = 32, ny: int = 32, nt: int = 10,
+                 dt: float = 2e-3, theta: float = 0.5, sigma_c: float = 0.3,
+                 alpha: float = 2.5, tau: float = 7.0, ic_amp: float = 1.0,
+                 integrator: str = "theta",
+                 adapt: Optional[AdaptConfig] = None):
+        super().__init__(nx, ny, nt=nt, dt=dt, theta=theta,
+                         integrator=integrator, adapt=adapt)
+        assert theta > 0.0, "wave elimination needs an implicit share"
+        self.sigma_c = float(sigma_c)
+        self.ic_amp = float(ic_amp)
+        self.spec = GRFSpec(nx=nx, ny=ny, alpha=alpha, tau=tau, scale=nx**1.5)
+        self.hx = 1.0 / (nx + 1)
+        self.hy = 1.0 / (ny + 1)
+        self._mass = MassMatrix.compact(nx, ny)
+
+    def mass(self) -> MassMatrix:
+        return self._mass
+
+    def sample_spec(self, key: jax.Array) -> TrajectorySpec:
+        kc, kic = jax.random.split(key)
+        g, fg = sample_grf(self.spec, kc)
+        g = g / (jnp.std(g) + 1e-12)
+        ic, fic = sample_grf(self.spec, kic)
+        u0 = self.ic_amp * ic / (jnp.std(ic) + 1e-12)
+        feats = jnp.concatenate([fic, fg])
+        return TrajectorySpec(
+            u0=u0,
+            latent=g,
+            features=feats,
+            no_input=jnp.exp(self.sigma_c * g),
+        )
+
+    def spatial_coeffs(self, latent, t) -> jax.Array:
+        # time-independent stiffness K (t traced for API uniformity)
+        c2 = jnp.exp(2.0 * self.sigma_c * latent)
+        return assemble_diffusion_stencil(c2, self.hx, self.hy)
+
+    def build_step(self, latent, state: StepState, t, dt, dt_prev, boot,
+                   any_boot: bool = True) -> Tuple[jax.Array, jax.Array]:
+        # any_boot accepted for builder-signature uniformity; the wave
+        # elimination has no bootstrap-only assembly worth skipping
+        th = self.theta
+        k = self.spatial_coeffs(latent, t + dt)
+        m = self._mass.coeffs
+        # forcing enters the elimination with the same substitution:
+        # θ-step picks up θΔt²(θf_new + (1−θ)f_old), BDF2 Δt²f_new
+        f_theta = th * dt * dt * (th * self.source(latent, t + dt)
+                                  + (1.0 - th) * self.source(latent, t))
+        if self.integrator == "bdf2":
+            rho = dt / jnp.maximum(dt_prev, 1e-300)
+            b0, a1, a2, _, _ = self._two_step_coeffs(rho, boot)
+            hist_u = a1 * state.u - a2 * state.u_prev
+            hist_v = a1 * state.v - a2 * state.v_prev
+            p = jnp.where(boot, 1.0, b0 * b0)
+            q = jnp.where(boot, (th * dt) ** 2, dt * dt)
+            s = jnp.where(boot, -th * (1.0 - th) * dt * dt, 0.0)
+            hb = jnp.where(boot, state.u + dt * state.v,
+                           b0 * hist_u + dt * hist_v)
+            f = jnp.where(boot, f_theta,
+                          dt * dt * self.source(latent, t + dt))
+        else:
+            p = 1.0
+            q = (th * dt) ** 2
+            s = -th * (1.0 - th) * dt * dt
+            hb = state.u + dt * state.v
+            f = f_theta
+        a = p * m + q * k
+        b = stencil5_matvec(m, hb) + s * stencil5_matvec(k, state.u) + f
+        return a, b
+
+    def advance_state(self, latent, state: StepState, x, t, dt, dt_prev,
+                      boot) -> StepState:
+        th = self.theta
+        v_theta = ((x - state.u) / (th * dt)
+                   - ((1.0 - th) / th) * state.v)
+        if self.integrator == "bdf2":
+            rho = dt / jnp.maximum(dt_prev, 1e-300)
+            b0, a1, a2, _, _ = self._two_step_coeffs(rho, boot)
+            hist_u = a1 * state.u - a2 * state.u_prev
+            v_new = jnp.where(boot, v_theta, (b0 * x - hist_u) / dt)
+        else:
+            v_new = v_theta
+        return StepState(u=x, u_prev=state.u, u_pprev=state.u_prev,
+                         v=v_new, v_prev=state.v)
+
+    def energy(self, latent, state: StepState) -> jax.Array:
+        """Discrete energy ½(vᵀMv + uᵀKu) — the trapezoid invariant."""
+        k = self.spatial_coeffs(latent, 0.0)
+        return 0.5 * (jnp.vdot(state.v, stencil5_matvec(self._mass.coeffs,
+                                                        state.v))
+                      + jnp.vdot(state.u, stencil5_matvec(k, state.u)))

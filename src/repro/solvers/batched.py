@@ -125,6 +125,15 @@ class BatchedGCRODRSolver:
     GMRES is still the k = 0 special case — the batch then runs lockstep
     restarted-GMRES cycles with the same adaptive restart growth as
     `gmres_solve` (triggered when any active chain stalls).
+
+    Per-chain Δt / phase-masked rows (adaptive trajectory datagen): the
+    solver is agnostic to WHERE each chain's system came from — the
+    trajectory engine assembles per-chain operators A_w = β₀M + γΔt_w L(t_w)
+    with every chain at its own time point and step size (one vmapped
+    builder), so one `solve_batch` dispatch advances chains at different
+    phases. Chains that finished their trajectory arrive as `padded_rows`
+    (zero RHS, excluded from solving outright, carry untouched) until the
+    whole lockstep row completes.
     """
 
     def __init__(self, cfg: KrylovConfig, use_kernel: bool = False,
@@ -175,7 +184,11 @@ class BatchedGCRODRSolver:
         padded_rows : optional (B,) bool — which rows are PADDING (drive
               `SolveStats.padded` + the zeroed wall time). Defaults to the
               zero-RHS rows; the pipeline passes its own mask so a
-              legitimate b = 0 system is not miscounted as padding.
+              legitimate b = 0 system is not miscounted as padding. A row
+              MARKED padded is excluded from solving outright (x = 0,
+              carry untouched, zero counts) even if its RHS is nonzero —
+              a padding row must never contribute phantom iterations or
+              refinement passes to the sequence aggregates.
 
         Returns (x (B, n) np.ndarray, [SolveStats] * B).
         """
@@ -196,6 +209,7 @@ class BatchedGCRODRSolver:
         rnorm = bnorm.copy()
         tol_abs = cfg.tol * bnorm
         zerob = bnorm == 0.0
+        pad = zerob if padded_rows is None else np.asarray(padded_rows)
 
         iters = np.zeros(bsz, dtype=int)
         matvecs = np.zeros(bsz, dtype=int)
@@ -209,7 +223,7 @@ class BatchedGCRODRSolver:
 
         # ---- warm start: re-biorthogonalize carried spaces (Alg. 2 l.2-7)
         if k > 0 and self.u_carry is not None:
-            want = self.carry_ok & ~zerob & (rnorm > tol_abs)
+            want = self.carry_ok & ~zerob & ~pad & (rnorm > tol_abs)
             if want.any():
                 u_old = self._dev(jnp.asarray(self.u_carry))
                 au = _apply_cols_b(ops, u_old)
@@ -238,7 +252,7 @@ class BatchedGCRODRSolver:
         m_cap = min(n, cfg.m_max if cfg.m_max else 8 * cfg.m)
 
         while True:
-            active = (~zerob & ~stalled & (rnorm > tol_abs)
+            active = (~zerob & ~pad & ~stalled & (rnorm > tol_abs)
                       & (iters < cfg.maxiter))
             if not active.any():
                 break
@@ -408,7 +422,6 @@ class BatchedGCRODRSolver:
         x = np.asarray(_from_z_b(ops, z))
         wall = time.perf_counter() - t0
         converged = zerob | (rnorm <= tol_abs)
-        pad = zerob if padded_rows is None else np.asarray(padded_rows)
         stats = []
         for i in range(bsz):
             stats.append(SolveStats(
@@ -438,7 +451,7 @@ class BatchedGCRODRSolver:
             self.u_carry = np.where(keep, u_np,
                                     self.u_carry.astype(u_np.dtype))
             self.carry_ok = self.carry_ok | established
-        self.systems_solved += int((~zerob).sum())
+        self.systems_solved += int((~zerob & ~pad).sum())
         return x, stats
 
     # ------------------------------------------------------------------
@@ -466,6 +479,10 @@ class BatchedGCRODRSolver:
         rnorm = bnorm.copy()
         tol_abs = cfg.tol * bnorm
         zerob = bnorm == 0.0
+        # marked-padded rows never enter an outer pass: a padding row must
+        # not accrue outer_refinements / fp64_fallback (or iterations) that
+        # SequenceStats would then mis-attribute to real solves
+        pad = zerob if padded_rows is None else np.asarray(padded_rows)
 
         iters = np.zeros(bsz, dtype=int)
         matvecs = np.zeros(bsz, dtype=int)
@@ -489,7 +506,7 @@ class BatchedGCRODRSolver:
         fallback = False
         passes = 0
         while True:
-            need = ~zerob & (rnorm > tol_abs) & (iters < cfg.maxiter)
+            need = ~zerob & ~pad & (rnorm > tol_abs) & (iters < cfg.maxiter)
             if not need.any():
                 break
             # per-pass budget honors the MOST-advanced needy chain's cap
@@ -561,7 +578,6 @@ class BatchedGCRODRSolver:
         x_np = np.asarray(x)
         wall = time.perf_counter() - t0
         converged = zerob | (rnorm <= tol_abs)
-        pad = zerob if padded_rows is None else np.asarray(padded_rows)
         stats = []
         for i in range(bsz):
             stats.append(SolveStats(
@@ -585,5 +601,5 @@ class BatchedGCRODRSolver:
             self.u_carry = np.asarray(inner.u_carry, np.float32)
             self.carry_ok = (inner.carry_ok.copy()
                              if inner.carry_ok is not None else None)
-        self.systems_solved += int((~zerob).sum())
+        self.systems_solved += int((~zerob & ~pad).sum())
         return x_np, stats

@@ -21,10 +21,16 @@ class SolveStats:
     outer_refinements: int = 0  # fp64 iterative-refinement passes taken
     fp64_fallback: bool = False  # fp32 cycles stagnated → finished in fp64
     # lockstep-engine padding accounting: True marks a zero-RHS padding row
-    # (shorter chunk / sharding fill) — it costs nothing (0 iterations,
-    # wall_time_s = 0.0) and is EXCLUDED from SequenceStats aggregates so
-    # iteration/time totals compare cleanly across engines
+    # (shorter chunk / sharding fill / phase-masked finished chain) — it
+    # costs nothing (0 iterations, wall_time_s = 0.0) and is EXCLUDED from
+    # SequenceStats aggregates so iteration/time totals compare cleanly
+    # across engines
     padded: bool = False
+    # adaptive-Δt accounting: True marks a solve whose step the error
+    # controller REJECTED — real work (kept in every aggregate; the cycles
+    # also updated the recycle carry, which is what makes the retry cheap),
+    # flagged so accepted-step efficiency can be derived
+    rejected: bool = False
 
     def merge_inner(self, other: "SolveStats"):
         """Fold an inner (correction-solve) pass into this outer record."""
@@ -84,6 +90,25 @@ class SequenceStats:
     def num_hit_maxiter(self) -> int:
         return self.num - self.num_converged
 
+    @property
+    def num_rejected(self) -> int:
+        """Adaptive-Δt solves the error controller rejected (real work,
+        included in iteration/time totals)."""
+        return int(sum(s.rejected for s in self.solved))
+
+    @property
+    def total_outer_refinements(self) -> int:
+        """Mixed-precision fp64 refinement passes, REAL solves only — a
+        padded row never runs an outer pass, and the engines guarantee it
+        (padding is excluded from the refinement loop), so excluding
+        padded rows here cannot double-count."""
+        return int(sum(s.outer_refinements for s in self.solved))
+
+    @property
+    def num_fp64_fallback(self) -> int:
+        """Real solves that fell back to fp64 correction cycles."""
+        return int(sum(s.fp64_fallback for s in self.solved))
+
     def summary(self) -> dict:
         return {
             "num": self.num,
@@ -93,6 +118,9 @@ class SequenceStats:
             "converged": self.num_converged,
             "hit_maxiter": self.num_hit_maxiter,
             "padded": self.num_padded,
+            "rejected": self.num_rejected,
+            "outer_refinements": self.total_outer_refinements,
+            "fp64_fallback": self.num_fp64_fallback,
         }
 
 

@@ -181,6 +181,80 @@ def test_solver_marks_zero_rhs_rows_padded():
     assert sts[1].converged and sts[1].iterations == 0  # still a no-op solve
 
 
+def test_padded_rows_never_accrue_refinement_counts():
+    """Interaction of padding with the mixed-precision accounting: a row
+    MARKED padded must contribute nothing — no iterations, no
+    outer_refinements, no fp64_fallback — even if its RHS is nonzero, so
+    the SequenceStats totals cannot double-count padding as real work."""
+    import jax.numpy as jnp
+
+    from repro.pde.dia import Stencil5
+    from repro.solvers.batched import BatchedGCRODRSolver
+    from repro.solvers.operator import PreconditionedOp, StencilOp
+    from repro.solvers.precond import make_preconditioner_batched
+
+    fam = get_family("poisson", nx=10, ny=10)
+    batch = fam.sample_batch(jax.random.PRNGKey(1), 2)
+    st5 = Stencil5(jnp.asarray(batch.op.coeffs))
+    pre = make_preconditioner_batched("jacobi", st5)
+    ops = PreconditionedOp(StencilOp(st5.coeffs), pre)
+    b = np.array(batch.b).reshape(2, -1)   # both rows NONZERO
+    mask = np.array([False, True])
+
+    for inner in ("float64", "float32"):
+        cfg = dataclasses.replace(KC, inner_dtype=inner)
+        solver = BatchedGCRODRSolver(cfg)
+        x, sts = solver.solve_batch(ops, jnp.asarray(b), padded_rows=mask)
+        assert sts[0].converged and sts[0].iterations > 0, inner
+        assert sts[1].padded and sts[1].iterations == 0, inner
+        assert sts[1].outer_refinements == 0, inner
+        assert not sts[1].fp64_fallback, inner
+        assert sts[1].wall_time_s == 0.0 and sts[1].matvecs == 0, inner
+        np.testing.assert_array_equal(x[1], 0.0)   # never solved
+        assert solver.systems_solved == 1, inner   # padding is not a solve
+
+    # ...and the SequenceStats aggregates exclude padded rows even if a
+    # padded record somehow carried counts (defense in depth)
+    st = SequenceStats()
+    st.append(SolveStats(iterations=10, converged=True, wall_time_s=1.0,
+                         outer_refinements=2, fp64_fallback=True))
+    st.append(SolveStats(iterations=5, converged=True, rejected=True,
+                         wall_time_s=0.5, outer_refinements=1))
+    st.append(SolveStats(padded=True, outer_refinements=7,
+                         fp64_fallback=True, converged=True))
+    assert st.total_outer_refinements == 3
+    assert st.num_fp64_fallback == 1
+    assert st.num_rejected == 1
+    s = st.summary()
+    assert s["outer_refinements"] == 3 and s["fp64_fallback"] == 1
+    assert s["rejected"] == 1 and s["padded"] == 1
+
+
+def test_padded_rows_keep_recycle_carry_untouched():
+    """A marked-padded row must leave its chain's carry exactly as it was
+    (the phase-masked engine relies on this across many masked rows)."""
+    import jax.numpy as jnp
+
+    from repro.pde.dia import Stencil5
+    from repro.solvers.batched import BatchedGCRODRSolver
+    from repro.solvers.operator import PreconditionedOp, StencilOp
+    from repro.solvers.precond import make_preconditioner_batched
+
+    fam = get_family("poisson", nx=10, ny=10)
+    batch = fam.sample_batch(jax.random.PRNGKey(2), 2)
+    st5 = Stencil5(jnp.asarray(batch.op.coeffs))
+    pre = make_preconditioner_batched("jacobi", st5)
+    ops = PreconditionedOp(StencilOp(st5.coeffs), pre)
+    b = np.array(batch.b).reshape(2, -1)
+    solver = BatchedGCRODRSolver(KC)
+    solver.solve_batch(ops, jnp.asarray(b))        # both chains own a carry
+    carry0 = solver.u_carry.copy()
+    solver.solve_batch(ops, jnp.asarray(b),
+                       padded_rows=np.array([False, True]))
+    assert not np.array_equal(solver.u_carry[0], carry0[0])  # chain 0 moved
+    np.testing.assert_array_equal(solver.u_carry[1], carry0[1])
+
+
 # --------------------------------------------- 8-virtual-device acceptance
 
 _SUBPROC = textwrap.dedent("""
@@ -216,6 +290,30 @@ _SUBPROC = textwrap.dedent("""
     for cs, cb in zip(tseq, tsh):
         for p in range(len(cs.order)):
             assert rel(cb.trajectories[p], cs.trajectories[p]) <= 1e-7
+
+    # phase-masked adaptive lockstep, chain axis sharded over 8 devices:
+    # chains step at per-chain Δt, finished chains ride as padded rows
+    from repro.pde.timedep import AdaptConfig
+    afam = get_timedep_family("heat", nx=8, ny=8, nt=2, dt=2e-2,
+                              adapt=AdaptConfig(step_tol=2e-3))
+    aseq = generate_trajectories_chunked(afam, key, 5, tcfg, workers=4,
+                                         engine="sequential")
+    ash = generate_trajectories_chunked(afam, key, 5, tcfg, workers=4,
+                                        engine="sharded")
+    for cs, cb in zip(aseq, ash):
+        assert cs.stats.num == cb.stats.num     # identical step sequences
+        for p in range(len(cs.order)):
+            assert rel(cb.trajectories[p], cs.trajectories[p]) <= 1e-6
+
+    # wave family: mass matrix != I through the sharded lockstep
+    wfam = get_timedep_family("wave", nx=8, ny=8, nt=2, dt=2e-3)
+    wseq = generate_trajectories_chunked(wfam, key, 4, tcfg, workers=4,
+                                         engine="sequential")
+    wsh = generate_trajectories_chunked(wfam, key, 4, tcfg, workers=4,
+                                        engine="sharded")
+    for cs, cb in zip(wseq, wsh):
+        for p in range(len(cs.order)):
+            assert rel(cb.trajectories[p], cs.trajectories[p]) <= 1e-6
     print("OK")
 """)
 

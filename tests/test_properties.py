@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis; the conftest stub degrades to fixed
+deterministic examples when the real package is absent) for the pipeline's
+combinatorial invariants:
+
+* sorting (core/sorting.py): every sort method returns a PERMUTATION of the
+  input indices — no index dropped, none duplicated — for arbitrary sizes
+  and feature clouds; `chain_length` is invariant under which permutation
+  representation is fed in.
+* chain planning (core/pipeline.py): `plan_chains` covers every position of
+  the sorted order exactly once, contiguously, with balanced lengths, for
+  arbitrary (n, workers).
+* lockstep packing: the `_row_index` rows round-trip back to the exact
+  chains (no label corruption through padding), and padding is only ever a
+  SUFFIX of a chain's row sequence — a -1 never reappears before a live
+  index, which is the alignment property the zero-RHS padding no-op relies
+  on.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import pipeline
+from repro.core.sorting import chain_length, sort_features
+
+METHODS = ("greedy", "grouped", "hilbert", "random", "none")
+
+
+def _feats(n: int, seed: int, f: int = 6) -> np.ndarray:
+    return np.random.default_rng(seed).standard_normal((n, f))
+
+
+# ----------------------------------------------------------------- sorting
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 60), st.integers(0, 2**31 - 1))
+def test_sort_methods_return_permutations(n, seed):
+    feats = _feats(n, seed)
+    for method in METHODS:
+        order = sort_features(feats, method)
+        assert sorted(np.asarray(order).tolist()) == list(range(n)), method
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 2**31 - 1))
+def test_chain_length_nonnegative_and_zero_for_identical(n, seed):
+    feats = _feats(n, seed)
+    order = sort_features(feats, "greedy")
+    assert chain_length(feats, order) >= 0.0
+    same = np.ones((n, 3))
+    assert chain_length(same, np.arange(n)) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 50), st.integers(0, 2**31 - 1))
+def test_greedy_no_worse_than_identity_chain(n, seed):
+    """Greedy (Algorithm 1 from index 0) never produces a LONGER similarity
+    path than the unsorted identity order on the same cloud."""
+    feats = _feats(n, seed)
+    greedy = chain_length(feats, sort_features(feats, "greedy"))
+    ident = chain_length(feats, np.arange(n))
+    assert greedy <= ident + 1e-9
+
+
+# ---------------------------------------------------------- chain planning
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 12))
+def test_plan_chains_partitions_exactly_once(n, workers):
+    order = np.random.default_rng(n * 131 + workers).permutation(n)
+    subs = pipeline.plan_chains(order, workers)
+    assert len(subs) == workers
+    flat = np.concatenate([s for s in subs]) if subs else np.zeros(0)
+    np.testing.assert_array_equal(flat, order)       # contiguous cover
+    counts = np.bincount(flat.astype(int), minlength=n)
+    assert (counts == 1).all()                       # each index exactly once
+    lens = [len(s) for s in subs]
+    assert max(lens) - min(lens) <= 1                # balanced
+
+
+# --------------------------------------------------------- lockstep packing
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 60), st.integers(1, 9), st.integers(0, 2**31 - 1))
+def test_lockstep_rows_round_trip_chains(n, workers, seed):
+    """Packing chains into lockstep rows and unpacking them recovers every
+    chain bit-for-bit: padded (-1) slots appear only after a chain is
+    exhausted, and no label ever migrates between chains."""
+    order = np.random.default_rng(seed).permutation(n)
+    subs = pipeline.plan_chains(order, workers)
+    length = max(len(s) for s in subs)
+    rows = [pipeline._row_index(subs, t) for t in range(length)]
+
+    for w, sub in enumerate(subs):
+        col = [int(rows[t][w]) for t in range(length)]
+        live = [v for v in col if v >= 0]
+        np.testing.assert_array_equal(live, sub)     # no label corruption
+        # padding is a strict suffix: once -1, always -1
+        seen_pad = False
+        for v in col:
+            if v < 0:
+                seen_pad = True
+            else:
+                assert not seen_pad, "live index after padding"
+
+    # each row's live entries are disjoint across chains (one system is
+    # solved by exactly one chain)
+    all_live = [v for row in rows for v in row if v >= 0]
+    assert sorted(all_live) == sorted(order.tolist())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 8))
+def test_phase_mask_monotone_shutdown(n, workers):
+    """PhaseMask only ever turns chains OFF; padded_rows is always the
+    complement of active and ends all-padded once every chain finished."""
+    live = np.random.default_rng(n + workers).random(workers) < 0.8
+    mask = pipeline.PhaseMask(live)
+    np.testing.assert_array_equal(mask.padded_rows, ~mask.active)
+    np.testing.assert_array_equal(mask.active, live)
+    for w in range(workers):
+        before = mask.active.sum()
+        mask.finish(w)
+        assert mask.active.sum() <= before
+        assert not mask.active[w]
+        np.testing.assert_array_equal(mask.padded_rows, ~mask.active)
+    assert not mask.any_active
