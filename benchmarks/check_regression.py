@@ -1,0 +1,65 @@
+"""CI perf ratchet for the lockstep engine.
+
+Compares a FRESH quick run of `trajectory_recycle` against the committed
+`results/BENCH_trajectory_recycle.json` artifact (the per-PR perf record):
+the heat-family lockstep-vs-chunked-sequential wall-time ratio must stay
+within REGRESSION_FACTOR of the committed value, and the lockstep engine
+must hold its ≤ 1 blocking host sync per cycle budget. A PR that slows the
+device-resident cycle path back toward host-mediated dispatch overhead
+fails CI here instead of shipping as an unnoticed wall-time regression.
+
+The committed baseline is read BEFORE the fresh run (the bench harness
+overwrites the same artifact path), so this module must be the one to
+launch the bench — run it stand-alone:
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "BENCH_trajectory_recycle.json")
+
+# CI runners are noisy shared VMs: allow the ratio to dip to 75% of the
+# committed value before calling it a regression (same slack philosophy as
+# the coverage ratchet — tight enough to catch a host-boundary reintroduction
+# splitting the cycle back into many dispatches, loose enough for jitter).
+REGRESSION_FACTOR = 0.75
+SYNC_BUDGET = 1.0  # blocking host fetches per lockstep cycle (inside loop)
+
+
+def main() -> int:
+    with open(BASELINE) as f:
+        committed = json.load(f)["metrics"]["heat"]["lockstep_speedup"]
+    floor = REGRESSION_FACTOR * committed
+
+    from benchmarks import trajectory_recycle
+    summary = trajectory_recycle.run(quick=True)
+    heat = summary["heat"]
+    fresh = heat["lockstep_speedup"]
+    syncs = heat["lockstep_syncs_per_cycle"]
+
+    print(f"[check_regression] heat lockstep_speedup: fresh {fresh:.3f}x "
+          f"vs committed {committed:.3f}x (floor {floor:.3f}x)")
+    print(f"[check_regression] lockstep host syncs/cycle: {syncs:.2f} "
+          f"(budget {SYNC_BUDGET:g})")
+
+    ok = True
+    if fresh < floor:
+        print("[check_regression] FAIL: lockstep speedup regressed below "
+              f"{REGRESSION_FACTOR:.0%} of the committed baseline")
+        ok = False
+    if syncs > SYNC_BUDGET:
+        print("[check_regression] FAIL: lockstep cycle loop exceeds "
+              "1 blocking host sync per cycle")
+        ok = False
+    if ok:
+        print("[check_regression] OK")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

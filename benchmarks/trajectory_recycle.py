@@ -110,6 +110,18 @@ def run(quick: bool = False):
                                       - cs.trajectories[pos])
                        / max(np.linalg.norm(cs.trajectories[pos]), 1e-300))
                 max_rel = max(max_rel, rel)
+        # host-sync accounting (S: dispatch-overhead claim as a number, not
+        # a wall-time inference). Lockstep chains share each batch's count,
+        # so reduce per STEP (batch) with max, not sum; the engine's fixed
+        # cost is 2 syncs per solve (entry flags + final bulk fetch) — the
+        # per-cycle loop itself must stay at ≤ 1 blocking fetch per cycle.
+        nsteps = min(len(c.stats.solved) for c in lock_chunks)
+        sync_tot = cyc_tot = 0
+        for t in range(nsteps):
+            row = [c.stats.solved[t] for c in lock_chunks]
+            sync_tot += max(s.host_syncs for s in row)
+            cyc_tot += max(s.cycles for s in row)
+        syncs_per_cycle = (sync_tot - 2 * nsteps) / max(cyc_tot, 1)
         summary[name] = {
             "cold_iters": it_cold,
             "recycled_iters": it_rec,
@@ -120,8 +132,11 @@ def run(quick: bool = False):
             "wall_lockstep_s": w_lock,
             "lockstep_speedup": w_seq / max(w_lock, 1e-12),
             "lockstep_max_rel_diff": max_rel,
+            "lockstep_host_syncs": sync_tot,
+            "lockstep_syncs_per_cycle": syncs_per_cycle,
             "recycled_beats_cold": bool(it_rec < it_cold),
             "lockstep_matches": bool(max_rel <= 10 * TOL),
+            "lockstep_sync_budget_ok": bool(syncs_per_cycle <= 1.0),
         }
 
     # ---- adaptive-Δt section (heat): step counts + recycling under drift
@@ -173,7 +188,9 @@ def run(quick: bool = False):
               f"{s['cold_iters'] - s['recycled_iters']} iters "
               f"({s['iter_ratio_cold_over_recycled']:.2f}x) [{flag}]; "
               f"lockstep {s['lockstep_speedup']:.2f}x vs chunked-seq, "
-              f"max rel diff {s['lockstep_max_rel_diff']:.1e} [{lflag}]")
+              f"max rel diff {s['lockstep_max_rel_diff']:.1e} [{lflag}], "
+              f"{s['lockstep_syncs_per_cycle']:.2f} host syncs/cycle "
+              f"[{'OK' if s['lockstep_sync_budget_ok'] else 'OVER'}]")
     return summary
 
 

@@ -45,6 +45,16 @@ frontends. Engines (`generate_dataset_chunked(engine=...)`):
     on CPU with XLA_FLAGS=--xla_force_host_platform_device_count=8; on a
     single device it degenerates to "batched").
 
+Device-resident cycle (the lockstep engines' dispatch shape): each GCRO-DR
+cycle of the batched engine is ONE fused device program — Arnoldi sweep,
+stacked Hessenberg LS, stacked harmonic-Ritz refresh (solvers/devlinalg.py)
+and the masked per-chain control flow all run on-device; the ONLY blocking
+host sync in the loop is a 4-bool flag fetch per cycle that decides
+continuation (plus one at entry and one bulk fetch at finalize —
+`SolveStats.host_syncs` tracks the budget, asserted ≤ 2 + cycles by
+tests/test_transfer_guard.py). The sequential engine keeps the historical
+host-mediated cleanup (hostlinalg.py) as the bitwise reference.
+
 Precision policy: set `SKRConfig.krylov.inner_dtype="float32"` to run the
 inner Krylov machinery of ALL engines in fp32 (the solvers wrap it in an
 fp64 iterative-refinement outer loop — see solvers/gcrodr.py). The

@@ -10,8 +10,9 @@ Two consumers live here:
     `data` mesh (`datagen_mesh`, `ChainSharding`): arrays with a leading
     chain axis (right-hand sides, residuals, per-chain recycle carries
     U_k/C_k, batched operator/preconditioner leaves) shard on "dp"; the
-    small host eigen/LS factors never touch the mesh — they are computed
-    replicated-per-shard on host from the gathered row.
+    small stacked eigen/LS factors are computed ON-DEVICE per cycle
+    (solvers/devlinalg.py) — they are (B, m, m)-small, chain-leading like
+    everything else, and never gathered to host between cycles.
 
 Mesh layout (launch/mesh.py):
     single-pod : (data=16, model=16)
@@ -229,8 +230,9 @@ class ChainSharding:
     (B, n), running solutions/residuals (B, n), Krylov bases (B, m+1, n),
     per-chain recycle carries U_k/C_k (B, n, k), batched operator and
     preconditioner leaves (B, ...) — shards that axis over the `data` mesh
-    axis. Host eigen/LS inputs are gathered to numpy (replicated per shard)
-    exactly as in the unsharded engine, so the O(m³) cleanup stays on host.
+    axis. The stacked O(m³) eigen/LS cleanup also carries the chain axis
+    (solvers/devlinalg.py) and runs inside the same sharded dispatch; only
+    the per-cycle continuation flags cross to host.
 
     Arrays whose leading dim does not divide the shard count fall back to
     replicated (the pipeline pads the chain count so the hot arrays always

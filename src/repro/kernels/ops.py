@@ -75,6 +75,26 @@ def fused_orthog(v_basis: jax.Array, w: jax.Array, mask: jax.Array, *,
     return ref.fused_orthog(v_basis, w, mask, acc_dtype=acc_dtype)
 
 
+def arnoldi_step(coeffs: jax.Array, inv_diag: jax.Array, c_rows: jax.Array,
+                 v_basis: jax.Array, vin: jax.Array, mask: jax.Array, *,
+                 use_kernel: bool = False, interpret: bool = True,
+                 acc_dtype=None):
+    """One fused (deflated) Arnoldi inner iteration: Jacobi apply + 5-point
+    stencil matvec + C-projection + CGS2 as ONE launch (the lockstep hot
+    loop's whole inner body — see kernels/arnoldi_step.py).
+
+    Returns (w_orth (n,), hcol (m+1,), bj (k,)). k = 0 (plain GMRES) is
+    handled by zero-row padding inside the kernel wrapper."""
+    if use_kernel:
+        from repro.kernels.arnoldi_step import arnoldi_step_pallas
+
+        return arnoldi_step_pallas(coeffs, inv_diag, c_rows, v_basis, vin,
+                                   mask, interpret=interpret,
+                                   acc_dtype=acc_dtype)
+    return ref.arnoldi_step(coeffs, inv_diag, c_rows, v_basis, vin, mask,
+                            acc_dtype=acc_dtype)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int | None = None,
                     use_kernel: bool = False, interpret: bool = True) -> jax.Array:

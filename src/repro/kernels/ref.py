@@ -62,6 +62,23 @@ def fused_orthog(v_basis: jax.Array, w: jax.Array, mask: jax.Array,
     return w2, h1 + h2
 
 
+def arnoldi_step(coeffs: jax.Array, inv_diag: jax.Array, c_rows: jax.Array,
+                 v_basis: jax.Array, vin: jax.Array, mask: jax.Array,
+                 acc_dtype=None):
+    """One (deflated) Arnoldi inner iteration, unfused: Jacobi apply →
+    stencil matvec → C-deflation projection → CGS2. The composition the
+    fused kernel (arnoldi_step.py) replaces with a single launch.
+
+    Returns (w_orth (n,), hcol (m+1,), bj (k,))."""
+    nx, ny = coeffs.shape[-2:]
+    u = inv_diag * vin
+    w = stencil5_matvec(coeffs, u.reshape(nx, ny)).reshape(-1)
+    bj = c_rows @ w
+    w = w - c_rows.T @ bj
+    w, h = fused_orthog(v_basis, w, mask, acc_dtype=acc_dtype)
+    return w, h, bj
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int | None = None) -> jax.Array:
     """Naive full-materialization attention oracle with GQA broadcast.

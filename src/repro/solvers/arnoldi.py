@@ -22,7 +22,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
-from repro.solvers.operator import apply_op
+from repro.solvers.operator import PreconditionedOp, StencilOp, apply_op
+from repro.solvers.precond import JacobiPrecond
+
+
+def _fusable(op, orthog: str) -> bool:
+    """True when the whole inner iteration (precond → stencil matvec →
+    C-projection → CGS2) can route through the single-launch fused kernel
+    (kernels/arnoldi_step.py). Decided at trace time from the operator
+    pytree structure — other operator/preconditioner kinds keep the
+    composed per-op kernel path unchanged."""
+    return (orthog == "cgs2"
+            and isinstance(op, PreconditionedOp)
+            and isinstance(op.base, StencilOp)
+            and (op.precond is None or isinstance(op.precond, JacobiPrecond)))
 
 
 class CycleResult(NamedTuple):
@@ -104,21 +117,38 @@ def _arnoldi_cycle_impl(op, c_rows, r0, tol_abs, *, m: int, orthog: str = "cgs2"
         v, h, b, cs, sn, g, j, res, brk = carry
         return (j < m) & (res > tol_abs) & (~brk)
 
+    # fused single-launch inner iteration (tentpole kernel): Jacobi apply +
+    # stencil matvec + C-projection + CGS2 in one dispatch. Routed ONLY when
+    # the kernel path is requested AND the operator matches — the unfused
+    # composition below stays byte-for-byte for every other configuration.
+    fuse = use_kernel and _fusable(op, orthog)
+    if fuse:
+        inv_diag = (jnp.ones_like(r0) if op.precond is None
+                    else op.precond.inv_diag)
+
     def body(carry):
         v, h, b, cs, sn, g, j, res, brk = carry
-        w = apply_op(op, v[j])
-        if k > 0:
-            bj = c_rows @ w
-            w = w - c_rows.T @ bj
-            b_new = b.at[:, j].set(bj)
-        else:
-            b_new = b
-        if orthog == "cgs2":
+        if fuse:
             mask = (jnp.arange(m + 1) <= j).astype(dt)
-            w, hcol = kops.fused_orthog(v, w, mask, use_kernel=use_kernel,
-                                        acc_dtype=acc_dtype)
+            w, hcol, bj = kops.arnoldi_step(op.base.coeffs, inv_diag,
+                                            c_rows, v, v[j], mask,
+                                            use_kernel=True,
+                                            acc_dtype=acc_dtype)
+            b_new = b.at[:, j].set(bj) if k > 0 else b
         else:
-            w, hcol = _mgs(v, w, j, m)
+            w = apply_op(op, v[j])
+            if k > 0:
+                bj = c_rows @ w
+                w = w - c_rows.T @ bj
+                b_new = b.at[:, j].set(bj)
+            else:
+                b_new = b
+            if orthog == "cgs2":
+                mask = (jnp.arange(m + 1) <= j).astype(dt)
+                w, hcol = kops.fused_orthog(v, w, mask, use_kernel=use_kernel,
+                                            acc_dtype=acc_dtype)
+            else:
+                w, hcol = _mgs(v, w, j, m)
         hj1 = jnp.linalg.norm(w)
         brk_new = hj1 < 1e-14 * safe_beta
         v = v.at[j + 1].set(w / jnp.maximum(hj1, jnp.finfo(dt).tiny))

@@ -3,14 +3,20 @@ SKR datagen (paper App. E.2.2).
 
 The sequential `GCRODRSolver` advances ONE recycling chain and pays the full
 host↔device round-trip + dispatch latency per tiny cycle. This engine
-advances B independent chains (one per sorted chunk) SIMULTANEOUSLY: every
-fused device step of the sequential solver (Arnoldi cycle, warm start,
-padded solution updates, recycle-space assembly) is vmapped over a leading
-chain axis, so a lockstep cycle for all B chains is the same ~4 dispatches a
-single chain used to cost. Each chain keeps its OWN recycle carry U_k — the
-chains never exchange Krylov information, exactly the App. E.2.2 task
-decomposition — while the O(m³) eigen/LS cleanup runs on host via the
-stacked drivers in `hostlinalg.py`.
+advances B independent chains (one per sorted chunk) SIMULTANEOUSLY, and —
+unlike the sequential solver — keeps the WHOLE cycle on device: the Arnoldi
+sweep, the Hessenberg least-squares, the harmonic-Ritz extraction and the
+recycle-space refresh are one fused jitted program per cycle (the stacked
+drivers in `solvers/devlinalg.py`, with `hostlinalg.py` kept as the
+reference oracle). The host's only job per cycle is fetching four boolean
+flags — `device_get` of (any chain still active, every active chain owns a
+recycle space, any chain advanced, restart growth requested) — to pick the
+next cycle's static shape. That is ONE host sync per cycle; a full
+`solve_batch` costs 2 + #cycles syncs (entry flags + per-cycle flags +
+finalize fetch), tracked in `SolveStats.host_syncs`.
+
+Each chain keeps its OWN recycle carry U_k — the chains never exchange
+Krylov information, exactly the App. E.2.2 task decomposition.
 
 Lockstep semantics (who iterates when):
 
@@ -20,53 +26,62 @@ Lockstep semantics (who iterates when):
 * Whole cycles are phase-uniform: a "fresh" (establishing) cycle or a
   "deflated" cycle runs for ALL chains at once. Converged / stalled /
   maxiter chains are masked by passing tol_abs = +inf (their cycle takes 0
-  steps and the padded y = 0 update is a no-op on z and r).
+  steps, their least-squares solution is forced to y = 0 by the dead-column
+  padding and the step mask, and the padded y = 0 update is a no-op on z
+  and r).
 * Mixed phases resolve conservatively: while ANY active chain still lacks a
   recycle space, the whole batch runs fresh GMRES(m) cycles (chains that
   already own a space simply re-establish it from their newest cycle). With
   healthy warm starts — the steady state of a sorted sequence — every chain
   goes straight to deflated cycles and the per-chain math is identical to
-  `GCRODRSolver.solve`, modulo vmapped-matmul float reassociation.
+  `GCRODRSolver.solve`, modulo vmapped-matmul float reassociation and the
+  eigensolver family (batched subspace iteration instead of LAPACK — same
+  invariant subspace on gapped pencils, tested in test_devlinalg.py).
 * Rare rank trouble in the batched warm-start QR drops the carry for the
-  affected chains only; a failed harmonic-Ritz refresh keeps the chain's
-  previous space, as in the sequential solver.
+  affected chains only (the masked `devlinalg.tri_inv_stacked` gate); a
+  failed harmonic-Ritz refresh keeps the chain's previous space, as in the
+  sequential solver.
 
 Wall-time accounting: the batch advances as one device program, so each
 returned `SolveStats.wall_time_s` is the LOCKSTEP latency of the whole
 batched solve (identical across chains) — the honest parallel-latency
 number App. E.2.2 reports (max over workers == the shared wall clock).
+`host_syncs` / `dispatches` follow the same convention: every non-padded
+chain reports the shared batch totals.
 
 Sharding (the multi-device axis): the chains are data-parallel — they share
 no Krylov information — so the leading chain axis of every large device
 array shards cleanly over a 1-D `data` mesh. Construct the solver with a
 `distributed.sharding.ChainSharding` and every lockstep dispatch runs as
-ONE SPMD program across the mesh: right-hand sides, residuals, bases and
-per-chain recycle carries live chain-sharded on device, while the small
-host eigen/LS solves stay replicated-per-shard on host (gathered rows),
-exactly as in the unsharded engine. The caller owns making the chain count
-divide the shard count (core/pipeline.py pads with zero-RHS chains).
+ONE SPMD program across the mesh: right-hand sides, residuals, bases,
+per-chain recycle carries AND the small per-chain eigen/LS factors live
+chain-sharded on device — nothing is gathered to host between cycles. The
+caller owns making the chain count divide the shard count
+(core/pipeline.py pads with zero-RHS chains).
 
 Precision policy: `cfg.inner_dtype="float32"` routes `solve_batch` through
 `_solve_batch_mixed` — the fp64 outer iterative-refinement loop of the
 sequential solver lifted to lockstep granularity. All B chains share each
 outer pass (converged chains ride along as zero-RHS padding rows); the
 bandwidth-bound inner machinery — vmapped Arnoldi cycles, preconditioner
-applies, recycle-space updates — runs in fp32 at half the HBM traffic,
-while b, the accumulated x and every residual of record stay fp64. The
-per-chain recycle carries are stored fp32.
+applies, recycle-space updates, and now also the stacked eigen/LS work —
+runs in fp32 at half the HBM traffic, while b, the accumulated x and every
+residual of record stay fp64. The per-chain recycle carries are stored
+fp32.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.solvers import devlinalg as dl
 from repro.solvers import gcrodr as _seq
-from repro.solvers import hostlinalg as hl
-from repro.solvers.arnoldi import arnoldi_cycle_batched
+from repro.solvers.arnoldi import _arnoldi_cycle_impl
 from repro.solvers.gmres import _ir_accum
 from repro.solvers.operator import apply_op, cast_operator
 from repro.solvers.types import KrylovConfig, SolveStats
@@ -74,15 +89,15 @@ from repro.solvers.types import KrylovConfig, SolveStats
 _TINY = 1e-300
 
 # --- the sequential solver's fused device steps, vmapped over chains -------
-_warm_start_b = jax.jit(jax.vmap(_seq._warm_start))
-_fresh_update_b = jax.jit(jax.vmap(_seq._fresh_update))
-_fresh_cu_b = jax.jit(jax.vmap(_seq._fresh_cu))
-_rhs_and_dnorm_b = jax.jit(jax.vmap(_seq._rhs_and_dnorm))
-_deflated_update_b = jax.jit(jax.vmap(_seq._deflated_update))
-_whv_blocks_b = jax.jit(jax.vmap(_seq._whv_blocks))
-_next_cu_b = jax.jit(jax.vmap(_seq._next_cu))
-_apply_cols_b = jax.jit(jax.vmap(jax.vmap(apply_op, in_axes=(None, 1),
-                                          out_axes=1)))
+# (called INSIDE the fused cycle programs below — they inline at trace time)
+_warm_start_b = jax.vmap(_seq._warm_start)
+_fresh_update_b = jax.vmap(_seq._fresh_update)
+_fresh_cu_b = jax.vmap(_seq._fresh_cu)
+_rhs_and_dnorm_b = jax.vmap(_seq._rhs_and_dnorm)
+_deflated_update_b = jax.vmap(_seq._deflated_update)
+_whv_blocks_b = jax.vmap(_seq._whv_blocks)
+_next_cu_b = jax.vmap(_seq._next_cu)
+_apply_cols_b = jax.vmap(jax.vmap(apply_op, in_axes=(None, 1), out_axes=1))
 _from_z_b = jax.jit(jax.vmap(lambda op, z: op.from_z(z)))
 # outer iterative-refinement step, per chain: x += d (upcast) + true fp64
 # residual of the UNpreconditioned base — one dispatch per outer pass
@@ -105,9 +120,8 @@ def _scaled_cols_b(u, dnorm):
     return u / jnp.maximum(dnorm[:, None, :], tiny)
 
 
-@jax.jit
 def _mat_post_b(y, inv_r):
-    """Per-chain Y R⁻¹ (stacked right-multiply by the small host factor)."""
+    """Per-chain Y R⁻¹ (stacked right-multiply by the small R factor)."""
     return jnp.einsum("bnk,bkl->bnl", y, inv_r)
 
 
@@ -115,6 +129,188 @@ def _sel(mask_np, new, old):
     """Per-chain select: rows of `new` where mask, else `old`."""
     m = jnp.asarray(mask_np).reshape((-1,) + (1,) * (new.ndim - 1))
     return jnp.where(m, new, old)
+
+
+def _mask(mask, new, old):
+    """Traced per-chain select (same as _sel, without the host cast)."""
+    return jnp.where(mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+
+
+# ---------------------------------------------------------------------------
+# the device-resident cycle programs
+#
+# State lives in a dict of device arrays threaded through three jitted
+# programs: _entry (norms + warm start), _fresh_cycle / _deflated_cycle
+# (one whole GCRO-DR cycle each), and a finalize fetch. Between cycle
+# dispatches the host reads ONLY the 4-flag vector each cycle returns.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _zeros_state(b, *, k: int):
+    bsz, n = b.shape
+    return (jnp.zeros_like(b), jnp.zeros((bsz, n, k), b.dtype),
+            jnp.zeros((bsz, n, k), b.dtype))
+
+
+def _active_mask(s, aux):
+    return (~aux["zerob"] & ~aux["pad"] & ~s["stalled"]
+            & (s["rnorm"] > aux["tol_abs"]) & (s["iters"] < aux["lim"]))
+
+
+def _flags(s, aux, active_prev, step, any_grew):
+    """The ONLY per-cycle device→host payload: 4 booleans."""
+    nxt = _active_mask(s, aux)
+    return jnp.stack([nxt.any(),                    # keep cycling?
+                      (s["est"] | ~nxt).all(),      # deflated-ready?
+                      (step & active_prev).any(),   # anyone advanced?
+                      any_grew])                    # restart growth (k=0)
+
+
+@partial(jax.jit, static_argnames=("k", "use_carry", "pad_given"))
+def _entry(ops, b, z0, c0, u0, uc, cok, pad_in, tol, lim,
+           *, k: int, use_carry: bool, pad_given: bool):
+    """Norms, padding mask and the warm start (Alg. 2 l.2-7) as one fused
+    dispatch. The warm-start rank gate is the batched masked triangular
+    inverse (devlinalg.tri_inv_stacked) — no per-chain host loop."""
+    bsz = b.shape[0]
+    dt = b.dtype
+    bnorm = jnp.linalg.norm(b, axis=1)
+    tol_abs = tol * bnorm
+    zerob = bnorm == 0.0
+    pad = pad_in if pad_given else zerob
+    aux = dict(b=b, bnorm=bnorm, tol_abs=tol_abs, zerob=zerob, pad=pad,
+               lim=lim)
+    s = dict(z=z0, r=b, rnorm=bnorm, c=c0, u=u0,
+             est=jnp.zeros(bsz, bool), stalled=jnp.zeros(bsz, bool),
+             no_prog=jnp.zeros(bsz, jnp.int32),
+             iters=jnp.zeros(bsz, jnp.int32),
+             matvecs=jnp.zeros(bsz, jnp.int32),
+             cycles=jnp.zeros(bsz, jnp.int32))
+    if use_carry and k > 0:
+        want = cok & ~zerob & ~pad & (bnorm > tol_abs)
+        au = _apply_cols_b(ops, uc)
+        q, rr = jnp.linalg.qr(au)
+        inv_rr, ok = dl.tri_inv_stacked(rr, want)
+        u_new = _mat_post_b(uc, inv_rr)
+        z2, r2, rn2 = _warm_start_b(u_new, q, s["z"], s["r"])
+        s["z"] = _mask(ok, z2, s["z"])
+        s["r"] = _mask(ok, r2, s["r"])
+        s["rnorm"] = jnp.where(ok, rn2, s["rnorm"])
+        s["c"] = _mask(ok, q, s["c"])
+        s["u"] = _mask(ok, u_new, s["u"])
+        s["est"] = ok
+        s["matvecs"] = jnp.where(want, k, 0).astype(jnp.int32)
+    f = _flags(s, aux, jnp.zeros(bsz, bool), jnp.zeros(bsz, bool),
+               jnp.zeros((), bool))
+    return s, aux, f
+
+
+@partial(jax.jit, static_argnames=("m", "k", "orthog", "use_kernel",
+                                   "h_acc", "stall_break", "can_grow"))
+def _fresh_cycle(ops, s, aux, *, m: int, k: int, orthog: str,
+                 use_kernel: bool, h_acc: str, stall_break: bool,
+                 can_grow: bool):
+    """One lockstep fresh GMRES(m) cycle (Alg. 2 l.9-18) as ONE device
+    program: Arnoldi sweep → stacked Hessenberg LS → solution update →
+    (k > 0) harmonic-Ritz space establishment, all under the same jit."""
+    bsz, n = s["r"].shape
+    dt = s["r"].dtype
+    active = _active_mask(s, aux)
+    eff_tol = jnp.where(active, aux["tol_abs"], jnp.inf)
+    empty_c = jnp.zeros((bsz, 0, n), dt)
+    cyc = jax.vmap(partial(_arnoldi_cycle_impl, m=m, orthog=orthog,
+                           use_kernel=use_kernel, h_acc=h_acc))(
+        ops, empty_c, s["r"], eff_tol)
+    j = cyc.j_used.astype(jnp.int32)
+    step = j > 0
+    y = dl.hessenberg_lstsq_stacked(cyc.h, j, s["rnorm"])
+    rprev = s["rnorm"]
+    z, r, rn = _fresh_update_b(ops, aux["b"], s["z"], cyc.v, y.astype(dt))
+    s = dict(s, z=z, r=r, rnorm=rn,
+             iters=s["iters"] + jnp.where(step, j, 0),
+             matvecs=s["matvecs"] + jnp.where(step, j + 1, 0),
+             cycles=s["cycles"] + step.astype(jnp.int32))
+    if stall_break:
+        s["no_prog"] = jnp.where(step & (s["rnorm"] > 0.99 * rprev),
+                                 s["no_prog"] + 1, 0)
+    any_grew = jnp.zeros((), bool)
+    if k > 0:
+        # establish / re-establish recycle spaces per chain, on device
+        p, ritz_ok = dl.harmonic_ritz_first_cycle_stacked(cyc.h, j, k)
+        q, inv_rr, qr_ok = dl.refresh_factors(cyc.h @ p, ritz_ok & step)
+        est_new = qr_ok
+        c_new, yk = _fresh_cu_b(cyc.v, cyc.h, p, q)
+        u_new = _mat_post_b(yk, inv_rr)
+        s["c"] = _mask(est_new, c_new, s["c"])
+        s["u"] = _mask(est_new, u_new, s["u"])
+        s["est"] = s["est"] | est_new
+    else:
+        # adaptive restart growth (see gmres_solve): grow when any chain
+        # ran a full cycle and stalled; the host doubles m on the flag
+        grew = (step & (j == m) & (s["rnorm"] > aux["tol_abs"])
+                & (s["rnorm"] > 0.5 * rprev))
+        any_grew = grew.any()
+        if can_grow:
+            # a longer cycle deserves a fresh shot at making progress
+            s["no_prog"] = jnp.where(any_grew, 0, s["no_prog"])
+        s["stalled"] = s["stalled"] | (cyc.breakdown & step
+                                      & (s["rnorm"] > aux["tol_abs"]))
+    if stall_break:
+        s["stalled"] = s["stalled"] | (s["no_prog"] >= 3)
+    return s, _flags(s, aux, active, step, any_grew)
+
+
+@partial(jax.jit, static_argnames=("mi", "k", "orthog", "use_kernel",
+                                   "h_acc", "stall_break"))
+def _deflated_cycle(ops, s, aux, *, mi: int, k: int, orthog: str,
+                    use_kernel: bool, h_acc: str, stall_break: bool):
+    """One lockstep deflated cycle (Alg. 2 l.19-33) as ONE device program:
+    deflated Arnoldi sweep → stacked Ĝ least-squares → solution update →
+    stacked generalized harmonic-Ritz refresh of (C, U)."""
+    active = _active_mask(s, aux)
+    eff_tol = jnp.where(active, aux["tol_abs"], jnp.inf)
+    cyc = jax.vmap(partial(_arnoldi_cycle_impl, m=mi, orthog=orthog,
+                           use_kernel=use_kernel, h_acc=h_acc))(
+        ops, jnp.swapaxes(s["c"], 1, 2), s["r"], eff_tol)
+    j = cyc.j_used.astype(jnp.int32)
+    step = j > 0
+    dt = s["r"].dtype
+
+    ctr, vr, dnorm = _rhs_and_dnorm_b(s["c"], s["u"], cyc.v, s["r"])
+    g = dl.assemble_g_stacked(dnorm, cyc.b, cyc.h, j)
+    rhs = jnp.concatenate([ctr, vr], axis=1)
+    ys = dl.lstsq_stacked(g, rhs)
+    # frozen chains (j = 0) still have Cᵀr ≠ 0 — force their update to the
+    # padded no-op the host engine produced by skipping them outright
+    ys = jnp.where(step[:, None], ys, 0.0)
+    y_k, y_m = ys[:, :k], ys[:, k:]
+    ut = _scaled_cols_b(s["u"], dnorm)
+    rprev = s["rnorm"]
+    z, r, rn = _deflated_update_b(ops, aux["b"], s["z"], ut, cyc.v,
+                                  y_k.astype(dt), y_m.astype(dt))
+    s = dict(s, z=z, r=r, rnorm=rn,
+             iters=s["iters"] + jnp.where(step, j, 0),
+             matvecs=s["matvecs"] + jnp.where(step, j + 1, 0),
+             cycles=s["cycles"] + step.astype(jnp.int32))
+    if stall_break:
+        s["no_prog"] = jnp.where(step & (s["rnorm"] > 0.99 * rprev),
+                                 s["no_prog"] + 1, 0)
+        s["stalled"] = s["stalled"] | (s["no_prog"] >= 3)
+
+    # next recycle spaces from the stacked generalized harmonic-Ritz pencil
+    cu, cv, vu, vv = _whv_blocks_b(s["c"], ut, cyc.v)
+    whv = dl.assemble_whv_stacked(cu, cv, vu, vv, j)
+    p, ritz_ok = dl.harmonic_ritz_deflated_stacked(g, whv, j, k)
+    q, inv_rr, ref_ok = dl.refresh_factors(g @ p, ritz_ok & step)
+    c_new, yk = _next_cu_b(ut, cyc.v, s["c"], p[:, :k], p[:, k:],
+                           q[:, :k], q[:, k:])
+    u_new = _mat_post_b(yk, inv_rr)
+    s["c"] = _mask(ref_ok, c_new, s["c"])
+    s["u"] = _mask(ref_ok, u_new, s["u"])
+    s["stalled"] = s["stalled"] | (cyc.breakdown & step
+                                  & (s["rnorm"] > aux["tol_abs"]))
+    return s, _flags(s, aux, active, step, jnp.zeros((), bool))
 
 
 class BatchedGCRODRSolver:
@@ -203,225 +399,63 @@ class BatchedGCRODRSolver:
         bsz, n = b.shape
         dt = b.dtype
 
-        z = self._dev(jnp.zeros((bsz, n), dt))
-        r = b
-        bnorm = np.asarray(jnp.linalg.norm(b, axis=1))
-        rnorm = bnorm.copy()
-        tol_abs = cfg.tol * bnorm
-        zerob = bnorm == 0.0
-        pad = zerob if padded_rows is None else np.asarray(padded_rows)
+        # ---- entry: one fused dispatch (norms + warm start), one sync ----
+        # (zeros come from a jitted constant — jnp.zeros OUTSIDE jit moves a
+        # scalar host→device, which transfer_guard("disallow") rejects)
+        z0, c0, u0 = (self._dev(a) for a in _zeros_state(b, k=k))
+        use_carry = k > 0 and self.u_carry is not None
+        uc = (self._dev(jnp.asarray(self.u_carry)) if use_carry
+              else u0)
+        cok = jnp.asarray(self.carry_ok if use_carry
+                          else np.zeros(bsz, bool))
+        pad_given = padded_rows is not None
+        pad_in = jnp.asarray(np.asarray(padded_rows) if pad_given
+                             else np.zeros(bsz, bool))
+        # 0-d numpy scalars: a bare python scalar counts as an IMPLICIT
+        # host→device transfer under jax.transfer_guard("disallow")
+        s, aux, f = _entry(ops, b, z0, c0, u0, uc, cok, pad_in,
+                           jnp.asarray(np.asarray(cfg.tol, dt)),
+                           jnp.asarray(np.asarray(cfg.maxiter, np.int32)),
+                           k=k, use_carry=use_carry, pad_given=pad_given)
+        any_active, all_est, _, _ = map(bool, jax.device_get(f))
+        host_syncs, dispatches = 1, 1
 
-        iters = np.zeros(bsz, dtype=int)
-        matvecs = np.zeros(bsz, dtype=int)
-        cycles = np.zeros(bsz, dtype=int)
-        stalled = np.zeros(bsz, dtype=bool)
-        no_prog = np.zeros(bsz, dtype=int)  # stall_break progress counters
-
-        c_dev = self._dev(jnp.zeros((bsz, n, k), dt))
-        u_dev = self._dev(jnp.zeros((bsz, n, k), dt))
-        established = np.zeros(bsz, dtype=bool)
-
-        # ---- warm start: re-biorthogonalize carried spaces (Alg. 2 l.2-7)
-        if k > 0 and self.u_carry is not None:
-            want = self.carry_ok & ~zerob & ~pad & (rnorm > tol_abs)
-            if want.any():
-                u_old = self._dev(jnp.asarray(self.u_carry))
-                au = _apply_cols_b(ops, u_old)
-                matvecs += np.where(want, k, 0)
-                q, rr = jnp.linalg.qr(au)
-                rr_np = np.asarray(rr)
-                inv_rr = np.tile(np.eye(k), (bsz, 1, 1))
-                ok = want.copy()
-                for i in np.nonzero(want)[0]:
-                    diag = np.abs(np.diag(rr_np[i]))
-                    if diag.min() > 1e-12 * max(diag.max(), _TINY):
-                        inv_rr[i] = np.linalg.inv(rr_np[i])
-                    else:
-                        ok[i] = False
-                u_new = _mat_post_b(u_old, jnp.asarray(inv_rr, dt))
-                z2, r2, rn2 = _warm_start_b(u_new, q, z, r)
-                z = _sel(ok, z2, z)
-                r = _sel(ok, r2, r)
-                rnorm = np.where(ok, np.asarray(rn2), rnorm)
-                c_dev = _sel(ok, q, c_dev)
-                u_dev = _sel(ok, u_new, u_dev)
-                established = ok
-
-        empty_c = self._dev(jnp.zeros((bsz, 0, n), dt))
         m_fresh = cfg.m  # k=0: grows adaptively, mirroring gmres_solve
         m_cap = min(n, cfg.m_max if cfg.m_max else 8 * cfg.m)
 
-        while True:
-            active = (~zerob & ~pad & ~stalled & (rnorm > tol_abs)
-                      & (iters < cfg.maxiter))
-            if not active.any():
-                break
-            eff_tol = jnp.asarray(np.where(active, tol_abs, np.inf))
+        # ---- the cycle loop: one fused dispatch + one 4-flag sync each ---
+        while any_active:
+            if k == 0 or not all_est:
+                s, f = _fresh_cycle(
+                    ops, s, aux, m=m_fresh, k=k, orthog=cfg.orthog,
+                    use_kernel=self.use_kernel, h_acc=cfg.cgs2_acc,
+                    stall_break=self.stall_break,
+                    can_grow=m_fresh < m_cap)
+            else:
+                s, f = _deflated_cycle(
+                    ops, s, aux, mi=cfg.m - k, k=k, orthog=cfg.orthog,
+                    use_kernel=self.use_kernel, h_acc=cfg.cgs2_acc,
+                    stall_break=self.stall_break)
+            any_active, all_est, any_step, any_grew = map(
+                bool, jax.device_get(f))
+            host_syncs += 1
+            dispatches += 1
+            if any_grew and m_fresh < m_cap:
+                m_fresh = min(2 * m_fresh, m_cap)
+            if not any_step:
+                break  # every active chain stagnated at 0 steps
 
-            if k == 0 or not established[active].all():
-                # ---- lockstep fresh GMRES(m) cycles (Alg. 2 l.9-18) ------
-                m = m_fresh
-                cyc = arnoldi_cycle_batched(ops, empty_c, r, eff_tol, m=m,
-                                            orthog=cfg.orthog,
-                                            use_kernel=self.use_kernel,
-                                            h_acc=cfg.cgs2_acc)
-                j = np.asarray(cyc.j_used)
-                step = j > 0
-                if not step[active].any():
-                    break  # all active chains stagnated at 0 steps
-                h_np = np.asarray(cyc.h)
-                y = hl.hessenberg_lstsq_stacked(h_np, j, rnorm)
-                rprev = rnorm
-                z, r, rn = _fresh_update_b(ops, b, z, cyc.v,
-                                           jnp.asarray(y, dt))
-                rnorm = np.asarray(rn)
-                iters += np.where(step, j, 0)
-                matvecs += np.where(step, j + 1, 0)
-                cycles += step
-                if self.stall_break:
-                    no_prog = np.where(step & (rnorm > 0.99 * rprev),
-                                       no_prog + 1, 0)
-
-                if k > 0:
-                    # establish / re-establish recycle spaces per chain
-                    plist = hl.harmonic_ritz_first_cycle_stacked(h_np, j, k)
-                    p_pad = np.zeros((bsz, m, k))
-                    q_pad = np.zeros((bsz, m + 1, k))
-                    inv_rr = np.tile(np.eye(k), (bsz, 1, 1))
-                    est_new = np.zeros(bsz, dtype=bool)
-                    for i in range(bsz):
-                        p = plist[i]
-                        if p is None or p.shape[1] != k:
-                            continue
-                        ji = int(j[i])
-                        qq, rr_ = np.linalg.qr(h_np[i, : ji + 1, :ji] @ p)
-                        diag = np.abs(np.diag(rr_))
-                        if diag.min() <= 1e-12 * max(diag.max(), _TINY):
-                            continue
-                        p_pad[i, :ji] = p
-                        q_pad[i, : ji + 1] = qq
-                        inv_rr[i] = np.linalg.inv(rr_)
-                        est_new[i] = True
-                    if est_new.any():
-                        c_new, yk = _fresh_cu_b(cyc.v, cyc.h,
-                                                jnp.asarray(p_pad, dt),
-                                                jnp.asarray(q_pad, dt))
-                        u_new = _mat_post_b(yk, jnp.asarray(inv_rr, dt))
-                        c_dev = _sel(est_new, c_new, c_dev)
-                        u_dev = _sel(est_new, u_new, u_dev)
-                        established |= est_new
-                else:
-                    # adaptive restart growth (see gmres_solve): grow when
-                    # any chain ran a full cycle and stalled
-                    grew = (step & (j == m) & (rnorm > tol_abs)
-                            & (rnorm > 0.5 * rprev))
-                    if grew.any() and m_fresh < m_cap:
-                        m_fresh = min(2 * m_fresh, m_cap)
-                        no_prog[:] = 0  # a longer cycle deserves a fresh shot
-                    stalled |= (np.asarray(cyc.breakdown) & step
-                                & (rnorm > tol_abs))
-                if self.stall_break:
-                    stalled |= no_prog >= 3
-                continue
-
-            # ---- lockstep deflated cycles (Alg. 2 l.19-33) ---------------
-            mi = cfg.m - k
-            cyc = arnoldi_cycle_batched(ops, jnp.swapaxes(c_dev, 1, 2), r,
-                                        eff_tol, m=mi, orthog=cfg.orthog,
-                                        use_kernel=self.use_kernel,
-                                        h_acc=cfg.cgs2_acc)
-            j = np.asarray(cyc.j_used)
-            step = j > 0
-            if not step[active].any():
-                break
-            ctr, vr, dnorm = _rhs_and_dnorm_b(c_dev, u_dev, cyc.v, r)
-            ctr_np = np.asarray(ctr)
-            vr_np = np.asarray(vr)
-            dnorm_np = np.maximum(np.asarray(dnorm, np.float64), _TINY)
-            h_np = np.asarray(cyc.h)
-            bb_np = np.asarray(cyc.b)
-
-            g_list: list = [None] * bsz
-            rhs_list: list = [None] * bsz
-            for i in np.nonzero(step)[0]:
-                ji = int(j[i])
-                g = np.zeros((k + ji + 1, k + ji))
-                g[:k, :k] = np.diag(1.0 / dnorm_np[i])
-                g[:k, k:] = bb_np[i][:, :ji]
-                g[k:, k:] = h_np[i][: ji + 1, :ji]
-                g_list[i] = g
-                rhs_list[i] = np.concatenate([ctr_np[i], vr_np[i][: ji + 1]])
-            ys = hl.lstsq_stacked(g_list, rhs_list)
-
-            y_k = np.zeros((bsz, k))
-            y_m = np.zeros((bsz, mi))
-            for i in np.nonzero(step)[0]:
-                y_k[i] = ys[i][:k]
-                y_m[i, : int(j[i])] = ys[i][k:]
-            ut = _scaled_cols_b(u_dev, dnorm)
-            rprev = rnorm
-            z, r, rn = _deflated_update_b(ops, b, z, ut, cyc.v,
-                                          jnp.asarray(y_k, dt),
-                                          jnp.asarray(y_m, dt))
-            rnorm = np.asarray(rn)
-            iters += np.where(step, j, 0)
-            matvecs += np.where(step, j + 1, 0)
-            cycles += step
-            if self.stall_break:
-                no_prog = np.where(step & (rnorm > 0.99 * rprev),
-                                   no_prog + 1, 0)
-                stalled |= no_prog >= 3
-
-            # next recycle spaces from the harmonic-Ritz pencils
-            cu, cv, vu, vv = [np.asarray(a) for a in
-                              _whv_blocks_b(c_dev, ut, cyc.v)]
-            whv_list: list = [None] * bsz
-            for i in np.nonzero(step)[0]:
-                ji = int(j[i])
-                whv = np.zeros((k + ji + 1, k + ji))
-                whv[:k, :k] = cu[i]
-                whv[:k, k:] = cv[i][:, :ji]
-                whv[k:, :k] = vu[i][: ji + 1]
-                whv[k:, k:] = vv[i][: ji + 1, :ji]
-                whv_list[i] = whv
-            p2 = hl.harmonic_ritz_deflated_stacked(g_list, whv_list, k)
-
-            p_k = np.zeros((bsz, k, k))
-            p_m = np.zeros((bsz, mi, k))
-            q_c = np.zeros((bsz, k, k))
-            q_v = np.zeros((bsz, mi + 1, k))
-            inv_rr = np.tile(np.eye(k), (bsz, 1, 1))
-            ref_ok = np.zeros(bsz, dtype=bool)
-            for i in np.nonzero(step)[0]:
-                p = p2[i]
-                if p is None or p.shape[1] != k:
-                    continue
-                qq, rr_ = np.linalg.qr(g_list[i] @ p)
-                diag = np.abs(np.diag(rr_))
-                if diag.min() <= 1e-12 * max(diag.max(), _TINY):
-                    continue
-                ji = int(j[i])
-                p_k[i] = p[:k]
-                p_m[i, :ji] = p[k:]
-                q_c[i] = qq[:k]
-                q_v[i, : ji + 1] = qq[k:]
-                inv_rr[i] = np.linalg.inv(rr_)
-                ref_ok[i] = True
-            if ref_ok.any():
-                c_new, yk = _next_cu_b(ut, cyc.v, c_dev,
-                                       jnp.asarray(p_k, dt),
-                                       jnp.asarray(p_m, dt),
-                                       jnp.asarray(q_c, dt),
-                                       jnp.asarray(q_v, dt))
-                u_new = _mat_post_b(yk, jnp.asarray(inv_rr, dt))
-                c_dev = _sel(ref_ok, c_new, c_dev)
-                u_dev = _sel(ref_ok, u_new, u_dev)
-            stalled |= (np.asarray(cyc.breakdown) & step & (rnorm > tol_abs))
-
-        # ---- finalize ----------------------------------------------------
-        x = np.asarray(_from_z_b(ops, z))
+        # ---- finalize: one dispatch + one bulk fetch ---------------------
+        x_dev = _from_z_b(ops, s["z"])
+        (x, rnorm, iters, matvecs, cycles, stalled, established, u_np,
+         bnorm, zerob, pad) = jax.device_get(
+            (x_dev, s["rnorm"], s["iters"], s["matvecs"], s["cycles"],
+             s["stalled"], s["est"], s["u"], aux["bnorm"], aux["zerob"],
+             aux["pad"]))
+        host_syncs += 1
+        dispatches += 1
         wall = time.perf_counter() - t0
-        converged = zerob | (rnorm <= tol_abs)
+        converged = zerob | (rnorm <= cfg.tol * bnorm)
         stats = []
         for i in range(bsz):
             stats.append(SolveStats(
@@ -437,13 +471,17 @@ class BatchedGCRODRSolver:
                 wall_time_s=0.0 if pad[i] else wall,
                 breakdown=bool(stalled[i]),
                 padded=bool(pad[i]),
+                # shared batch totals (see module docstring): 2 + #cycles
+                # syncs — entry flags, one 4-flag fetch per cycle, finalize
+                host_syncs=0 if pad[i] else host_syncs,
+                dispatches=0 if pad[i] else dispatches,
             ))
 
         if k > 0:
             # carry Ỹ_k per chain (Alg. 2 line 34); chains that never owned
-            # a space this solve keep their previous carry. The carry is
+            # a space this solve keep their previous carry — BITWISE (the
+            # old numpy rows are reused, not round-tripped). The carry is
             # stored in the SOLVE dtype (fp32 under the mixed inner solver).
-            u_np = np.asarray(u_dev)
             if self.u_carry is None:
                 self.u_carry = np.zeros((bsz, n, k), dtype=u_np.dtype)
                 self.carry_ok = np.zeros(bsz, dtype=bool)
@@ -476,6 +514,7 @@ class BatchedGCRODRSolver:
         x = self._dev(jnp.zeros((bsz, n), b.dtype))
         r = b
         bnorm = np.asarray(jnp.linalg.norm(b, axis=1))
+        host_syncs, dispatches = 1, 1
         rnorm = bnorm.copy()
         tol_abs = cfg.tol * bnorm
         zerob = bnorm == 0.0
@@ -554,6 +593,8 @@ class BatchedGCRODRSolver:
                     inner.carry_ok = self._inner64.carry_ok.copy()
                 fb64 |= need
             passes += 1
+            host_syncs += max(st.host_syncs for st in st_in)
+            dispatches += max(st.dispatches for st in st_in) + 1
             for i in np.nonzero(need)[0]:
                 iters[i] += st_in[i].iterations
                 matvecs[i] += st_in[i].matvecs
@@ -562,6 +603,7 @@ class BatchedGCRODRSolver:
             x, r, rn = _ir_accum_b(ops.base, b, x, jnp.asarray(d))
             matvecs += need
             rnorm = np.asarray(rn)
+            host_syncs += 1
             bad = need & ~np.isfinite(rnorm)
             if bad.any():   # fp32 overflow on some chains — roll them back
                 x = _sel(~bad, x, x_prev)
@@ -576,6 +618,7 @@ class BatchedGCRODRSolver:
 
         # ---- finalize ----------------------------------------------------
         x_np = np.asarray(x)
+        host_syncs += 1
         wall = time.perf_counter() - t0
         converged = zerob | (rnorm <= tol_abs)
         stats = []
@@ -596,6 +639,8 @@ class BatchedGCRODRSolver:
                 outer_refinements=int(outer[i]),
                 fp64_fallback=bool(fb64[i]),
                 padded=bool(pad[i]),
+                host_syncs=0 if pad[i] else host_syncs,
+                dispatches=0 if pad[i] else dispatches,
             ))
         if cfg.k > 0 and inner.u_carry is not None:
             self.u_carry = np.asarray(inner.u_carry, np.float32)

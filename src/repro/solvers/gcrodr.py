@@ -149,10 +149,13 @@ class GCRODRSolver:
         self._inner64 = None
 
     # --------------------------------------------------------------------
-    def _refresh_space(self, last_cycle, k: int, mi: int):
+    def _refresh_space(self, last_cycle, k: int, mi: int, stats=None):
         """Harmonic-Ritz recycle-space refresh from a deflated cycle
         (Alg. 2 lines 29-33). Returns (C', U') or None on rank trouble."""
         j, g, ut, cyc, c_dev = last_cycle
+        if stats is not None:  # 4 block pulls + _whv_blocks/_next_cu launches
+            stats.host_syncs += 4
+            stats.dispatches += 2
         cu, cv, vu, vv = [np.asarray(a)
                           for a in _whv_blocks(c_dev, ut, cyc.v)]
         whv = np.zeros((k + j + 1, k + j))
@@ -242,9 +245,13 @@ class GCRODRSolver:
         if x0 is None:
             r = b
             bnorm = rnorm = float(jnp.linalg.norm(b))  # ONE host sync
+            stats.host_syncs += 1
+            stats.dispatches += 1
         else:
             r, bn_d, rn_d = _residual_norms(op, b, z)  # one fused dispatch
             bnorm, rnorm = (float(v) for v in jax.device_get((bn_d, rn_d)))
+            stats.host_syncs += 1
+            stats.dispatches += 1
         if bnorm == 0.0:
             stats.converged = True
             stats.rel_residual = 0.0
@@ -265,6 +272,8 @@ class GCRODRSolver:
             stats.matvecs += k
             q, rr = jnp.linalg.qr(au)                        # reduced QR
             rr_np = np.asarray(rr)
+            stats.host_syncs += 1          # R factor pull
+            stats.dispatches += 2          # _apply_cols + qr
             diag = np.abs(np.diag(rr_np))
             if diag.min() > 1e-12 * max(diag.max(), 1e-300):
                 c_dev = q
@@ -272,6 +281,8 @@ class GCRODRSolver:
                     np.linalg.inv(rr_np))                    # U R⁻¹
                 z, r, rn = _warm_start(u_dev, c_dev, z, r)
                 rnorm = float(rn)
+                stats.host_syncs += 1
+                stats.dispatches += 1
 
         empty_c = jnp.zeros((0, n), b.dtype)
         dt = b.dtype        # host factors ship back in the device dtype
@@ -295,6 +306,8 @@ class GCRODRSolver:
                                     orthog=cfg.orthog, use_kernel=self.use_kernel,
                                     h_acc=cfg.cgs2_acc)
                 j = int(cyc.j_used)
+                stats.host_syncs += 2      # j_used + Hessenberg pull
+                stats.dispatches += 1      # arnoldi_cycle
                 if j == 0:
                     break
                 h = np.asarray(cyc.h)                       # (m+1, m) small
@@ -302,6 +315,8 @@ class GCRODRSolver:
                 y[:j] = hessenberg_lstsq(h[: j + 1, :j], rnorm)
                 z, r, rn = _fresh_update(op, b, z, cyc.v, jnp.asarray(y))
                 rnorm = float(rn)
+                stats.host_syncs += 1
+                stats.dispatches += 1
                 stats.iterations += j
                 stats.matvecs += j + 1
                 stats.cycles += 1
@@ -317,6 +332,7 @@ class GCRODRSolver:
                             p_pad[:j] = p
                             q_pad = np.zeros((m + 1, k), dtype=h.dtype)
                             q_pad[: j + 1] = q
+                            stats.dispatches += 1
                             c_dev, yk = _fresh_cu(cyc.v, cyc.h,
                                                   jnp.asarray(p_pad),
                                                   jnp.asarray(q_pad))
@@ -329,9 +345,13 @@ class GCRODRSolver:
                                 orthog=cfg.orthog, use_kernel=self.use_kernel,
                                 h_acc=cfg.cgs2_acc)
             j = int(cyc.j_used)
+            stats.host_syncs += 1
+            stats.dispatches += 1          # arnoldi_cycle
             if j == 0:
                 break
             ctr, vr, dnorm = _rhs_and_dnorm(c_dev, u_dev, cyc.v, r)
+            stats.host_syncs += 5          # h, b, dnorm, ctr, vr pulls
+            stats.dispatches += 1
             h = np.asarray(cyc.h)[: j + 1, :j]               # effective block
             bb = np.asarray(cyc.b)[:, :j]
             dnorm_np = np.maximum(np.asarray(dnorm, np.float64), 1e-300)
@@ -354,6 +374,8 @@ class GCRODRSolver:
                                         jnp.asarray(y[:k], dt),
                                         jnp.asarray(y_m, dt))
             rnorm = float(rn)
+            stats.host_syncs += 2          # rn + breakdown flag below
+            stats.dispatches += 1          # _deflated_update
             stats.iterations += j
             stats.matvecs += j + 1
             stats.cycles += 1
@@ -363,23 +385,26 @@ class GCRODRSolver:
             # every cycle (paper-faithful) or deferred to the last cycle
             last_cycle = (j, g, ut, cyc, c_dev)
             if cfg.ritz_refresh == "cycle":
-                refreshed = self._refresh_space(last_cycle, k, mi)
+                refreshed = self._refresh_space(last_cycle, k, mi, stats)
                 if refreshed is not None:
                     c_dev, u_dev = refreshed
             if bool(cyc.breakdown) and rnorm > tol_abs:
                 break
 
         if cfg.ritz_refresh == "final" and last_cycle is not None:
-            refreshed = self._refresh_space(last_cycle, k, cfg.m - k)
+            refreshed = self._refresh_space(last_cycle, k, cfg.m - k, stats)
             if refreshed is not None:
                 _, u_dev = refreshed
 
         x = np.asarray(op.from_z(z))
+        stats.host_syncs += 1
+        stats.dispatches += 1
         stats.rel_residual = rnorm / bnorm
         stats.wall_time_s = time.perf_counter() - t0
         # carry Ỹ_k = U_k to the next system (Alg. 2 line 34)
         if u_dev is not None:
             self.u_carry = np.asarray(u_dev)
+            stats.host_syncs += 1
         self.systems_solved += 1
         return x, stats
 

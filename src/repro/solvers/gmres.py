@@ -69,19 +69,21 @@ def gmres_solve(op: PreconditionedOp, b, cfg: KrylovConfig, x0=None,
     n = int(b.shape[0])
     b = jnp.asarray(b)
     z = jnp.zeros(n, b.dtype) if x0 is None else jnp.asarray(x0)
+    stats = SolveStats()
     if x0 is None:
         r = b
         bnorm = rnorm = float(jnp.linalg.norm(b))   # one sync, not two
     else:
         r, bn, rn = _residual_norms(op, b, z)
         bnorm, rnorm = (float(v) for v in jax.device_get((bn, rn)))
+    stats.host_syncs += 1
+    stats.dispatches += 1
     if bnorm == 0.0:
         return np.zeros(n), SolveStats(converged=True, rel_residual=0.0,
                                        wall_time_s=time.perf_counter() - t0)
     tol_abs = cfg.tol * bnorm
     empty_c = jnp.zeros((0, n), b.dtype)
 
-    stats = SolveStats()
     # Adaptive restart (anti-stagnation): restarted GMRES at a FIXED m can
     # stall on indefinite operators (Helmholtz) — the restart discards the
     # small-eigenvalue information every cycle. When a full cycle reduces the
@@ -100,6 +102,8 @@ def gmres_solve(op: PreconditionedOp, b, cfg: KrylovConfig, x0=None,
                             orthog=cfg.orthog, use_kernel=use_kernel,
                             h_acc=cfg.cgs2_acc)
         j = int(cyc.j_used)
+        stats.host_syncs += 2      # j_used + Hessenberg pull
+        stats.dispatches += 1      # arnoldi_cycle
         if j == 0:
             break  # stagnation
         h = np.asarray(cyc.h)[: j + 1, :j]
@@ -108,6 +112,8 @@ def gmres_solve(op: PreconditionedOp, b, cfg: KrylovConfig, x0=None,
         rprev = rnorm
         z, r, rn = _fused_update(op, b, z, cyc.v, jnp.asarray(y))
         rnorm = float(rn)
+        stats.host_syncs += 2      # rn + breakdown flag
+        stats.dispatches += 1
         stats.iterations += j
         stats.matvecs += j + 1
         stats.cycles += 1
@@ -125,6 +131,8 @@ def gmres_solve(op: PreconditionedOp, b, cfg: KrylovConfig, x0=None,
                 break  # round-off floor reached — hand back to the outer loop
 
     x = np.asarray(op.from_z(z))
+    stats.host_syncs += 1
+    stats.dispatches += 1
     stats.rel_residual = rnorm / bnorm
     stats.wall_time_s = time.perf_counter() - t0
     return x, stats
@@ -153,11 +161,15 @@ def _ir_refine(op: PreconditionedOp, b, cfg: KrylovConfig, solve32, solve64,
         x = jnp.zeros(n, b.dtype)
         r = b
         bnorm = rnorm = float(jnp.linalg.norm(b))
+        stats.host_syncs += 1
+        stats.dispatches += 1
     else:
         # x0 follows the plain-path contract (z-space guess): x = M⁻¹ x0
         x = jnp.asarray(op.from_z(jnp.asarray(x0)))
         r, bn, rn = _residual_norms(op, b, jnp.asarray(x0))
         bnorm, rnorm = (float(v) for v in jax.device_get((bn, rn)))
+        stats.host_syncs += 1
+        stats.dispatches += 1
     if bnorm == 0.0:
         return np.zeros(n), SolveStats(converged=True, rel_residual=0.0,
                                        wall_time_s=time.perf_counter() - t0)
@@ -181,6 +193,8 @@ def _ir_refine(op: PreconditionedOp, b, cfg: KrylovConfig, solve32, solve64,
         x, r, rn = _ir_accum(op.base, b, x, jnp.asarray(d))
         stats.matvecs += 1
         rnorm = float(rn)
+        stats.host_syncs += 1      # outer residual norm
+        stats.dispatches += 2      # _ir_accum + the d upcast transfer
         if not np.isfinite(rnorm):       # fp32 overflow — roll the pass back
             x, r, rnorm = x_prev, r_prev, rprev
         if not (rnorm <= 0.5 * rprev):   # pass made no real progress

@@ -31,12 +31,23 @@ class SolveStats:
     # also updated the recycle carry, which is what makes the retry cheap),
     # flagged so accepted-step efficiency can be derived
     rejected: bool = False
+    # dispatch-overhead accounting: every host↔device boundary the solver
+    # crossed for THIS system. `host_syncs` counts blocking device→host
+    # fetches (`device_get` / `np.asarray` on a device array / `float(...)`
+    # of a device scalar); `dispatches` counts jitted device programs
+    # launched. Lockstep engines report the SHARED batch totals on every
+    # non-padded chain (like wall_time_s) — the per-cycle sync budget is
+    # the claim the trajectory_recycle benchmark tracks.
+    host_syncs: int = 0
+    dispatches: int = 0
 
     def merge_inner(self, other: "SolveStats"):
         """Fold an inner (correction-solve) pass into this outer record."""
         self.iterations += other.iterations
         self.matvecs += other.matvecs
         self.cycles += other.cycles
+        self.host_syncs += other.host_syncs
+        self.dispatches += other.dispatches
 
 
 @dataclasses.dataclass
@@ -109,6 +120,22 @@ class SequenceStats:
         """Real solves that fell back to fp64 correction cycles."""
         return int(sum(s.fp64_fallback for s in self.solved))
 
+    @property
+    def total_host_syncs(self) -> int:
+        """Blocking device→host fetches across the sequence (lockstep
+        chains share each batch's count, so this over-counts shared syncs
+        by the chain multiplicity — divide by chains-per-batch for the
+        per-dispatch-stream number, or read `mean_host_syncs`)."""
+        return int(sum(s.host_syncs for s in self.solved))
+
+    @property
+    def mean_host_syncs(self) -> float:
+        return self.total_host_syncs / max(1, self.num)
+
+    @property
+    def total_dispatches(self) -> int:
+        return int(sum(s.dispatches for s in self.solved))
+
     def summary(self) -> dict:
         return {
             "num": self.num,
@@ -121,6 +148,9 @@ class SequenceStats:
             "rejected": self.num_rejected,
             "outer_refinements": self.total_outer_refinements,
             "fp64_fallback": self.num_fp64_fallback,
+            "host_syncs": self.total_host_syncs,
+            "mean_host_syncs": self.mean_host_syncs,
+            "dispatches": self.total_dispatches,
         }
 
 

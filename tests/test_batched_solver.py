@@ -99,6 +99,31 @@ def test_batched_k0_equals_vmapped_gmres():
                                    rtol=1e-6, atol=1e-10)
 
 
+def test_batched_fused_kernel_path_matches_default():
+    """use_kernel=True routes the whole inner iteration through the fused
+    arnoldi_step Pallas kernel (interpret mode on CPU); solutions must agree
+    with the composed-jnp default path to the lockstep equivalence budget."""
+    coeffs, b_all, subs = _chains(num=4, chains=2)
+    ref_out = _solve_batched(coeffs, b_all, subs, KC)
+    out = {}
+    solver = BatchedGCRODRSolver(KC, use_kernel=True)
+    for t in range(len(subs[0])):
+        idx = np.array([sub[t] for sub in subs])
+        st5 = Stencil5(coeffs).take(jnp.asarray(idx))
+        pre = make_preconditioner_batched("jacobi", st5)
+        ops = PreconditionedOp(StencilOp(st5.coeffs), pre)
+        xs, stats = solver.solve_batch(ops, jnp.asarray(b_all[idx]))
+        for w, i in enumerate(idx):
+            out[int(i)] = (xs[w], stats[w])
+    for i in ref_out:
+        x_ref, st_ref = ref_out[i]
+        x_ker, st_ker = out[i]
+        assert st_ref.converged and st_ker.converged, (i, st_ref, st_ker)
+        rel = (np.linalg.norm(x_ker - x_ref)
+               / max(np.linalg.norm(x_ref), 1e-300))
+        assert rel <= 1e-8, (i, rel)
+
+
 def test_batched_zero_rhs_is_padding_noop():
     """A zero RHS row (padded chain) converges at 0 iterations with x = 0
     and leaves the chain's recycle carry untouched."""

@@ -122,6 +122,78 @@ def test_fused_orthog_produces_orthogonal_result():
     np.testing.assert_allclose(np.asarray(v @ w2), np.zeros(m), atol=1e-10)
 
 
+# ------------------------------------------------------- arnoldi step
+
+def _arnoldi_inputs(key, nx, ny, m, k, dtype):
+    n = nx * ny
+    coeffs = _rand(key, (5, nx, ny), dtype)
+    inv_diag = 1.0 + 0.1 * _rand(jax.random.fold_in(key, 1), (n,), dtype) ** 2
+    c_rows = _rand(jax.random.fold_in(key, 2), (k, n), dtype)
+    v = _rand(jax.random.fold_in(key, 3), (m + 1, n), dtype)
+    vin = _rand(jax.random.fold_in(key, 4), (n,), dtype)
+    mask = (jnp.arange(m + 1) < m // 2 + 1).astype(dtype)
+    return coeffs, inv_diag, c_rows, v, vin, mask
+
+
+@pytest.mark.parametrize("nx,ny", [(8, 8), (16, 32), (33, 17)])
+@pytest.mark.parametrize("k", [0, 6])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_arnoldi_step_kernel_matches_ref(nx, ny, k, dtype):
+    key = jax.random.PRNGKey(nx * 100 + ny + k)
+    args = _arnoldi_inputs(key, nx, ny, 10, k, dtype)
+    got = ops.arnoldi_step(*args, use_kernel=True, interpret=True)
+    want = ref.arnoldi_step(*args)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    for g, w in zip(got, want):
+        assert g.shape == w.shape and g.dtype == w.dtype
+        if w.size == 0:
+            continue  # bj when k == 0
+        scale = max(float(np.abs(np.asarray(w)).max()), 1.0)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=tol * scale)
+
+
+def test_arnoldi_step_kernel_fp64_accumulation():
+    # fp32 storage + fp64 CGS2 accumulation (KrylovConfig.cgs2_acc)
+    key = jax.random.PRNGKey(11)
+    args = _arnoldi_inputs(key, 16, 16, 12, 4, jnp.float32)
+    got = ops.arnoldi_step(*args, use_kernel=True, interpret=True,
+                           acc_dtype=jnp.float64)
+    want = ref.arnoldi_step(*args, acc_dtype=jnp.float64)
+    for g, w in zip(got, want):
+        assert g.dtype == jnp.float32
+        scale = max(float(np.abs(np.asarray(w)).max()), 1.0)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5 * scale)
+
+
+def test_arnoldi_step_kernel_small_block_rows():
+    # force multiple row tiles so the halo/neighbor-tile path is exercised
+    from repro.kernels.arnoldi_step import arnoldi_step_pallas
+
+    key = jax.random.PRNGKey(3)
+    args = _arnoldi_inputs(key, 24, 8, 9, 3, jnp.float64)
+    got = arnoldi_step_pallas(*args, interpret=True, block_rows=4)
+    want = ref.arnoldi_step(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-10, atol=1e-10)
+
+
+def test_arnoldi_step_kernel_vmaps():
+    # the lockstep engine calls it under jax.vmap — batching rule must hold
+    key = jax.random.PRNGKey(17)
+    batched = [jnp.stack([a, a * 0.5 + 0.1])
+               for a in _arnoldi_inputs(key, 8, 8, 6, 2, jnp.float64)]
+    fn = lambda *a: ops.arnoldi_step(*a, use_kernel=True, interpret=True)
+    got = jax.vmap(fn)(*batched)
+    for i in range(2):
+        want = ref.arnoldi_step(*(a[i] for a in batched))
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g[i]), np.asarray(w),
+                                       rtol=1e-10, atol=1e-10)
+
+
 # ----------------------------------------------------- flash attention
 
 @pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (8, 1)])
