@@ -1,6 +1,8 @@
 """CI perf ratchet for the lockstep engine.
 
-Compares a FRESH quick run of `trajectory_recycle` against the committed
+Compares a FRESH run of `trajectory_recycle` — in the SAME mode
+(quick/full) as the committed baseline, so the ratio comparison is
+apples-to-apples — against the committed
 `results/BENCH_trajectory_recycle.json` artifact (the per-PR perf record):
 the heat-family lockstep-vs-chunked-sequential wall-time ratio must stay
 within REGRESSION_FACTOR of the committed value, and the lockstep engine
@@ -29,23 +31,42 @@ BASELINE = os.path.join(os.path.dirname(os.path.dirname(
 # splitting the cycle back into many dispatches, loose enough for jitter).
 REGRESSION_FACTOR = 0.75
 SYNC_BUDGET = 1.0  # blocking host fetches per lockstep cycle (inside loop)
+# lockstep row utilization (live / total dispatched rows) must stay above
+# this floor — padding creep in the chunk packing silently burns device
+# time on zero-RHS rows. The quick bench's chains divide evenly (no
+# padding → 1.0), so 0.8 has comfortable slack while still catching a
+# packing regression; it is also the ROADMAP's streaming-scheduler target.
+UTILIZATION_FLOOR = 0.8
 
 
 def main() -> int:
     with open(BASELINE) as f:
-        committed = json.load(f)["metrics"]["heat"]["lockstep_speedup"]
+        doc = json.load(f)
+    committed = doc["metrics"]["heat"]["lockstep_speedup"]
+    # match the committed artifact's mode: a quick fresh run measured
+    # against a full-run baseline compares different problem sizes (the
+    # lockstep advantage grows with n), which is not a regression signal
+    quick = bool(doc.get("quick"))
     floor = REGRESSION_FACTOR * committed
 
     from benchmarks import trajectory_recycle
-    summary = trajectory_recycle.run(quick=True)
+    summary = trajectory_recycle.run(quick=quick)
     heat = summary["heat"]
     fresh = heat["lockstep_speedup"]
     syncs = heat["lockstep_syncs_per_cycle"]
+    # optional key: artifacts/summaries written before the telemetry layer
+    # landed don't carry it — treat absence as "not checked", not a failure
+    util = heat.get("lockstep_utilization")
 
-    print(f"[check_regression] heat lockstep_speedup: fresh {fresh:.3f}x "
-          f"vs committed {committed:.3f}x (floor {floor:.3f}x)")
+    mode = "quick" if quick else "full"
+    print(f"[check_regression] heat lockstep_speedup ({mode} mode): "
+          f"fresh {fresh:.3f}x vs committed {committed:.3f}x "
+          f"(floor {floor:.3f}x)")
     print(f"[check_regression] lockstep host syncs/cycle: {syncs:.2f} "
           f"(budget {SYNC_BUDGET:g})")
+    if util is not None:
+        print(f"[check_regression] lockstep row utilization: {util:.2f} "
+              f"(floor {UTILIZATION_FLOOR:g})")
 
     ok = True
     if fresh < floor:
@@ -55,6 +76,11 @@ def main() -> int:
     if syncs > SYNC_BUDGET:
         print("[check_regression] FAIL: lockstep cycle loop exceeds "
               "1 blocking host sync per cycle")
+        ok = False
+    if util is not None and util < UTILIZATION_FLOOR:
+        print("[check_regression] FAIL: lockstep row utilization fell "
+              f"below {UTILIZATION_FLOOR:g} — padding creep in the chunk "
+              "packing")
         ok = False
     if ok:
         print("[check_regression] OK")

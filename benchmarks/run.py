@@ -18,15 +18,26 @@
 
 Each run also writes a machine-readable ``results/BENCH_<name>.json``
 artifact (name, wall time, headline metrics = whatever the bench's ``run``
-returns) so the perf trajectory is tracked across PRs.
+returns, plus a ``provenance`` block — git SHA, timestamp, jax/jaxlib
+versions, device kind/count — so a committed artifact is traceable to the
+box and tree that produced it) so the perf trajectory is tracked across
+PRs.
 
-``python -m benchmarks.run [--quick] [--only NAME]``
+``--telemetry`` runs every bench under the observability layer
+(``repro.obs``): each artifact gains a ``telemetry`` block (lockstep
+utilization, occupancy counters) and the trace exports
+``results/TRACE_<name>.json`` (Chrome/Perfetto — load in
+chrome://tracing) + ``results/TELEMETRY_<name>.jsonl``.
+
+``python -m benchmarks.run [--quick] [--only NAME] [--telemetry]``
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
+import subprocess
 import tempfile
 import time
 
@@ -54,6 +65,36 @@ RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "results")
 
 
+def _provenance() -> dict:
+    """Run provenance stamped into every artifact: enough to trace a
+    committed BENCH_*.json back to the tree and box that produced it.
+    Consumers (trend.py, check_regression.py) treat the block as optional —
+    artifacts written before it existed keep loading."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    out = {"git_sha": sha or "unknown",
+           "timestamp": datetime.datetime.now(
+               datetime.timezone.utc).isoformat(timespec="seconds")}
+    try:
+        import jax
+        import jaxlib
+
+        devs = jax.devices()
+        out.update(jax_version=jax.__version__,
+                   jaxlib_version=jaxlib.__version__,
+                   device_kind=devs[0].device_kind if devs else "none",
+                   device_count=len(devs),
+                   platform=devs[0].platform if devs else "none")
+    except Exception:  # provenance must never take down a bench run
+        pass
+    return out
+
+
 def _jsonable(obj):
     """Best-effort conversion of a bench's return value to JSON types."""
     if obj is None or isinstance(obj, (bool, int, float, str)):
@@ -69,7 +110,8 @@ def _jsonable(obj):
     return str(obj)
 
 
-def _write_artifact(name: str, wall_s: float, quick: bool, metrics):
+def _write_artifact(name: str, wall_s: float, quick: bool, metrics,
+                    provenance=None, telemetry=None):
     """Atomic artifact publish: write to a UNIQUE tmp file in results/ (same
     filesystem), then `os.replace`. A fixed tmp name would let two
     concurrent runs of the same bench interleave writes and publish a
@@ -81,10 +123,14 @@ def _write_artifact(name: str, wall_s: float, quick: bool, metrics):
                                suffix=".tmp")
     try:
         os.fchmod(fd, 0o644)  # mkstemp defaults to 0600; keep artifacts
+        doc = {"name": name, "wall_s": round(wall_s, 3),
+               "quick": quick, "metrics": _jsonable(metrics)}
+        if provenance:
+            doc["provenance"] = _jsonable(provenance)
+        if telemetry:
+            doc["telemetry"] = _jsonable(telemetry)
         with os.fdopen(fd, "w") as f:  # world-readable like plain open()
-            json.dump({"name": name, "wall_s": round(wall_s, 3),
-                       "quick": quick, "metrics": _jsonable(metrics)}, f,
-                      indent=2)
+            json.dump(doc, f, indent=2)
             f.write("\n")
         os.replace(tmp, path)  # atomic publish
     except BaseException:
@@ -104,19 +150,40 @@ def main(argv=None) -> int:
                     choices=[n for n, _ in BENCHES])
     ap.add_argument("--no-artifacts", action="store_true",
                     help="skip writing results/BENCH_<name>.json")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run under repro.obs: telemetry block per "
+                         "artifact + results/TRACE_<name>.json / "
+                         "TELEMETRY_<name>.jsonl exports")
     args = ap.parse_args(argv)
 
+    prov = _provenance()
     failed = []
     for name, fn in BENCHES:
         if args.only and name != args.only:
             continue
+        if args.telemetry:
+            from repro import obs
+            obs.enable()   # fresh buffers per bench
         t0 = time.perf_counter()
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         metrics = fn(quick=args.quick)
         wall = time.perf_counter() - t0
         print(f"[{name}: {wall:.1f}s]")
+        telemetry = None
+        if args.telemetry:
+            from repro import obs
+            telemetry = obs.summary()
+            if not args.no_artifacts:
+                os.makedirs(RESULTS_DIR, exist_ok=True)
+                trace = os.path.join(RESULTS_DIR, f"TRACE_{name}.json")
+                jsonl = os.path.join(RESULTS_DIR, f"TELEMETRY_{name}.jsonl")
+                obs.export_chrome_trace(trace)
+                obs.export_jsonl(jsonl)
+                print(f"[trace: {os.path.relpath(trace)}]")
+            obs.disable()
         if not args.no_artifacts:
-            _write_artifact(name, wall, args.quick, metrics)
+            _write_artifact(name, wall, args.quick, metrics,
+                            provenance=prov, telemetry=telemetry)
         # benches may publish an acceptance verdict under metrics["ok"]
         # (e.g. mixed_precision's speedup/accuracy gate) — propagate it so
         # CI's quick-verify job actually fails on a regression

@@ -122,6 +122,11 @@ def run(quick: bool = False):
             sync_tot += max(s.host_syncs for s in row)
             cyc_tot += max(s.cycles for s in row)
         syncs_per_cycle = (sync_tot - 2 * nsteps) / max(cyc_tot, 1)
+        # lockstep utilization: live fraction of all dispatched rows (the
+        # streaming-scheduler signal; check_regression enforces a floor)
+        rows_live = sum(c.stats.num for c in lock_chunks)
+        rows_all = sum(len(c.stats.per_system) for c in lock_chunks)
+        utilization = rows_live / max(rows_all, 1)
         summary[name] = {
             "cold_iters": it_cold,
             "recycled_iters": it_rec,
@@ -134,6 +139,7 @@ def run(quick: bool = False):
             "lockstep_max_rel_diff": max_rel,
             "lockstep_host_syncs": sync_tot,
             "lockstep_syncs_per_cycle": syncs_per_cycle,
+            "lockstep_utilization": utilization,
             "recycled_beats_cold": bool(it_rec < it_cold),
             "lockstep_matches": bool(max_rel <= 10 * TOL),
             "lockstep_sync_budget_ok": bool(syncs_per_cycle <= 1.0),
@@ -190,7 +196,8 @@ def run(quick: bool = False):
               f"lockstep {s['lockstep_speedup']:.2f}x vs chunked-seq, "
               f"max rel diff {s['lockstep_max_rel_diff']:.1e} [{lflag}], "
               f"{s['lockstep_syncs_per_cycle']:.2f} host syncs/cycle "
-              f"[{'OK' if s['lockstep_sync_budget_ok'] else 'OVER'}]")
+              f"[{'OK' if s['lockstep_sync_budget_ok'] else 'OVER'}], "
+              f"{100 * s['lockstep_utilization']:.0f}% row utilization")
     return summary
 
 

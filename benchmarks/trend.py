@@ -94,6 +94,24 @@ def render(arts: list[dict], skipped: list[tuple[str, str]] = ()) -> str:
     for art in arts:
         lines.append(f"## {art.get('name', '?')}")
         lines.append("")
+        # optional blocks (artifacts written before these existed lack
+        # them — absence is fine)
+        prov = art.get("provenance")
+        if isinstance(prov, dict):
+            bits = [f"`{prov['git_sha'][:12]}`" if prov.get("git_sha")
+                    else None,
+                    prov.get("timestamp"),
+                    (f"jax {prov['jax_version']}"
+                     if prov.get("jax_version") else None),
+                    (f"{prov['device_count']}x {prov['device_kind']}"
+                     if prov.get("device_kind") else None)]
+            lines.append("Provenance: " + " · ".join(b for b in bits if b))
+            lines.append("")
+        tele = art.get("telemetry")
+        if isinstance(tele, dict) and tele.get("utilization") is not None:
+            lines.append(f"Telemetry: lockstep utilization "
+                         f"{100 * tele['utilization']:.1f}%")
+            lines.append("")
         lines.append("```json")
         lines.append(json.dumps(art.get("metrics"), indent=2, sort_keys=True))
         lines.append("```")

@@ -1,0 +1,79 @@
+"""Datagen telemetry report: run a small heat-family trajectory batch under
+the observability layer (`repro.obs`) and print the run report — time per
+pipeline phase, iterations cold vs recycled, host syncs per cycle, lockstep
+row utilization — plus a Chrome/Perfetto trace you can load in
+chrome://tracing (or https://ui.perfetto.dev) to SEE row prefetch
+overlapping the solve dispatches.
+
+    PYTHONPATH=src python examples/datagen_report.py [--trace out.json]
+"""
+import argparse
+
+import jax
+
+from repro import obs
+from repro.core.trajectory import TrajConfig, generate_trajectories_chunked
+from repro.obs.report import render_report
+from repro.pde.registry import get_timedep_family
+from repro.solvers.types import KrylovConfig, SequenceStats
+
+FAMILIES = ("heat", "convdiff-t")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default="datagen_trace.json",
+                    help="Chrome trace output path ('' to skip)")
+    ap.add_argument("--nx", type=int, default=16)
+    ap.add_argument("--num", type=int, default=6, help="trajectories")
+    ap.add_argument("--nt", type=int, default=6, help="steps per trajectory")
+    args = ap.parse_args()
+
+    kc = KrylovConfig(m=30, k=10, tol=1e-8, maxiter=10_000)
+    cfg = TrajConfig(krylov=kc, sort_method="greedy", precond="jacobi")
+
+    obs.enable(delta_qc=True)
+    families = {}
+    for name in FAMILIES:
+        fam = get_timedep_family(name, nx=args.nx, ny=args.nx, nt=args.nt,
+                                 dt=5e-2)
+        print(f"generating {args.num} {name} trajectories "
+              f"({fam.n} unknowns x {args.nt} steps, lockstep engine)…")
+        with obs.span("family", cat="report", family=name):
+            chunks = generate_trajectories_chunked(
+                fam, jax.random.PRNGKey(0), args.num, cfg, workers=2,
+                engine="batched")
+        # fold the per-chunk stats into one sequence view per family
+        seq = SequenceStats()
+        for c in chunks:
+            seq.per_system.extend(c.stats.per_system)
+        families[name] = seq
+
+    print()
+    print(render_report(families, tracer=obs.tracer(),
+                        registry=obs.registry()))
+
+    # per-cycle convergence telemetry rides on each solve's stats — show
+    # one chain's residual history as proof the device rings drained
+    first = next(s for s in families["heat"].solved
+                 if s.telemetry is not None)
+    t = first.telemetry
+    print("\n[heat chain 0 per-cycle residuals (device telemetry)]")
+    print("  " + "  ".join(f"{r:.1e}" for r in t.res_hist))
+    if t.delta_qc is not None:
+        import numpy as np
+        finite = t.delta_qc[np.isfinite(t.delta_qc)]
+        if finite.size:
+            print(f"  recycle-refresh angle δ(Q,C): last {finite[-1]:.3f} "
+                  f"(max {finite.max():.3f})")
+
+    if args.trace:
+        obs.export_chrome_trace(args.trace)
+        print(f"\n[trace: {args.trace} — load in chrome://tracing; the "
+              f"'prefetch' thread track shows prepare_row overlapping "
+              f"execute_row]")
+    obs.disable()
+
+
+if __name__ == "__main__":
+    main()

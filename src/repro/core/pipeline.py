@@ -69,6 +69,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.ckpt import decode_carry, encode_carry
 from repro.core.sorting import chain_length, sort_features
 from repro.solvers.types import SequenceStats
@@ -137,6 +138,11 @@ class PhaseMask:
         """Chain `w` is done with this row (trajectory complete or step
         budget exhausted) — padded from the next dispatch on."""
         self.active[w] = False
+        # occupancy timeline sample: how many chains remain live after
+        # this finish (renders as a counter track in the Chrome trace)
+        obs.counter("phase_active", {"active": int(self.active.sum()),
+                                     "finished": int((~self.active).sum())},
+                    cat="pipeline")
 
 
 def plan_chains(order: np.ndarray, workers: int) -> List[np.ndarray]:
@@ -162,6 +168,15 @@ def _row_index(subs: List[np.ndarray], t: int) -> np.ndarray:
     return np.array([int(s[t]) if t < len(s) else -1 for s in subs])
 
 
+def _prepare_row_traced(work, t, idx):
+    """prepare_row under a span — on the prefetch thread this records with
+    the EXECUTOR's thread id, so the Chrome trace shows host row assembly
+    on its own track, visually overlapped with the main thread's
+    execute_row spans (the claim the trace exists to audit)."""
+    with obs.span("prepare_row", cat="pipeline", row=t):
+        return work.prepare_row(t, idx)
+
+
 def _run_lockstep(work, subs, solver, prefetch: bool = True):
     """Advance all chains through the lockstep rows, overlapping the next
     row's host-side assembly against the current row's device solves."""
@@ -171,18 +186,23 @@ def _run_lockstep(work, subs, solver, prefetch: bool = True):
     if not prefetch:
         for t in range(length):
             idx = _row_index(subs, t)
-            work.execute_row(solver, t, idx, work.prepare_row(t, idx))
+            prepared = _prepare_row_traced(work, t, idx)
+            with obs.span("execute_row", cat="pipeline", row=t):
+                work.execute_row(solver, t, idx, prepared)
         return
-    with ThreadPoolExecutor(max_workers=1) as ex:
+    with ThreadPoolExecutor(max_workers=1,
+                            thread_name_prefix="prefetch") as ex:
         idx = _row_index(subs, 0)
-        fut = ex.submit(work.prepare_row, 0, idx)
+        fut = ex.submit(_prepare_row_traced, work, 0, idx)
         for t in range(length):
-            prepared = fut.result()
+            with obs.span("prefetch_wait", cat="pipeline", row=t):
+                prepared = fut.result()
             cur_idx = idx
             if t + 1 < length:
                 idx = _row_index(subs, t + 1)
-                fut = ex.submit(work.prepare_row, t + 1, idx)
-            work.execute_row(solver, t, cur_idx, prepared)
+                fut = ex.submit(_prepare_row_traced, work, t + 1, idx)
+            with obs.span("execute_row", cat="pipeline", row=t):
+                work.execute_row(solver, t, cur_idx, prepared)
 
 
 def run_chunked(work, key, num: int, workers: int, engine: str,
@@ -191,11 +211,19 @@ def run_chunked(work, key, num: int, workers: int, engine: str,
     chains, dispatch to the chosen engine. Returns one result per chain
     (sharding fill chains are dropped)."""
     engine = resolve_engine(work, engine)
-    feats = work.sample(key, num)
-    order = sort_features(feats, work.cfg.sort_method)
-    subs = plan_chains(order, workers)
+    with obs.span("sample", cat="pipeline", num=num):
+        feats = work.sample(key, num)
+    with obs.span("sort", cat="pipeline", num=num,
+                  method=work.cfg.sort_method):
+        order = sort_features(feats, work.cfg.sort_method)
+    with obs.span("chain_partition", cat="pipeline", workers=workers):
+        subs = plan_chains(order, workers)
     if engine == "sequential" or workers == 1:
-        return [work.solve_chunk_sequential(sub) for sub in subs]
+        out = []
+        for w, sub in enumerate(subs):
+            with obs.span("solve_chunk", cat="pipeline", chunk=w):
+                out.append(work.solve_chunk_sequential(sub))
+        return out
 
     sharding = None
     fill = 0
@@ -211,9 +239,11 @@ def run_chunked(work, key, num: int, workers: int, engine: str,
             subs = subs + [np.zeros(0, dtype=np.int64)] * fill
 
     solver = work.make_lockstep_solver(sharding)
-    work.begin_lockstep(subs)
+    with obs.span("row_buffers", cat="pipeline", chains=len(subs)):
+        work.begin_lockstep(subs)
     _run_lockstep(work, subs, solver, prefetch=prefetch)
-    return [work.chunk_result(w) for w in range(len(subs) - fill)]
+    with obs.span("chunk_finalize", cat="pipeline"):
+        return [work.chunk_result(w) for w in range(len(subs) - fill)]
 
 
 def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
@@ -225,10 +255,12 @@ def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
     fault-injection hook (raises after that many items; a rerun resumes
     warm from the checkpoint, recycle space intact)."""
     cfg = work.cfg
-    feats = work.sample(key, num)
+    with obs.span("sample", cat="pipeline", num=num):
+        feats = work.sample(key, num)
 
     t0 = time.perf_counter()
-    order = sort_features(feats, cfg.sort_method)
+    with obs.span("sort", cat="pipeline", num=num, method=cfg.sort_method):
+        order = sort_features(feats, cfg.sort_method)
     sort_s = time.perf_counter() - t0
     clen = chain_length(feats, order)
 
@@ -239,9 +271,10 @@ def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
     enabled = ckpt is not None and ckpt.ckpt_dir
 
     def _save(pos):
-        ckpt.save(pos=pos, order=order, u_carry=encode_carry(solver),
-                  iters=np.asarray(iters), times=np.asarray(times),
-                  **{work.ckpt_key: work.outputs})
+        with obs.span("checkpoint", cat="pipeline", pos=int(pos)):
+            ckpt.save(pos=pos, order=order, u_carry=encode_carry(solver),
+                      iters=np.asarray(iters), times=np.asarray(times),
+                      **{work.ckpt_key: work.outputs})
 
     state = ckpt.load() if enabled else None
     if state is not None and len(state["order"]) == num:
@@ -259,7 +292,9 @@ def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
             raise RuntimeError(
                 f"injected datagen fault at {work.item_noun} {pos}")
         i = int(order[pos])
-        for st in work.solve_item(i, solver, stats):
+        with obs.span("solve_item", cat="pipeline", pos=pos):
+            sts = list(work.solve_item(i, solver, stats))
+        for st in sts:
             iters.append(st.iterations)
             times.append(st.wall_time_s)
         if ckpt_every and enabled and (pos + 1) % ckpt_every == 0:

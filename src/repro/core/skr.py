@@ -55,6 +55,18 @@ continuation (plus one at entry and one bulk fetch at finalize —
 tests/test_transfer_guard.py). The sequential engine keeps the historical
 host-mediated cleanup (hostlinalg.py) as the bitwise reference.
 
+Observability (repro.obs, opt-in via `obs.enable()`): the pipeline stages
+above are telemetry tap points — `core/pipeline.py` records spans for
+steps c/d (sample, sort, chain_partition, prepare_row on the prefetch
+thread, execute_row, checkpoint), the solvers attach per-cycle
+convergence histories to every `SolveStats` (device-buffered rings in the
+lockstep engine, drained inside its finalize fetch so the sync budget
+above is unchanged — tests/test_transfer_guard.py runs telemetry-on), and
+every `solve_batch` dispatch records live/padded row occupancy
+(lockstep utilization). Export with `obs.export_chrome_trace()` /
+`obs.export_jsonl()`; disabled, all of it compiles out (bitwise-identical
+numerics — tests/test_obs.py). See README "Observability".
+
 Precision policy: set `SKRConfig.krylov.inner_dtype="float32"` to run the
 inner Krylov machinery of ALL engines in fp32 (the solvers wrap it in an
 fp64 iterative-refinement outer loop — see solvers/gcrodr.py). The

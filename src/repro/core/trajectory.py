@@ -74,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import pipeline
 from repro.core.ckpt import NpzCheckpointer
 from repro.core.sorting import chain_length
@@ -374,15 +375,19 @@ class TrajectoryWork(pipeline.WorkAdapter):
             self._trajs[w][j, 0] = u_np[w]
         for step in range(family.nt):
             t_old, t_new = step * family.dt, (step + 1) * family.dt
-            a, b = self._stepB(lat, u, t_old, t_new)
-            rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
-            rhs = jnp.where(live_dev, rhs, 0.0)      # padded chunks, on device
-            st5 = Stencil5(a)                        # (W, 5, nx, ny)
-            pre = make_preconditioner_batched(cfg.precond, st5,
-                                              use_kernel=cfg.use_kernel)
-            ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
-            xs, st_list = solver.solve_batch(ops, rhs.reshape(workers, -1),
-                                             padded_rows=~live)
+            with obs.span("assemble_step", cat="trajectory", step=step):
+                a, b = self._stepB(lat, u, t_old, t_new)
+                rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
+                rhs = jnp.where(live_dev, rhs, 0.0)  # padded chunks, on device
+                st5 = Stencil5(a)                    # (W, 5, nx, ny)
+                pre = make_preconditioner_batched(cfg.precond, st5,
+                                                  use_kernel=cfg.use_kernel)
+                ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel),
+                                       pre)
+            with obs.span("solve_dispatch", cat="trajectory", step=step):
+                xs, st_list = solver.solve_batch(ops,
+                                                 rhs.reshape(workers, -1),
+                                                 padded_rows=~live)
             delta = jnp.asarray(xs.reshape(workers, nx, ny))
             u = u + delta if cfg.rhs_mode == "increment" else delta
             u_np = np.asarray(u)                     # one sync per step
@@ -439,18 +444,22 @@ class TrajectoryWork(pipeline.WorkAdapter):
                 dtpp[w] = pol.dt_pprev
                 boot[w] = pol.boot
                 have2[w] = pol.naccept >= 2
-            a, b = self._buildB(lat, states, jnp.asarray(t),
-                                jnp.asarray(dt_step), jnp.asarray(dtp),
-                                jnp.asarray(boot), bool(boot.any()))
-            rhs = (_inc_rhs(a, b, states.u) if cfg.rhs_mode == "increment"
-                   else b)
-            rhs = jnp.where(jnp.asarray(act)[:, None, None], rhs, 0.0)
-            st5 = Stencil5(a)
-            pre = make_preconditioner_batched(cfg.precond, st5,
-                                              use_kernel=cfg.use_kernel)
-            ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
-            xs, st_list = solver.solve_batch(ops, rhs.reshape(workers, -1),
-                                             padded_rows=mask.padded_rows)
+            with obs.span("assemble_step", cat="trajectory"):
+                a, b = self._buildB(lat, states, jnp.asarray(t),
+                                    jnp.asarray(dt_step), jnp.asarray(dtp),
+                                    jnp.asarray(boot), bool(boot.any()))
+                rhs = (_inc_rhs(a, b, states.u)
+                       if cfg.rhs_mode == "increment" else b)
+                rhs = jnp.where(jnp.asarray(act)[:, None, None], rhs, 0.0)
+                st5 = Stencil5(a)
+                pre = make_preconditioner_batched(cfg.precond, st5,
+                                                  use_kernel=cfg.use_kernel)
+                ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel),
+                                       pre)
+            with obs.span("solve_dispatch", cat="trajectory"):
+                xs, st_list = solver.solve_batch(ops,
+                                                 rhs.reshape(workers, -1),
+                                                 padded_rows=mask.padded_rows)
             delta = jnp.asarray(xs.reshape(workers, nx, ny))
             xf = states.u + delta if cfg.rhs_mode == "increment" else delta
             cand, est = self._evalB(lat, states, xf, jnp.asarray(t),

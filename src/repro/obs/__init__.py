@@ -1,0 +1,159 @@
+"""repro.obs — opt-in observability for the datagen pipeline.
+
+One process-global switch gates three signal families:
+
+* **spans** (`obs.span(...)`) — nested wall-time tracing over pipeline
+  phases, ring-buffered, exportable as JSONL or a Chrome/Perfetto
+  `trace.json` (`obs/trace.py`);
+* **device Krylov telemetry** — per-cycle per-chain convergence rings the
+  lockstep solver accumulates ON DEVICE and drains in its one finalize
+  fetch (`obs/telemetry.py`; threaded through `solvers/batched.py`);
+* **counters/gauges** (`obs.record_dispatch(...)`) — lockstep utilization
+  and iteration-imbalance scalars merged into `SequenceStats.summary()`
+  (`obs/metrics.py`).
+
+Disabled (the default, and the state every import starts in) the
+instrumentation compiles out: `span()` is a `None`-check returning a shared
+no-op, `krylov_capacity()` returns 0 so the jitted cycle programs trace
+WITHOUT telemetry buffers (identical jaxprs → bitwise-identical numerics,
+zero extra dispatches — regression-tested in tests/test_obs.py), and
+`record_dispatch` returns immediately.
+
+Usage:
+
+    from repro import obs
+    obs.enable(delta_qc=True)
+    ... run datagen ...
+    obs.export_chrome_trace("results/TRACE_heat.json")
+    print(obs.summary()["utilization"])
+    obs.disable()
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs.metrics import Registry
+from repro.obs.telemetry import (KrylovTelemetry, TelemetryConfig,
+                                 drain_chain, ring_order)
+from repro.obs.trace import NULL_SPAN, Tracer
+
+__all__ = [
+    "enable", "disable", "enabled", "span", "instant", "counter",
+    "tracer", "registry", "record_dispatch", "krylov_capacity",
+    "delta_enabled", "summary", "export_chrome_trace", "export_jsonl",
+    "KrylovTelemetry", "TelemetryConfig", "drain_chain", "ring_order",
+    "Tracer", "Registry",
+]
+
+_TRACER: Optional[Tracer] = None
+_REGISTRY: Optional[Registry] = None
+_KRYLOV: Optional[TelemetryConfig] = None
+
+
+def enable(trace_capacity: int = 65536, krylov_capacity: int = 128,
+           delta_qc: bool = False):
+    """Turn observability ON (idempotent: re-enabling starts fresh buffers).
+
+    krylov_capacity: device ring slots per chain for per-cycle convergence
+    telemetry; it is a STATIC argument of the lockstep cycle programs, so
+    the first telemetry-on solve per shape pays a retrace. 0 disables the
+    device rings while keeping spans/counters live.
+    delta_qc: also record the per-cycle δ(Q,C) recycle-refresh angle (adds
+    one (k×k) SVD to the fused deflated-cycle program).
+    """
+    global _TRACER, _REGISTRY, _KRYLOV
+    _TRACER = Tracer(capacity=trace_capacity)
+    _REGISTRY = Registry()
+    _KRYLOV = TelemetryConfig(capacity=max(int(krylov_capacity), 1),
+                              delta_qc=bool(delta_qc)) \
+        if krylov_capacity > 0 else None
+
+
+def disable():
+    """Turn observability OFF and drop all buffers."""
+    global _TRACER, _REGISTRY, _KRYLOV
+    _TRACER = None
+    _REGISTRY = None
+    _KRYLOV = None
+
+
+def enabled() -> bool:
+    return _TRACER is not None
+
+
+# ---------------------------------------------------------------- tracing
+def span(name: str, cat: str = "datagen", **args):
+    """Context manager timing one phase; free no-op when disabled."""
+    t = _TRACER
+    if t is None:
+        return NULL_SPAN
+    return t.span(name, cat, **args)
+
+
+def instant(name: str, cat: str = "datagen", **args):
+    t = _TRACER
+    if t is not None:
+        t.instant(name, cat, **args)
+
+
+def counter(name: str, values: dict, cat: str = "datagen"):
+    t = _TRACER
+    if t is not None:
+        t.counter(name, values, cat=cat)
+
+
+def tracer() -> Optional[Tracer]:
+    return _TRACER
+
+
+# --------------------------------------------------------------- registry
+def registry() -> Optional[Registry]:
+    return _REGISTRY
+
+
+def record_dispatch(live: int, total: int, iters=None, cycles: int = 0):
+    """Lockstep occupancy hook (see Registry.record_dispatch); also samples
+    a Chrome counter track so utilization renders on the trace timeline."""
+    r = _REGISTRY
+    if r is None:
+        return
+    r.record_dispatch(live, total, iters=iters, cycles=cycles)
+    t = _TRACER
+    if t is not None:
+        t.counter("lockstep_rows", {"live": live, "padded": total - live})
+
+
+# --------------------------------------------------- device Krylov config
+def krylov_capacity() -> int:
+    """Static ring capacity for the lockstep cycle programs (0 = compiled
+    out: no buffers in the state dict, jaxpr identical to pre-telemetry)."""
+    k = _KRYLOV
+    return k.capacity if k is not None else 0
+
+
+def delta_enabled() -> bool:
+    k = _KRYLOV
+    return k.delta_qc if k is not None else False
+
+
+# ---------------------------------------------------------------- exports
+def summary() -> dict:
+    """Counters/gauges/utilization snapshot ({} when disabled)."""
+    r = _REGISTRY
+    return r.snapshot() if r is not None else {}
+
+
+def export_chrome_trace(path: str) -> bool:
+    t = _TRACER
+    if t is None:
+        return False
+    t.to_chrome_trace(path)
+    return True
+
+
+def export_jsonl(path: str) -> bool:
+    t = _TRACER
+    if t is None:
+        return False
+    t.to_jsonl(path)
+    return True

@@ -1,0 +1,79 @@
+"""Counters/gauges registry + lockstep-utilization accounting.
+
+The registry is the scalar side of the telemetry layer: monotonically
+increasing counters (dispatches, live/padded lockstep rows, Krylov
+iterations) and last-value gauges (per-dispatch iteration imbalance). It is
+what `SequenceStats.summary()` merges in when observability is enabled, and
+what the future streaming scheduler will read live — the ">80% non-padded
+rows" target of the ROADMAP's online-scheduler item is exactly
+`utilization()` here.
+
+Occupancy convention: every lockstep `solve_batch` dispatch records how many
+chain rows were LIVE vs PADDED (zero-RHS fill: shorter chunks, sharding
+fill, phase-masked finished chains). `utilization()` is the live fraction
+over all dispatched rows — device work actually spent on real systems.
+Iteration imbalance is max/mean Krylov iterations across the live chains of
+one dispatch: 1.0 means perfect lockstep, large values mean one chain
+dragged the whole SPMD program.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class Registry:
+    """Thread-safe counters + gauges (plain floats, no label sets — the
+    datagen pipeline is one process; shard axes live in the values)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counters: dict[str, float] = {}
+        self.gauges: dict[str, float] = {}
+
+    def counter_add(self, name: str, value: float = 1.0):
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0.0) + value
+
+    def gauge_set(self, name: str, value: float):
+        with self._lock:
+            self.gauges[name] = float(value)
+
+    # --------------------------------------------- lockstep occupancy
+    def record_dispatch(self, live: int, total: int, iters=None,
+                        cycles: int = 0):
+        """One lockstep solve_batch dispatch: `live` non-padded rows out of
+        `total`; `iters` = per-LIVE-chain iteration counts (imbalance)."""
+        with self._lock:
+            c = self.counters
+            c["lockstep.dispatches"] = c.get("lockstep.dispatches", 0.0) + 1
+            c["lockstep.rows_live"] = c.get("lockstep.rows_live", 0.0) + live
+            c["lockstep.rows_total"] = (c.get("lockstep.rows_total", 0.0)
+                                        + total)
+            c["krylov.cycles"] = c.get("krylov.cycles", 0.0) + cycles
+        if iters is not None and len(iters) > 0:
+            tot = float(sum(iters))
+            mx = float(max(iters))
+            self.counter_add("krylov.iterations", tot)
+            mean = tot / len(iters)
+            self.gauge_set("lockstep.iter_imbalance",
+                           mx / mean if mean > 0 else 1.0)
+
+    def utilization(self) -> float:
+        """Live fraction of all dispatched lockstep rows (1.0 = no padding;
+        the streaming-scheduler target reads >0.8 here)."""
+        with self._lock:
+            total = self.counters.get("lockstep.rows_total", 0.0)
+            live = self.counters.get("lockstep.rows_live", 0.0)
+        return live / total if total > 0 else 1.0
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            out = {"counters": dict(self.counters),
+                   "gauges": dict(self.gauges)}
+        out["utilization"] = self.utilization()
+        return out
+
+    def reset(self):
+        with self._lock:
+            self.counters.clear()
+            self.gauges.clear()

@@ -1,0 +1,107 @@
+"""Device-buffered Krylov convergence telemetry — types + drain helpers.
+
+The lockstep engine (`solvers/batched.py`) runs whole GCRO-DR cycles as
+fused device programs; the only blocking host traffic per cycle is a 4-bool
+flag fetch, and that invariant (host_syncs = 2 + cycles, enforced by
+tests/test_transfer_guard.py) must survive telemetry. So per-cycle signals
+are NOT fetched per cycle: they accumulate in preallocated device ring
+buffers threaded through the jitted cycle programs — per-chain residual
+norm, stall flag, deflation-space dimension, and (behind
+`TelemetryConfig.delta_qc`) the recycle-quality angle — and are drained in
+the ONE finalize fetch the solver already pays.
+
+Ring semantics: a static `capacity` bounds device memory; cycle c writes
+slot c % capacity and a scalar cycle counter keeps the true total, so the
+host can reconstruct chronological order and report exactly how many early
+cycles fell off (`KrylovTelemetry.dropped`). Unwritten slots hold NaN.
+
+δ(Q,C): `core/metrics.delta_subspace` defines the recycle-quality metric
+δ = ‖(I − Π_C) Π_Q‖₂ (paper Eq. 5) between the recycled space C and a
+target space Q. The per-cycle device proxy recorded here is δ between the
+chain's recycle space BEFORE and AFTER the harmonic-Ritz refresh — both
+orthonormal on device, so δ = sin θ_max = sqrt(1 − σ_min(C_oldᵀ C_new)²)
+from one (k × k) SVD per chain per cycle. Small δ ⇒ the refresh barely
+rotates the space ⇒ the chain is in the recycling steady state the sorting
+is supposed to buy; δ jumping toward 1 flags a chain whose operators drift
+too fast for its carry (the chain-assignment quality signal the streaming
+scheduler will consume). It is OFF by default because the extra SVD rides
+in the cycle's fused program. `core/metrics.delta_subspace` is the host
+oracle the device formula is tested against.
+
+The sequential solvers already touch host floats every cycle, so their
+history is recorded host-side at zero extra cost (same dataclass).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Krylov-telemetry knobs (static at trace time — each distinct
+    capacity compiles its own cycle executable, so pick one per run)."""
+
+    capacity: int = 128       # device ring slots per chain (cycles kept)
+    delta_qc: bool = False    # also record the δ(Q,C) refresh angle
+
+    def __post_init__(self):
+        assert self.capacity >= 1
+
+
+@dataclasses.dataclass
+class KrylovTelemetry:
+    """Per-solve convergence history for ONE system/chain (chronological;
+    at most `capacity` most-recent cycles — `dropped` counts older ones)."""
+
+    res_hist: np.ndarray                     # (c,) residual norm per cycle
+    stalled: Optional[np.ndarray] = None     # (c,) bool stall flag
+    defl_dim: Optional[np.ndarray] = None    # (c,) recycle-space dimension
+    delta_qc: Optional[np.ndarray] = None    # (c,) refresh angle (NaN = n/a)
+    dropped: int = 0                         # cycles older than the ring
+    kind: str = "cycle"                      # "cycle" | "outer" (IR passes)
+
+    def to_dict(self) -> dict:
+        """JSON-friendly form (NaN → None) for the telemetry JSONL."""
+        def col(a):
+            if a is None:
+                return None
+            return [None if (isinstance(v, float) and np.isnan(v)) else
+                    (v.item() if hasattr(v, "item") else v)
+                    for v in np.asarray(a).tolist()]
+
+        return {"kind": self.kind, "dropped": self.dropped,
+                "res_hist": col(self.res_hist),
+                "stalled": col(self.stalled),
+                "defl_dim": col(self.defl_dim),
+                "delta_qc": col(self.delta_qc)}
+
+
+def ring_order(count: int, capacity: int) -> tuple[np.ndarray, int]:
+    """Chronological slot order for a ring written `count` times.
+
+    Returns (slot indices oldest→newest, dropped) — the first `dropped`
+    cycles are gone; slot (count-1) % capacity holds the newest entry."""
+    if count <= capacity:
+        return np.arange(count), 0
+    newest = (count - 1) % capacity
+    return (np.arange(newest + 1 - capacity, newest + 1) % capacity,
+            count - capacity)
+
+
+def drain_chain(bufs: dict, chain: int, count: int, capacity: int
+                ) -> KrylovTelemetry:
+    """Build one chain's `KrylovTelemetry` from fetched (B, capacity) ring
+    buffers + the shared cycle count (the finalize-fetch payload)."""
+    order, dropped = ring_order(int(count), capacity)
+    pick = lambda key: (np.asarray(bufs[key])[chain][order]
+                        if key in bufs else None)
+    return KrylovTelemetry(
+        res_hist=pick("tlm_res"),
+        stalled=pick("tlm_stall"),
+        defl_dim=pick("tlm_dim"),
+        delta_qc=pick("tlm_delta"),
+        dropped=dropped,
+    )

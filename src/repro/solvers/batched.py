@@ -79,6 +79,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.obs.telemetry import KrylovTelemetry, drain_chain
 from repro.solvers import devlinalg as dl
 from repro.solvers import gcrodr as _seq
 from repro.solvers.arnoldi import _arnoldi_cycle_impl
@@ -143,7 +145,57 @@ def _mask(mask, new, old):
 # programs: _entry (norms + warm start), _fresh_cycle / _deflated_cycle
 # (one whole GCRO-DR cycle each), and a finalize fetch. Between cycle
 # dispatches the host reads ONLY the 4-flag vector each cycle returns.
+#
+# Telemetry (repro.obs): the programs take two extra STATIC args —
+# `tele_cap` (device ring slots per chain; 0 = off, the default) and
+# `tele_delta` (record the δ(Q,C) refresh angle). With tele_cap = 0 no
+# buffers enter the state dict and the traced jaxpr is IDENTICAL to the
+# pre-telemetry programs — bitwise-identical numerics, zero extra
+# dispatches (tests/test_obs.py). With tele_cap > 0 each cycle writes its
+# per-chain residual norm / stall flag / recycle dimension (and optionally
+# δ) into NaN-initialized (B, tele_cap) rings at slot cycle % tele_cap; the
+# host drains them inside the finalize fetch it already pays, so the
+# host_syncs = 2 + cycles invariant holds with telemetry ON
+# (tests/test_transfer_guard.py runs both ways).
 # ---------------------------------------------------------------------------
+
+
+def _tele_init(s, bsz, dt, *, tele_cap: int, tele_delta: bool):
+    """Preallocate the per-chain telemetry rings (traced inside _entry)."""
+    s["tcnt"] = jnp.zeros((), jnp.int32)
+    s["tlm_res"] = jnp.full((bsz, tele_cap), jnp.nan, dt)
+    s["tlm_stall"] = jnp.zeros((bsz, tele_cap), bool)
+    s["tlm_dim"] = jnp.zeros((bsz, tele_cap), jnp.int32)
+    if tele_delta:
+        s["tlm_delta"] = jnp.full((bsz, tele_cap), jnp.nan, dt)
+
+
+def _tele_record(s, k: int, *, tele_cap: int, tele_delta: bool, delta=None):
+    """Write one cycle's telemetry column (traced inside the cycle
+    programs — rides in the fused dispatch, no extra launch)."""
+    idx = s["tcnt"] % tele_cap
+    s["tlm_res"] = s["tlm_res"].at[:, idx].set(s["rnorm"])
+    s["tlm_stall"] = s["tlm_stall"].at[:, idx].set(s["stalled"])
+    dim = jnp.where(s["est"], k, 0).astype(jnp.int32)
+    s["tlm_dim"] = s["tlm_dim"].at[:, idx].set(dim)
+    if tele_delta:
+        col = (delta if delta is not None
+               else jnp.full(s["rnorm"].shape, jnp.nan,
+                             s["tlm_delta"].dtype))
+        s["tlm_delta"] = s["tlm_delta"].at[:, idx].set(col)
+    s["tcnt"] = s["tcnt"] + 1
+    return s
+
+
+def _delta_qc_b(c_old, c_new, ok):
+    """Per-chain δ(Q,C) between orthonormal recycle bases before/after the
+    harmonic-Ritz refresh: sin θ_max = sqrt(1 − σ_min(C_oldᵀC_new)²) — one
+    stacked (k × k) SVD, NaN where the refresh was rejected (the device
+    twin of core/metrics.delta_subspace, tested against it)."""
+    ov = jnp.einsum("bnk,bnl->bkl", c_old, c_new)
+    sv = jnp.linalg.svd(ov, compute_uv=False)
+    delta = jnp.sqrt(jnp.clip(1.0 - sv[:, -1] ** 2, 0.0, 1.0))
+    return jnp.where(ok, delta, jnp.nan)
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -167,9 +219,11 @@ def _flags(s, aux, active_prev, step, any_grew):
                       any_grew])                    # restart growth (k=0)
 
 
-@partial(jax.jit, static_argnames=("k", "use_carry", "pad_given"))
+@partial(jax.jit, static_argnames=("k", "use_carry", "pad_given",
+                                   "tele_cap", "tele_delta"))
 def _entry(ops, b, z0, c0, u0, uc, cok, pad_in, tol, lim,
-           *, k: int, use_carry: bool, pad_given: bool):
+           *, k: int, use_carry: bool, pad_given: bool,
+           tele_cap: int = 0, tele_delta: bool = False):
     """Norms, padding mask and the warm start (Alg. 2 l.2-7) as one fused
     dispatch. The warm-start rank gate is the batched masked triangular
     inverse (devlinalg.tri_inv_stacked) — no per-chain host loop."""
@@ -201,16 +255,19 @@ def _entry(ops, b, z0, c0, u0, uc, cok, pad_in, tol, lim,
         s["u"] = _mask(ok, u_new, s["u"])
         s["est"] = ok
         s["matvecs"] = jnp.where(want, k, 0).astype(jnp.int32)
+    if tele_cap > 0:
+        _tele_init(s, bsz, dt, tele_cap=tele_cap, tele_delta=tele_delta)
     f = _flags(s, aux, jnp.zeros(bsz, bool), jnp.zeros(bsz, bool),
                jnp.zeros((), bool))
     return s, aux, f
 
 
 @partial(jax.jit, static_argnames=("m", "k", "orthog", "use_kernel",
-                                   "h_acc", "stall_break", "can_grow"))
+                                   "h_acc", "stall_break", "can_grow",
+                                   "tele_cap", "tele_delta"))
 def _fresh_cycle(ops, s, aux, *, m: int, k: int, orthog: str,
                  use_kernel: bool, h_acc: str, stall_break: bool,
-                 can_grow: bool):
+                 can_grow: bool, tele_cap: int = 0, tele_delta: bool = False):
     """One lockstep fresh GMRES(m) cycle (Alg. 2 l.9-18) as ONE device
     program: Arnoldi sweep → stacked Hessenberg LS → solution update →
     (k > 0) harmonic-Ritz space establishment, all under the same jit."""
@@ -258,13 +315,19 @@ def _fresh_cycle(ops, s, aux, *, m: int, k: int, orthog: str,
                                       & (s["rnorm"] > aux["tol_abs"]))
     if stall_break:
         s["stalled"] = s["stalled"] | (s["no_prog"] >= 3)
+    if tele_cap > 0:
+        # a fresh cycle (re)establishes the space: no before/after pair to
+        # compare, so δ is recorded NaN
+        s = _tele_record(s, k, tele_cap=tele_cap, tele_delta=tele_delta)
     return s, _flags(s, aux, active, step, any_grew)
 
 
 @partial(jax.jit, static_argnames=("mi", "k", "orthog", "use_kernel",
-                                   "h_acc", "stall_break"))
+                                   "h_acc", "stall_break",
+                                   "tele_cap", "tele_delta"))
 def _deflated_cycle(ops, s, aux, *, mi: int, k: int, orthog: str,
-                    use_kernel: bool, h_acc: str, stall_break: bool):
+                    use_kernel: bool, h_acc: str, stall_break: bool,
+                    tele_cap: int = 0, tele_delta: bool = False):
     """One lockstep deflated cycle (Alg. 2 l.19-33) as ONE device program:
     deflated Arnoldi sweep → stacked Ĝ least-squares → solution update →
     stacked generalized harmonic-Ritz refresh of (C, U)."""
@@ -306,10 +369,15 @@ def _deflated_cycle(ops, s, aux, *, mi: int, k: int, orthog: str,
     c_new, yk = _next_cu_b(ut, cyc.v, s["c"], p[:, :k], p[:, k:],
                            q[:, :k], q[:, k:])
     u_new = _mat_post_b(yk, inv_rr)
+    c_old = s["c"]
     s["c"] = _mask(ref_ok, c_new, s["c"])
     s["u"] = _mask(ref_ok, u_new, s["u"])
     s["stalled"] = s["stalled"] | (cyc.breakdown & step
                                   & (s["rnorm"] > aux["tol_abs"]))
+    if tele_cap > 0:
+        delta = (_delta_qc_b(c_old, s["c"], ref_ok) if tele_delta else None)
+        s = _tele_record(s, k, tele_cap=tele_cap, tele_delta=tele_delta,
+                         delta=delta)
     return s, _flags(s, aux, active, step, jnp.zeros((), bool))
 
 
@@ -411,13 +479,19 @@ class BatchedGCRODRSolver:
         pad_given = padded_rows is not None
         pad_in = jnp.asarray(np.asarray(padded_rows) if pad_given
                              else np.zeros(bsz, bool))
+        # telemetry config is STATIC: capacity 0 (obs disabled) traces the
+        # exact pre-telemetry programs — bitwise-identical, no extra work
+        tele_cap = obs.krylov_capacity()
+        tele_delta = obs.delta_enabled() and k > 0
         # 0-d numpy scalars: a bare python scalar counts as an IMPLICIT
         # host→device transfer under jax.transfer_guard("disallow")
         s, aux, f = _entry(ops, b, z0, c0, u0, uc, cok, pad_in,
                            jnp.asarray(np.asarray(cfg.tol, dt)),
                            jnp.asarray(np.asarray(cfg.maxiter, np.int32)),
-                           k=k, use_carry=use_carry, pad_given=pad_given)
-        any_active, all_est, _, _ = map(bool, jax.device_get(f))
+                           k=k, use_carry=use_carry, pad_given=pad_given,
+                           tele_cap=tele_cap, tele_delta=tele_delta)
+        with obs.span("host_sync", cat="solver", what="entry_flags"):
+            any_active, all_est, _, _ = map(bool, jax.device_get(f))
         host_syncs, dispatches = 1, 1
 
         m_fresh = cfg.m  # k=0: grows adaptively, mirroring gmres_solve
@@ -430,14 +504,17 @@ class BatchedGCRODRSolver:
                     ops, s, aux, m=m_fresh, k=k, orthog=cfg.orthog,
                     use_kernel=self.use_kernel, h_acc=cfg.cgs2_acc,
                     stall_break=self.stall_break,
-                    can_grow=m_fresh < m_cap)
+                    can_grow=m_fresh < m_cap,
+                    tele_cap=tele_cap, tele_delta=tele_delta)
             else:
                 s, f = _deflated_cycle(
                     ops, s, aux, mi=cfg.m - k, k=k, orthog=cfg.orthog,
                     use_kernel=self.use_kernel, h_acc=cfg.cgs2_acc,
-                    stall_break=self.stall_break)
-            any_active, all_est, any_step, any_grew = map(
-                bool, jax.device_get(f))
+                    stall_break=self.stall_break,
+                    tele_cap=tele_cap, tele_delta=tele_delta)
+            with obs.span("host_sync", cat="solver", what="cycle_flags"):
+                any_active, all_est, any_step, any_grew = map(
+                    bool, jax.device_get(f))
             host_syncs += 1
             dispatches += 1
             if any_grew and m_fresh < m_cap:
@@ -446,12 +523,25 @@ class BatchedGCRODRSolver:
                 break  # every active chain stagnated at 0 steps
 
         # ---- finalize: one dispatch + one bulk fetch ---------------------
+        # the telemetry rings ride IN the same fetch — draining them costs
+        # zero additional syncs, preserving host_syncs = 2 + cycles
         x_dev = _from_z_b(ops, s["z"])
+        fetch = (x_dev, s["rnorm"], s["iters"], s["matvecs"], s["cycles"],
+                 s["stalled"], s["est"], s["u"], aux["bnorm"],
+                 aux["zerob"], aux["pad"])
+        tkeys = ()
+        if tele_cap > 0:
+            tkeys = (("tlm_res", "tlm_stall", "tlm_dim")
+                     + (("tlm_delta",) if tele_delta else ()))
+            fetch = fetch + tuple(s[t] for t in tkeys) + (s["tcnt"],)
+        with obs.span("host_sync", cat="solver", what="finalize"):
+            got = jax.device_get(fetch)
         (x, rnorm, iters, matvecs, cycles, stalled, established, u_np,
-         bnorm, zerob, pad) = jax.device_get(
-            (x_dev, s["rnorm"], s["iters"], s["matvecs"], s["cycles"],
-             s["stalled"], s["est"], s["u"], aux["bnorm"], aux["zerob"],
-             aux["pad"]))
+         bnorm, zerob, pad) = got[:11]
+        tbufs, tcnt = None, 0
+        if tele_cap > 0:
+            tbufs = dict(zip(tkeys, got[11:-1]))
+            tcnt = int(got[-1])
         host_syncs += 1
         dispatches += 1
         wall = time.perf_counter() - t0
@@ -475,7 +565,16 @@ class BatchedGCRODRSolver:
                 # syncs — entry flags, one 4-flag fetch per cycle, finalize
                 host_syncs=0 if pad[i] else host_syncs,
                 dispatches=0 if pad[i] else dispatches,
+                telemetry=(drain_chain(tbufs, i, tcnt, tele_cap)
+                           if tbufs is not None and not pad[i] else None),
             ))
+        # lockstep occupancy: this solve was one dispatch of bsz rows, of
+        # which the non-padded ones did real work
+        if obs.enabled():
+            obs.record_dispatch(int((~pad).sum()), bsz,
+                                iters=[int(iters[i]) for i in range(bsz)
+                                       if not pad[i]],
+                                cycles=host_syncs - 2)
 
         if k > 0:
             # carry Ỹ_k per chain (Alg. 2 line 34); chains that never owned
@@ -530,6 +629,10 @@ class BatchedGCRODRSolver:
         fb64 = np.zeros(bsz, dtype=bool)
         stuck = np.zeros(bsz, dtype=bool)  # no-progress even in fp64
         ops32 = cast_operator(ops, jnp.float32)
+        # outer-loop telemetry is host-side and free: the fp64 residual
+        # norms are already fetched every pass (kind="outer"; the inner
+        # fp32 lockstep solves record their own per-cycle device rings)
+        outer_hist = [] if obs.enabled() else None
 
         if self._inner is None:
             self._inner = BatchedGCRODRSolver(cfg, use_kernel=self.use_kernel,
@@ -604,11 +707,13 @@ class BatchedGCRODRSolver:
             matvecs += need
             rnorm = np.asarray(rn)
             host_syncs += 1
-            bad = need & ~np.isfinite(rnorm)
-            if bad.any():   # fp32 overflow on some chains — roll them back
+            bad = need & (~np.isfinite(rnorm) | (rnorm > rprev))
+            if bad.any():   # overflow OR diverging correction — roll back
                 x = _sel(~bad, x, x_prev)
                 r = _sel(~bad, r, r_prev)
                 rnorm = np.where(bad, rprev, rnorm)
+            if outer_hist is not None:
+                outer_hist.append(rnorm.copy())
             no_prog = need & ~(rnorm <= 0.5 * rprev) & (rnorm > tol_abs)
             if no_prog.any():
                 if fallback:
@@ -641,6 +746,10 @@ class BatchedGCRODRSolver:
                 padded=bool(pad[i]),
                 host_syncs=0 if pad[i] else host_syncs,
                 dispatches=0 if pad[i] else dispatches,
+                telemetry=(KrylovTelemetry(
+                    res_hist=np.array([row[i] for row in outer_hist]),
+                    kind="outer")
+                    if outer_hist is not None and not pad[i] else None),
             ))
         if cfg.k > 0 and inner.u_carry is not None:
             self.u_carry = np.asarray(inner.u_carry, np.float32)

@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.obs.telemetry import KrylovTelemetry
 from repro.solvers.arnoldi import arnoldi_cycle
 from repro.solvers.gmres import (_downcast32, _ir_refine, _residual_norms,
                                  gmres_solve)
@@ -288,6 +290,11 @@ class GCRODRSolver:
         dt = b.dtype        # host factors ship back in the device dtype
         last_cycle = None   # (j, g, ut, cyc, c) of the latest deflated cycle
         no_prog = 0         # consecutive no-progress cycles (stall_break)
+        # per-cycle convergence telemetry is FREE here: the sequential
+        # driver already pulls rnorm to host every cycle (contrast the
+        # lockstep engine's device rings in solvers/batched.py)
+        hist = [] if obs.enabled() else None
+        dims = [] if hist is not None else None
 
         while True:
             if rnorm <= tol_abs:
@@ -337,6 +344,9 @@ class GCRODRSolver:
                                                   jnp.asarray(p_pad),
                                                   jnp.asarray(q_pad))
                             u_dev = yk @ jnp.asarray(np.linalg.inv(rr), dt)
+                if hist is not None:
+                    hist.append(rnorm)
+                    dims.append(k if c_dev is not None else 0)
                 continue
 
             # ---- deflated cycle (Alg. 2 lines 19-33) ----------------------
@@ -388,6 +398,9 @@ class GCRODRSolver:
                 refreshed = self._refresh_space(last_cycle, k, mi, stats)
                 if refreshed is not None:
                     c_dev, u_dev = refreshed
+            if hist is not None:
+                hist.append(rnorm)
+                dims.append(k)
             if bool(cyc.breakdown) and rnorm > tol_abs:
                 break
 
@@ -401,6 +414,10 @@ class GCRODRSolver:
         stats.dispatches += 1
         stats.rel_residual = rnorm / bnorm
         stats.wall_time_s = time.perf_counter() - t0
+        if hist is not None:
+            stats.telemetry = KrylovTelemetry(
+                res_hist=np.asarray(hist),
+                defl_dim=np.asarray(dims, np.int32))
         # carry Ỹ_k = U_k to the next system (Alg. 2 line 34)
         if u_dev is not None:
             self.u_carry = np.asarray(u_dev)

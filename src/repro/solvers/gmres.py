@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.obs.telemetry import KrylovTelemetry
 from repro.solvers.arnoldi import arnoldi_cycle
 from repro.solvers.hostlinalg import hessenberg_lstsq
 from repro.solvers.operator import (PreconditionedOp, apply_op, as_operator,
@@ -92,6 +94,8 @@ def gmres_solve(op: PreconditionedOp, b, cfg: KrylovConfig, x0=None,
     m = cfg.m
     m_cap = min(n, cfg.m_max if cfg.m_max else 8 * cfg.m)
     no_prog = 0
+    # free per-cycle telemetry: rnorm is already a host float every cycle
+    hist = [] if obs.enabled() else None
     while True:
         if rnorm <= tol_abs:
             stats.converged = True
@@ -112,6 +116,8 @@ def gmres_solve(op: PreconditionedOp, b, cfg: KrylovConfig, x0=None,
         rprev = rnorm
         z, r, rn = _fused_update(op, b, z, cyc.v, jnp.asarray(y))
         rnorm = float(rn)
+        if hist is not None:
+            hist.append(rnorm)
         stats.host_syncs += 2      # rn + breakdown flag
         stats.dispatches += 1
         stats.iterations += j
@@ -135,6 +141,8 @@ def gmres_solve(op: PreconditionedOp, b, cfg: KrylovConfig, x0=None,
     stats.dispatches += 1
     stats.rel_residual = rnorm / bnorm
     stats.wall_time_s = time.perf_counter() - t0
+    if hist is not None:
+        stats.telemetry = KrylovTelemetry(res_hist=np.asarray(hist))
     return x, stats
 
 
@@ -175,6 +183,9 @@ def _ir_refine(op: PreconditionedOp, b, cfg: KrylovConfig, solve32, solve64,
                                        wall_time_s=time.perf_counter() - t0)
     tol_abs = cfg.tol * bnorm
     fallback = False
+    # outer-pass telemetry (kind="outer"): the TRUE fp64 residual after
+    # each refinement pass — already host floats, so recording is free
+    hist = [] if obs.enabled() else None
 
     while rnorm > tol_abs and stats.iterations < cfg.maxiter:
         budget = cfg.maxiter - stats.iterations
@@ -195,8 +206,14 @@ def _ir_refine(op: PreconditionedOp, b, cfg: KrylovConfig, solve32, solve64,
         rnorm = float(rn)
         stats.host_syncs += 1      # outer residual norm
         stats.dispatches += 2      # _ir_accum + the d upcast transfer
-        if not np.isfinite(rnorm):       # fp32 overflow — roll the pass back
+        if not np.isfinite(rnorm) or rnorm > rprev:
+            # fp32 overflow OR a diverging correction (finite but worse —
+            # near-singular operators can blow up the inner solve): roll the
+            # pass back so the next pass solves against the clean residual
+            # instead of chasing the corrupted one with a tol scaled by it
             x, r, rnorm = x_prev, r_prev, rprev
+        if hist is not None:
+            hist.append(rnorm)
         if not (rnorm <= 0.5 * rprev):   # pass made no real progress
             if fallback or stats.fp64_fallback:
                 break                    # fp64 cycles are stuck too — stop
@@ -205,6 +222,9 @@ def _ir_refine(op: PreconditionedOp, b, cfg: KrylovConfig, solve32, solve64,
     stats.converged = rnorm <= tol_abs
     stats.rel_residual = rnorm / bnorm
     stats.wall_time_s = time.perf_counter() - t0
+    if hist is not None:
+        stats.telemetry = KrylovTelemetry(res_hist=np.asarray(hist),
+                                          kind="outer")
     return np.asarray(x), stats
 
 

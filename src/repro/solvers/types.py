@@ -40,6 +40,12 @@ class SolveStats:
     # the claim the trajectory_recycle benchmark tracks.
     host_syncs: int = 0
     dispatches: int = 0
+    # convergence telemetry (observability runs only): a
+    # `repro.obs.KrylovTelemetry` with this system's per-cycle residual /
+    # stall / deflation-dimension history. None whenever `repro.obs` is
+    # disabled — typed as object so the stats layer stays import-free of
+    # the obs package.
+    telemetry: Optional[object] = None
 
     def merge_inner(self, other: "SolveStats"):
         """Fold an inner (correction-solve) pass into this outer record."""
@@ -136,8 +142,17 @@ class SequenceStats:
     def total_dispatches(self) -> int:
         return int(sum(s.dispatches for s in self.solved))
 
+    @property
+    def utilization(self) -> float:
+        """Live fraction of all lockstep rows this sequence dispatched
+        (1.0 for engines that never pad). The per-sequence twin of
+        `obs.Registry.utilization()` — derivable from stats alone, so the
+        regression gate can enforce a floor without observability on."""
+        total = len(self.per_system)
+        return self.num / total if total > 0 else 1.0
+
     def summary(self) -> dict:
-        return {
+        out = {
             "num": self.num,
             "mean_iterations": self.mean_iterations,
             "mean_time_s": self.mean_time_s,
@@ -151,7 +166,15 @@ class SequenceStats:
             "host_syncs": self.total_host_syncs,
             "mean_host_syncs": self.mean_host_syncs,
             "dispatches": self.total_dispatches,
+            "utilization": self.utilization,
         }
+        # merge the live telemetry registry (occupancy counters, imbalance
+        # gauges) when observability is on; a late import keeps the stats
+        # layer usable without the obs package on the path
+        from repro import obs
+        if obs.enabled():
+            out["obs"] = obs.summary()
+        return out
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,230 @@
+"""Observability layer (`repro.obs`) contract tests.
+
+The load-bearing guarantees:
+
+* DISABLED (default) the instrumentation compiles out — the lockstep
+  solver's outputs are bitwise-identical and it launches zero extra device
+  programs or blocking syncs;
+* ENABLED, the device telemetry rings ride inside the existing jitted
+  cycle programs and drain through the existing finalize fetch, so the
+  sync/dispatch budget is unchanged (see also test_transfer_guard.py);
+* ring buffers bound memory (trace ring and device Krylov rings both);
+* the Chrome trace export is loadable and shows row prefetch overlapping
+  solve dispatch on distinct thread tracks;
+* the fused device δ(Q,C) proxy agrees with the host oracle
+  `core.metrics.delta_subspace`.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.metrics import delta_subspace
+from repro.obs.telemetry import ring_order
+from repro.obs.trace import Tracer
+from repro.pde.dia import Stencil5
+from repro.pde.registry import get_family
+from repro.solvers.batched import BatchedGCRODRSolver, _delta_qc_b
+from repro.solvers.operator import PreconditionedOp, StencilOp
+from repro.solvers.precond import make_preconditioner_batched
+from repro.solvers.types import KrylovConfig, SequenceStats
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Every test starts AND ends disabled — the module default."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def _batched_ops(nx=10, chains=3, seed=11):
+    fam = get_family("poisson", nx=nx, ny=nx)
+    batch = fam.sample_batch(jax.random.PRNGKey(seed), chains)
+    st5 = Stencil5(jnp.asarray(batch.op.coeffs))
+    pre = make_preconditioner_batched("jacobi", st5)
+    ops = PreconditionedOp(StencilOp(st5.coeffs), pre)
+    b = np.asarray(batch.b).reshape(chains, -1)
+    return ops, b
+
+
+def _solve(k=6, **kw):
+    ops, b = _batched_ops(**kw)
+    cfg = KrylovConfig(m=18, k=k, tol=1e-8, maxiter=2000)
+    x, stats = BatchedGCRODRSolver(cfg).solve_batch(ops, b)
+    return np.asarray(x), stats
+
+
+# ------------------------------------------------------------- off = free
+def test_disabled_is_the_default_and_a_noop():
+    assert not obs.enabled()
+    # the span fast path returns ONE shared null object — no allocation
+    assert obs.span("a") is obs.span("b")
+    assert obs.krylov_capacity() == 0
+    assert not obs.delta_enabled()
+    assert obs.summary() == {}
+    assert obs.tracer() is None and obs.registry() is None
+    assert obs.export_chrome_trace("/dev/null") is False
+    assert obs.export_jsonl("/dev/null") is False
+    obs.record_dispatch(1, 2)  # must not raise with no registry
+
+
+def test_telemetry_off_is_bitwise_identical_and_adds_nothing():
+    """off → on → off: the two disabled runs must agree BITWISE (the
+    tele_cap=0 static default yields the pre-telemetry jaxpr), and the
+    enabled run must match the disabled dispatch/sync budget exactly."""
+    x_off, st_off = _solve()
+    obs.enable(delta_qc=True)
+    x_on, st_on = _solve()
+    obs.disable()
+    x_off2, st_off2 = _solve()
+
+    assert np.array_equal(x_off, x_off2)  # bitwise, not tolerance
+    # telemetry rides the existing programs: same dispatches, same syncs
+    for a, b in zip(st_off, st_on):
+        assert a.dispatches == b.dispatches
+        assert a.host_syncs == b.host_syncs
+        assert a.cycles == b.cycles
+    assert all(s.telemetry is None for s in st_off)
+    assert all(s.telemetry is not None for s in st_on)
+    # enabled output still agrees numerically (different jaxpr, same math)
+    np.testing.assert_allclose(x_on, x_off, rtol=1e-12, atol=1e-12)
+
+
+# --------------------------------------------------------- bounded memory
+def test_ring_order_chronology_and_dropped():
+    order, dropped = ring_order(3, 8)
+    assert dropped == 0 and list(order) == [0, 1, 2]
+    order, dropped = ring_order(6, 4)  # slots wrapped once: oldest at 2
+    assert dropped == 2 and list(order) == [2, 3, 0, 1]
+    order, dropped = ring_order(8, 4)  # exact multiple of capacity
+    assert dropped == 4 and list(order) == [0, 1, 2, 3]
+
+
+def test_device_ring_bounds_memory():
+    """More cycles than ring slots: history keeps the NEWEST `capacity`
+    entries and reports the overflow instead of growing."""
+    obs.enable(krylov_capacity=2)
+    _, stats = _solve(k=0)  # plain GMRES restarts → several cycles
+    s = stats[0]
+    assert s.cycles > 2, "need an overflowing run for this test"
+    t = s.telemetry
+    assert len(t.res_hist) == 2
+    assert t.dropped == s.cycles - 2
+    assert np.isfinite(t.res_hist).all()
+    # newest-last: the final ring entry is the converged residual
+    assert t.res_hist[-1] <= t.res_hist[0]
+
+
+def test_trace_ring_bounds_memory():
+    tr = Tracer(capacity=8)
+    for i in range(20):
+        with tr.span("s", "t", i=i):
+            pass
+    events = tr.snapshot()
+    assert len(events) == 8
+    assert tr.dropped == 12
+    # the survivors are the NEWEST spans
+    assert [e["args"]["i"] for e in events] == list(range(12, 20))
+
+
+# -------------------------------------------------- device δ(Q,C) ~ oracle
+def test_device_delta_qc_matches_host_oracle():
+    """The fused per-chain sin θ_max proxy equals `delta_subspace` for
+    orthonormal same-dimension bases (the only way it is ever called)."""
+    rng = np.random.default_rng(0)
+    n, k, bsz = 40, 6, 3
+    olds, news = [], []
+    for _ in range(bsz):
+        olds.append(np.linalg.qr(rng.standard_normal((n, k)))[0])
+        news.append(np.linalg.qr(rng.standard_normal((n, k)))[0])
+    # include a near-identical pair (δ → 0) to cover the clip edge
+    news[0] = olds[0] @ np.linalg.qr(rng.standard_normal((k, k)))[0]
+    dev = np.asarray(_delta_qc_b(jnp.asarray(np.stack(olds)),
+                                 jnp.asarray(np.stack(news)),
+                                 jnp.ones(bsz, bool)))
+    for i in range(bsz):
+        host = delta_subspace(olds[i], news[i])
+        assert dev[i] == pytest.approx(host, abs=1e-8)
+    # rejected-refresh chains report NaN, not a stale angle
+    masked = np.asarray(_delta_qc_b(jnp.asarray(np.stack(olds)),
+                                    jnp.asarray(np.stack(news)),
+                                    jnp.zeros(bsz, bool)))
+    assert np.isnan(masked).all()
+
+
+# ------------------------------------------------------ registry/summary
+def test_registry_utilization_and_summary_merge():
+    obs.enable()
+    obs.record_dispatch(3, 4, iters=[10, 12, 14], cycles=2)
+    snap = obs.summary()
+    assert snap["utilization"] == pytest.approx(0.75)
+    assert snap["counters"]["lockstep.rows_live"] == 3
+    assert snap["counters"]["lockstep.rows_total"] == 4
+    assert snap["counters"]["krylov.cycles"] == 2
+    # SequenceStats.summary() carries the live registry when enabled
+    seq = SequenceStats()
+    assert "obs" in seq.summary()
+    obs.disable()
+    assert "obs" not in seq.summary()
+
+
+def test_lockstep_solve_populates_registry():
+    obs.enable()
+    _, stats = _solve()
+    snap = obs.summary()
+    assert snap["counters"]["lockstep.dispatches"] == 1
+    assert snap["counters"]["lockstep.rows_total"] == len(stats)
+    assert snap["utilization"] == 1.0  # no padding in this batch
+
+
+# ------------------------------------------- end-to-end heat trace export
+def test_heat_trajectory_trace_and_telemetry(tmp_path):
+    """The ISSUE's acceptance run: heat-family chunked trajectory datagen
+    with tracing on → loadable Chrome trace whose prefetch thread overlaps
+    the solve track, per-cycle residual histories on every non-padded
+    chain, and a utilization summary."""
+    from repro.core.trajectory import (TrajConfig,
+                                       generate_trajectories_chunked)
+    from repro.pde.registry import get_timedep_family
+
+    obs.enable(delta_qc=True)
+    fam = get_timedep_family("heat", nx=12, ny=12, nt=4, dt=5e-2)
+    cfg = TrajConfig(krylov=KrylovConfig(m=24, k=8, tol=1e-8,
+                                         maxiter=2000),
+                     sort_method="greedy", precond="jacobi")
+    chunks = generate_trajectories_chunked(fam, jax.random.PRNGKey(0), 4,
+                                           cfg, workers=2,
+                                           engine="batched")
+
+    # every non-padded chain carries its full per-cycle residual history
+    # (the ring is batch-shared: a chain that converged early keeps
+    # recording its settled residual until the batch finishes, so the
+    # history covers AT LEAST the chain's own cycles)
+    for c in chunks:
+        for s in c.stats.solved:
+            assert s.telemetry is not None
+            assert len(s.telemetry.res_hist) >= s.cycles
+            assert np.isfinite(s.telemetry.res_hist).all()
+        assert c.stats.summary()["obs"]["utilization"] == 1.0
+
+    path = tmp_path / "trace.json"
+    assert obs.export_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    names = {e["tid"]: e["args"]["name"] for e in evs
+             if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    assert any(n.startswith("prefetch") for n in names.values())
+    # prepare_row runs on the prefetch thread, execute_row on the main
+    # thread — distinct Perfetto tracks whose intervals overlap in time
+    prep = [(e["ts"], e["ts"] + e["dur"], e["tid"]) for e in evs
+            if e.get("name") == "prepare_row"]
+    exe = [(e["ts"], e["ts"] + e["dur"], e["tid"]) for e in evs
+           if e.get("name") == "execute_row"]
+    assert prep and exe
+    assert {t for *_, t in prep}.isdisjoint({t for *_, t in exe})
+    assert any(a < e1 and s1 < b for a, b, _ in prep
+               for s1, e1, _ in exe), "prefetch/solve overlap missing"

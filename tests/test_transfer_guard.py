@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.pde.dia import Stencil5
 from repro.pde.registry import get_family
 from repro.solvers.batched import BatchedGCRODRSolver
@@ -32,21 +33,42 @@ def _batched_ops(nx=10, chains=3, seed=11):
     return ops, b
 
 
+@pytest.mark.parametrize("telemetry", [False, True],
+                         ids=["obs_off", "obs_on"])
 @pytest.mark.parametrize("k", [0, 6])
-def test_lockstep_solve_has_no_implicit_transfers(k):
+def test_lockstep_solve_has_no_implicit_transfers(k, telemetry):
+    """Both with observability off (the default) and ON — the device
+    telemetry rings are accumulated inside the jitted cycle programs and
+    drained by the EXISTING finalize fetch, so turning them on must not
+    add a single transfer or blocking sync to the hot loop."""
     ops, b = _batched_ops()
     cfg = KrylovConfig(m=18, k=k, tol=1e-8, maxiter=2000)
     solver = BatchedGCRODRSolver(cfg)
-    with jax.transfer_guard("disallow"):
-        x, stats = solver.solve_batch(ops, b)
-        if k > 0:
-            # the warm-started follow-up exercises the carry upload +
-            # batched re-biorthogonalization path under the guard too
+    if telemetry:
+        obs.enable(delta_qc=True)
+    try:
+        with jax.transfer_guard("disallow"):
             x, stats = solver.solve_batch(ops, b)
+            if k > 0:
+                # the warm-started follow-up exercises the carry upload +
+                # batched re-biorthogonalization path under the guard too
+                x, stats = solver.solve_batch(ops, b)
+    finally:
+        obs.disable()
     assert all(s.converged for s in stats)
-    # the sync budget claim: entry + one per cycle + finalize
+    # the sync budget claim: entry + one per cycle + finalize — exactly
+    # one blocking fetch per cycle, telemetry on or off
     cycles = max(s.cycles for s in stats)
     assert all(s.host_syncs <= 2 + cycles for s in stats if not s.padded)
+    if telemetry:
+        # the rings drained: every chain carries its per-cycle history
+        # (batch-shared ring → at least the chain's own cycle count)
+        for s in stats:
+            assert s.telemetry is not None
+            assert len(s.telemetry.res_hist) >= s.cycles
+            assert np.isfinite(s.telemetry.res_hist).all()
+    else:
+        assert all(s.telemetry is None for s in stats)
 
 
 def test_lockstep_syncs_scale_with_cycles_not_chains():
