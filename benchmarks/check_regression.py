@@ -37,6 +37,54 @@ SYNC_BUDGET = 1.0  # blocking host fetches per lockstep cycle (inside loop)
 # padding → 1.0), so 0.8 has comfortable slack while still catching a
 # packing regression; it is also the ROADMAP's streaming-scheduler target.
 UTILIZATION_FLOOR = 0.8
+# containment is ON by default (TrajConfig.retry = RetryPolicy()): on the
+# healthy path its extra work is an all-False quarantine mask folded into the
+# existing per-cycle flag fetch, so the heat lockstep solve with containment
+# must stay within 5% of the retry=None wall time. The absolute slack keeps
+# the relative gate meaningful on the quick bench's sub-second walls, where
+# 5% of t_off is below CI timer noise.
+CONTAIN_OVERHEAD_FACTOR = 1.05
+CONTAIN_ABS_SLACK_S = 0.10
+
+
+def containment_overhead() -> bool:
+    """Min-of-3 heat lockstep wall with containment ON vs retry=None."""
+    import dataclasses
+    import time
+
+    import jax
+
+    from repro.core.robust import RetryPolicy
+    from repro.core.trajectory import TrajConfig, generate_trajectories_chunked
+    from repro.pde.registry import get_timedep_family
+    from repro.solvers.types import KrylovConfig
+
+    fam = get_timedep_family("heat", nx=14, ny=14, nt=6, dt=5e-2)
+    key = jax.random.PRNGKey(0)
+    kc = KrylovConfig(m=30, k=10, tol=1e-8, maxiter=10_000)
+    base = TrajConfig(krylov=kc, sort_method="greedy", precond="jacobi")
+
+    def wall(cfg):
+        args = (fam, key, 4, cfg)
+        generate_trajectories_chunked(*args, workers=2, engine="batched")
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            generate_trajectories_chunked(*args, workers=2, engine="batched")
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_off = wall(dataclasses.replace(base, retry=None))
+    t_on = wall(dataclasses.replace(base, retry=RetryPolicy()))
+    limit = CONTAIN_OVERHEAD_FACTOR * t_off + CONTAIN_ABS_SLACK_S
+    print(f"[check_regression] heat lockstep containment overhead: "
+          f"{t_on:.3f}s on vs {t_off:.3f}s off (limit {limit:.3f}s)")
+    if t_on > limit:
+        print("[check_regression] FAIL: healthy-path containment overhead "
+              f"exceeds {CONTAIN_OVERHEAD_FACTOR - 1:.0%} of the retry=None "
+              "wall — the quarantine masking leaked work onto the hot path")
+        return False
+    return True
 
 
 def main() -> int:
@@ -81,6 +129,8 @@ def main() -> int:
         print("[check_regression] FAIL: lockstep row utilization fell "
               f"below {UTILIZATION_FLOOR:g} — padding creep in the chunk "
               "packing")
+        ok = False
+    if not containment_overhead():
         ok = False
     if ok:
         print("[check_regression] OK")

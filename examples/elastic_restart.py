@@ -1,6 +1,9 @@
 """Fault-tolerance walkthrough: inject a preemption mid-datagen and
 mid-training, then resume both — demonstrating the atomic-checkpoint /
-warm-recycle-space machinery end to end.
+warm-recycle-space machinery end to end. A second act drills the
+containment layer: a preemption that also corrupts the newest checkpoint
+generation (resume falls back to the previous one), and mid-solve NaN
+poisoning recovered through the retry/escalation ladder.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -11,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.robust import FaultPlan
 from repro.core.skr import SKRConfig, SKRGenerator
 from repro.pde.registry import get_family
 from repro.solvers.types import KrylovConfig
@@ -37,6 +41,36 @@ def main():
         if p in (6, 8) else None)
     print(f"datagen finished after resume: {res.solutions.shape}, "
           f"converged {res.stats.num_converged}/{res.stats.num}")
+
+    # ---- preemption THAT CORRUPTS the newest checkpoint -----------------
+    # the kill lands mid-write: generation 0 is truncated on disk. Resume
+    # must reject it (digest/schema check) and fall back to generation 1,
+    # redoing at most ckpt_every systems instead of the whole run.
+    plan = FaultPlan(preempt_at=5, ckpt_corrupt="truncate")
+    try:
+        SKRGenerator(fam, cfg, ckpt_dir=work + "/datagen2").generate(
+            jax.random.PRNGKey(0), 8, fault=plan)
+    except RuntimeError as e:
+        print("datagen preempted, newest checkpoint corrupted:", e)
+    res2 = SKRGenerator(fam, cfg, ckpt_dir=work + "/datagen2").generate(
+        jax.random.PRNGKey(0), 8)
+    same = np.allclose(res2.solutions, res.solutions, rtol=1e-6, atol=1e-9)
+    print(f"resumed from fallback generation: converged "
+          f"{res2.stats.num_converged}/{res2.stats.num}, "
+          f"matches clean run: {same}")
+
+    # ---- mid-solve NaN poisoning, recovered by the ladder ---------------
+    # transient NaNs land in two RHS vectors and one operator; the health
+    # state machine retries each through drop_carry → fp64_inner → grow_m
+    # and every label still converges to tol (label_ok stays all-True)
+    res3 = SKRGenerator(fam, cfg).generate(
+        jax.random.PRNGKey(0), 8,
+        fault=FaultPlan(nan_rhs=(2, 6), nan_operator=(4,), seed=5))
+    health = res3.stats.summary()["health"]
+    print(f"NaN faults contained: recovered {health['recovered']}, "
+          f"quarantined {health['quarantined']}, "
+          f"escalations {health['escalations']}, "
+          f"labels ok {int(res3.label_ok.sum())}/{res3.label_ok.size}")
 
     # ---- training preemption --------------------------------------------
     w_true = jnp.asarray(np.random.default_rng(0).standard_normal(8))

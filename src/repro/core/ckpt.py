@@ -1,29 +1,63 @@
-"""Shared datagen checkpoint IO: atomic .npz state snapshots.
+"""Shared datagen checkpoint IO: atomic, checksummed, generation-rotated
+.npz state snapshots.
 
 Both resumable generators (`SKRGenerator` over steady systems,
 `TrajectoryGenerator` over time-dependent trajectories) checkpoint the same
 shape of state — progress position, solve order, completed outputs, the
 solver's recycle carry, per-solve counters — differing only in field names
-and output layout. The atomic write protocol and the recycle-carry
-encoding live here so a format fix lands in one place.
+and output layout. The write protocol and the recycle-carry encoding live
+here so a format fix lands in one place.
+
+Integrity (the failure-containment layer, core/robust.py's checkpoint leg):
+
+* **Atomic publish** — the snapshot is written to a `mkstemp` sibling (a
+  UNIQUE name per writer, so two generators sharing a ckpt_dir/filename
+  cannot race on a fixed tmp path) and `os.replace`d into place: a
+  preempted writer never corrupts the last good snapshot.
+* **Sidecar digest** — every published snapshot gets a `<name>.sha256`
+  sidecar; `load()` verifies it before trusting the bytes, catching torn
+  writes and bit rot that an os.replace cannot (the npz itself was intact
+  when staged, but the disk underneath may not stay that way).
+* **Generation rotation** — the previous snapshot survives as
+  `<name>.g1.npz` (keep last-good `generations`, default 2): when the
+  newest file is truncated / corrupt / stale-schema, `load()` falls back
+  to the previous generation with a warning instead of bricking the
+  resume. A zero-byte or unreadable npz likewise degrades to
+  None-with-warning (fresh start) rather than raising.
 """
 from __future__ import annotations
 
+import hashlib
 import os
-from typing import Optional
+import tempfile
+import warnings
+from typing import Optional, Sequence
 
 import numpy as np
 
 
-class NpzCheckpointer:
-    """Atomic numpy checkpoint file: write to a sibling tmp path, then
-    `os.replace` to publish — a preempted writer never corrupts the last
-    good snapshot."""
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
-    def __init__(self, ckpt_dir: Optional[str], filename: str):
+
+class NpzCheckpointer:
+    """Atomic numpy checkpoint file with sidecar digests and generation
+    rotation (module docstring). `generations=1` disables rotation;
+    `integrity=False` skips the digest sidecar (legacy files without one
+    still load — they just cannot be verified)."""
+
+    def __init__(self, ckpt_dir: Optional[str], filename: str,
+                 generations: int = 2, integrity: bool = True):
         assert filename.endswith(".npz")
+        assert generations >= 1
         self.ckpt_dir = ckpt_dir
         self.filename = filename
+        self.generations = generations
+        self.integrity = integrity
         if ckpt_dir:
             os.makedirs(ckpt_dir, exist_ok=True)
 
@@ -31,18 +65,102 @@ class NpzCheckpointer:
     def path(self) -> str:
         return os.path.join(self.ckpt_dir, self.filename)
 
-    def save(self, **arrays):
-        # keep the .npz suffix on the tmp name or np.savez appends another
-        tmp = os.path.join(self.ckpt_dir,
-                           self.filename[:-len(".npz")] + ".tmp.npz")
-        np.savez(tmp, **arrays)
-        os.replace(tmp, self.path)  # atomic publish
+    def gen_path(self, gen: int) -> str:
+        """Generation g's path: g=0 is the live file, g>=1 are rotations."""
+        if gen == 0:
+            return self.path
+        return self.path[:-len(".npz")] + f".g{gen}.npz"
 
-    def load(self):
-        """The np.load handle, or None when disabled / nothing saved yet."""
-        if not self.ckpt_dir or not os.path.exists(self.path):
+    @staticmethod
+    def _digest_path(path: str) -> str:
+        return path + ".sha256"
+
+    def _rotate(self):
+        """Shift existing generations one slot down (oldest drops off),
+        digests moving with their snapshots."""
+        for g in range(self.generations - 1, 0, -1):
+            src, dst = self.gen_path(g - 1), self.gen_path(g)
+            if os.path.exists(src):
+                os.replace(src, dst)
+                dsrc = self._digest_path(src)
+                if os.path.exists(dsrc):
+                    os.replace(dsrc, self._digest_path(dst))
+
+    def save(self, **arrays):
+        # mkstemp: a unique tmp per writer — concurrent generators sharing
+        # a dir/filename each stage privately and the LAST publish wins
+        # atomically (the old fixed ".tmp.npz" name made them race).
+        # np.savez appends ".npz" unless the name already ends with it.
+        fd, tmp = tempfile.mkstemp(dir=self.ckpt_dir,
+                                   prefix=self.filename[:-len(".npz")] + ".",
+                                   suffix=".tmp.npz")
+        os.close(fd)
+        try:
+            np.savez(tmp, **arrays)
+            digest = _sha256(tmp) if self.integrity else None
+            self._rotate()
+            os.replace(tmp, self.path)  # atomic publish
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        if digest is not None:
+            dtmp = tmp + ".sha256"
+            with open(dtmp, "w") as f:
+                f.write(digest + "\n")
+            os.replace(dtmp, self._digest_path(self.path))
+
+    def _load_one(self, path: str, required: Sequence[str]):
+        """One generation, fully validated, or None with a warning."""
+        if os.path.getsize(path) == 0:
+            warnings.warn(f"checkpoint {path} is empty — skipping")
             return None
-        return np.load(self.path)
+        dpath = self._digest_path(path)
+        if self.integrity and os.path.exists(dpath):
+            with open(dpath) as f:
+                expect = f.read().strip()
+            got = _sha256(path)
+            if got != expect:
+                warnings.warn(
+                    f"checkpoint {path} failed digest verification "
+                    f"({got[:12]} != {expect[:12]}) — skipping")
+                return None
+        try:
+            # EAGER load into a plain dict: truncation/corruption surfaces
+            # HERE (where the fallback can catch it), not later at first
+            # field access deep inside the resume path
+            with np.load(path, allow_pickle=False) as z:
+                state = {k: z[k] for k in z.files}
+        except Exception as e:  # zero-byte, truncated, not-a-zip, bad CRC
+            warnings.warn(f"checkpoint {path} is unreadable ({e}) — skipping")
+            return None
+        missing = [k for k in required if k not in state]
+        if missing:
+            warnings.warn(f"checkpoint {path} has a stale schema "
+                          f"(missing {missing}) — skipping")
+            return None
+        return state
+
+    def load(self, required: Sequence[str] = ()):
+        """The newest VALID generation as a dict of arrays, or None.
+
+        Walks generations newest-first; a truncated / corrupt / stale-schema
+        file falls back to the previous generation with a warning. `required`
+        names fields a usable snapshot must carry (schema validation)."""
+        if not self.ckpt_dir:
+            return None
+        for g in range(self.generations):
+            path = self.gen_path(g)
+            if not os.path.exists(path):
+                continue
+            state = self._load_one(path, required)
+            if state is not None:
+                if g > 0:
+                    warnings.warn(
+                        f"resuming from generation {g} checkpoint {path} "
+                        "(newer generations were invalid)")
+                return state
+        return None
 
 
 def encode_carry(solver) -> np.ndarray:

@@ -86,6 +86,10 @@ class WorkAdapter:
 
     item_noun = "item"
     ckpt_key = "outputs"
+    # fault: optional core.robust.FaultPlan — chaos-test injection, set by
+    # the generator frontends; None in production. Work adapters consult it
+    # at every data-assembly point (RHS, operator, carry).
+    fault = None
 
     def batchable(self) -> bool:
         """False routes the lockstep engines to sequential: `ilu_host` is a
@@ -106,7 +110,13 @@ class WorkAdapter:
 
         return BatchedGCRODRSolver(self.cfg.krylov,
                                    use_kernel=self.cfg.use_kernel,
-                                   sharding=sharding)
+                                   sharding=sharding,
+                                   policy=getattr(self.cfg, "retry", None))
+
+    def requeue_quarantined(self):
+        """Containment hook: re-solve items the lockstep engines quarantined
+        mid-dispatch (fresh chain, escalation ladder) before results
+        finalize. Default no-op; workload adapters override."""
 
 
 class PhaseMask:
@@ -242,19 +252,31 @@ def run_chunked(work, key, num: int, workers: int, engine: str,
     with obs.span("row_buffers", cat="pipeline", chains=len(subs)):
         work.begin_lockstep(subs)
     _run_lockstep(work, subs, solver, prefetch=prefetch)
+    # containment: chains the lockstep engine quarantined mid-solve get
+    # their systems re-solved on fresh sequential chains (the escalation
+    # ladder) before results finalize — the requeue leg of core/robust.py
+    with obs.span("requeue_quarantined", cat="pipeline"):
+        work.requeue_quarantined()
     with obs.span("chunk_finalize", cat="pipeline"):
         return [work.chunk_result(w) for w in range(len(subs) - fill)]
 
 
 def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
                   progress_cb: Optional[Callable[[int, int], None]] = None,
-                  fail_at: Optional[int] = None):
+                  fail_at: Optional[int] = None, fault=None):
     """The resumable single-chain pipeline (the plain generators' engine):
     sort, then solve the whole order on ONE recycling chain, snapshotting
-    state atomically every `ckpt_every` items. `fail_at` is the
+    state atomically every `ckpt_every` items. `fail_at` is the simple
     fault-injection hook (raises after that many items; a rerun resumes
-    warm from the checkpoint, recycle space intact)."""
+    warm from the checkpoint, recycle space intact); `fault` is the full
+    seeded `core.robust.FaultPlan` — data poisoning is applied by the work
+    adapter at assembly points, while `preempt_at` simulates a mid-run kill
+    here (after the snapshot, optionally corrupting the just-published
+    checkpoint per `fault.ckpt_corrupt` to exercise generation fallback)."""
     cfg = work.cfg
+    work.fault = fault
+    if fault is not None and fault.preempt_at is not None and fail_at is None:
+        fail_at = int(fault.preempt_at)
     with obs.span("sample", cat="pipeline", num=num):
         feats = work.sample(key, num)
 
@@ -276,7 +298,8 @@ def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
                       iters=np.asarray(iters), times=np.asarray(times),
                       **{work.ckpt_key: work.outputs})
 
-    state = ckpt.load() if enabled else None
+    required = ("pos", "order", "iters", "times", "u_carry", work.ckpt_key)
+    state = ckpt.load(required=required) if enabled else None
     if state is not None and len(state["order"]) == num:
         order = state["order"]
         work.restore_outputs(state[work.ckpt_key])
@@ -289,6 +312,14 @@ def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
         if fail_at is not None and pos >= fail_at:
             if enabled:
                 _save(pos)
+                if fault is not None and fault.ckpt_corrupt is not None:
+                    # the preemption tore the write it raced with: corrupt
+                    # the just-published newest generation so the rerun must
+                    # take the integrity fallback path
+                    from repro.core.robust import corrupt_file
+
+                    corrupt_file(ckpt.gen_path(0), mode=fault.ckpt_corrupt,
+                                 seed=fault.seed)
             raise RuntimeError(
                 f"injected datagen fault at {work.item_noun} {pos}")
         i = int(order[pos])

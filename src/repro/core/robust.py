@@ -1,0 +1,327 @@
+"""Failure containment: per-system health states, retry/escalation ladder,
+and seeded fault injection for the datagen pipeline.
+
+SKR's value proposition is that thousands of systems SHARE state — sorted
+chains, recycle carries, lockstep rows — which means one diverging system
+or one poisoned carry can corrupt many neighbors, and a label that silently
+fails to converge degrades the downstream neural operator. This module is
+the containment layer the streaming-scheduler and multi-host ROADMAP items
+both presuppose:
+
+* **Health states** — every solve lands in one of four states derived from
+  its `SolveStats`:
+
+      healthy      converged, finite residual, no retries
+      retrying     converged only after walking the escalation ladder
+                   (``retries > 0``; the rungs taken are in
+                   ``escalation_path``)
+      quarantined  the ladder was exhausted (or the deadline hit) without a
+                   converged, finite solution — the label is NOT trustworthy
+                   and ``strict_labels`` decides whether it ships flagged or
+                   is excluded
+      failed       quarantined AND the final iterate is non-finite (nothing
+                   usable was produced)
+
+* **Escalation ladder** (`RetryPolicy`) — a bounded, DETERMINISTIC retry
+  sequence applied on non-convergence or a non-finite/diverged residual:
+
+      drop_carry   discard the recycle carry and retry cold (a poisoned or
+                   stale U_k is the most common shared-state failure)
+      fp64_inner   re-run with ``inner_dtype="float64"`` (mixed-precision
+                   configs only — skipped when already fp64)
+      grow_m       double the Krylov cycle length m (and m_max), the
+                   stagnation escape hatch
+
+  The ladder is a config axis exactly like precision was in PR 3: the same
+  `RetryPolicy` drives the sequential engine (`solve_one_guarded` wraps
+  every solve), the lockstep engine (in-dispatch divergence quarantine +
+  pipeline requeue through this module), and the sharded engine — so all
+  three take IDENTICAL escalation paths under the same faults
+  (tests/test_robust.py asserts it).
+
+* **Fault injection** (`FaultPlan`) — the `fail_at` preemption hook grown
+  into a seeded plan: NaN into the RHS / operator / recycle carry of chosen
+  systems (one-shot transients, targeting ORIGINAL sample indices so every
+  engine poisons the same systems), simulated preemption after N items, and
+  byte-level checkpoint corruption (`corrupt_file`). Chaos tests drive the
+  whole pipeline through these plans; see the `chaos` pytest marker.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro import obs
+
+# health states (derived — see health_of)
+HEALTHY = "healthy"
+RETRYING = "retrying"
+QUARANTINED = "quarantined"
+FAILED = "failed"
+
+# the full ladder, in escalation order
+LADDER = ("drop_carry", "fp64_inner", "grow_m")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded deterministic escalation for unhealthy solves.
+
+    max_retries   : total retry attempts across all rungs (the ladder is
+                    walked rung by rung; a rung that does not apply — e.g.
+                    fp64_inner on an fp64 config — is skipped without
+                    consuming an attempt)
+    ladder        : escalation rungs, in order (subset of LADDER)
+    deadline_iters: cap on CUMULATIVE Krylov iterations across the original
+                    attempt + every retry; 0 = no deadline. Hitting it
+                    quarantines immediately (bounded worst-case work per
+                    system — the lockstep row cannot be held hostage)
+    divergence_ratio: a residual norm above ``ratio * ||b||`` counts as
+                    diverged even while finite — the lockstep engine's
+                    in-dispatch quarantine threshold
+    """
+
+    max_retries: int = 3
+    ladder: Tuple[str, ...] = LADDER
+    deadline_iters: int = 0
+    divergence_ratio: float = 1e8
+
+    def __post_init__(self):
+        assert self.max_retries >= 0
+        assert all(r in LADDER for r in self.ladder), self.ladder
+        assert self.deadline_iters >= 0
+        assert self.divergence_ratio > 1.0
+
+
+def health_of(stats) -> str:
+    """Classify one SolveStats into the four-state machine."""
+    if stats.quarantined:
+        return FAILED if not np.isfinite(stats.rel_residual) else QUARANTINED
+    if stats.retries > 0:
+        return RETRYING
+    return HEALTHY
+
+
+def is_healthy(stats) -> bool:
+    """Converged with a finite residual — the label is trustworthy."""
+    return bool(stats.converged) and np.isfinite(stats.rel_residual)
+
+
+def _rung_applies(rung: str, cfg) -> bool:
+    if rung == "fp64_inner":
+        return cfg.inner_dtype == "float32"
+    return True
+
+
+def _rung_cfg(rung: str, cfg):
+    """The KrylovConfig one rung up the ladder from `cfg`."""
+    if rung == "fp64_inner":
+        return dataclasses.replace(cfg, inner_dtype="float64")
+    if rung == "grow_m":
+        m2 = 2 * cfg.m
+        m_max = max(cfg.m_max, m2) if cfg.m_max else 0
+        return dataclasses.replace(cfg, m=m2, m_max=m_max)
+    return cfg  # drop_carry reuses the base config
+
+
+def solve_one_guarded(solver, make_problem, policy: RetryPolicy,
+                      failed_stats=None, label: str = ""):
+    """Retry/escalation driver around one sequential `GCRODRSolver.solve`.
+
+    make_problem: () -> (op, b) — called FRESH per attempt, so a one-shot
+        injected fault (FaultPlan) poisons only the first assembly and
+        retries see clean data, exactly like a transient corruption.
+    failed_stats: a SolveStats of an attempt that already failed elsewhere
+        (the lockstep engine's quarantine requeue hands its in-dispatch
+        attempt here) — counted as the original attempt, so the ladder
+        walk — and hence `escalation_path` — is IDENTICAL across engines.
+
+    Returns (x, stats): stats carries retries / escalation_path /
+    quarantined; prior attempts' work (iterations, matvecs, syncs) is
+    folded in via `SolveStats.merge_inner` so sequence totals stay honest.
+
+    An attempt that RAISES numerically (NaN data can blow up the host-side
+    least-squares as `LinAlgError` before any residual exists) counts as a
+    failed attempt — containment means the ladder keeps walking.
+    """
+    from repro.solvers.types import SolveStats
+
+    def _attempt(op, b):
+        try:
+            return solver.solve(op, b)
+        except (np.linalg.LinAlgError, FloatingPointError,
+                ZeroDivisionError):
+            obs.counter_add("health.solve_exceptions")
+            return None, SolveStats(breakdown=True)   # converged=False, ∞ res
+
+    path = []
+    spent = []  # failed attempts' stats, folded into the final record
+
+    if failed_stats is None:
+        op, b = make_problem()
+        x, stats = _attempt(op, b)
+        if is_healthy(stats):
+            return x, stats
+        spent.append(stats)
+    else:
+        spent.append(failed_stats)
+        x, stats = None, failed_stats
+
+    base_cfg = solver.cfg
+    retries = 0
+    try:
+        for rung in policy.ladder:
+            if retries >= policy.max_retries:
+                break
+            if not _rung_applies(rung, base_cfg):
+                continue
+            if policy.deadline_iters and \
+                    sum(s.iterations for s in spent) >= policy.deadline_iters:
+                break
+            # every rung retries COLD: the recycle carry is the shared
+            # state most likely poisoned, so it is quarantined on the
+            # first rung and stays dropped up the ladder
+            solver.u_carry = None
+            solver.cfg = _rung_cfg(rung, base_cfg)
+            path.append(rung)
+            retries += 1
+            obs.counter_add("health.retries")
+            op, b = make_problem()
+            x, stats = _attempt(op, b)
+            if is_healthy(stats):
+                break
+            spent.append(stats)
+    finally:
+        solver.cfg = base_cfg
+
+    healthy = stats is not None and is_healthy(stats)
+    if not healthy:
+        # ladder exhausted — quarantine; ship the last finite iterate (or
+        # zeros) so downstream shapes hold, flagged untrustworthy
+        stats = spent[-1]
+        stats.quarantined = True
+        solver.u_carry = None   # never let a failed chain's carry escape
+        obs.counter_add("health.quarantined")
+        if x is None or not np.all(np.isfinite(np.asarray(x))):
+            op, b = make_problem()   # faults are one-shot: b is clean here
+            x = np.zeros(np.asarray(b).reshape(-1).shape)
+    for s in spent:
+        if s is not stats:
+            stats.merge_inner(s)
+    stats.retries = retries
+    stats.escalation_path = tuple(path)
+    return np.asarray(x), stats
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Seeded, one-shot fault injection for chaos tests.
+
+    Solve-level faults target ORIGINAL sample indices (the index into the
+    sampled batch, before sorting/chaining) so the sequential, batched and
+    sharded engines poison the SAME systems regardless of how the sorted
+    order was partitioned — that is what makes cross-engine escalation-path
+    equality a testable claim. Each fault fires ONCE: the first time the
+    poisoned quantity is assembled (a transient corruption); retries and
+    requeues see clean data.
+
+    nan_rhs / nan_operator / nan_carry : original system indices to poison
+    step        : for trajectory datagen, the save-step index at which the
+                  solve-level faults fire (steady datagen ignores it)
+    preempt_at  : raise (simulated preemption) after this many completed
+                  items in the resumable pipeline — the old `fail_at` hook
+    ckpt_corrupt: "truncate" | "flip" | "zero" — corrupt the NEWEST
+                  checkpoint generation when the preemption fires,
+                  simulating a kill mid-write
+    seed        : drives the poisoned-entry positions
+    """
+
+    nan_rhs: Tuple[int, ...] = ()
+    nan_operator: Tuple[int, ...] = ()
+    nan_carry: Tuple[int, ...] = ()
+    step: int = 0
+    preempt_at: Optional[int] = None
+    ckpt_corrupt: Optional[str] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self._fired: set = set()
+
+    def _fire(self, kind: str, i: int, step: int) -> bool:
+        key = (kind, int(i), int(step))
+        targets = getattr(self, kind)
+        if int(i) not in targets or step != self.step or key in self._fired:
+            return False
+        self._fired.add(key)
+        obs.counter_add(f"faults.{kind}")
+        return True
+
+    def _pos(self, i: int, size: int) -> int:
+        return int(np.random.default_rng(self.seed ^ (int(i) + 1))
+                   .integers(size))
+
+    def apply_rhs(self, i: int, b: np.ndarray, step: int = 0) -> np.ndarray:
+        """Poison one RHS entry of system `i` (first assembly only)."""
+        if not self._fire("nan_rhs", i, step):
+            return b
+        b = np.array(b, dtype=np.float64, copy=True)
+        b.reshape(-1)[self._pos(i, b.size)] = np.nan
+        return b
+
+    def apply_operator(self, i: int, coeffs: np.ndarray,
+                       step: int = 0) -> np.ndarray:
+        """Poison one stencil coefficient of system `i`."""
+        if not self._fire("nan_operator", i, step):
+            return coeffs
+        coeffs = np.array(coeffs, dtype=np.float64, copy=True)
+        coeffs.reshape(-1)[self._pos(i, coeffs.size)] = np.nan
+        return coeffs
+
+    def apply_carry(self, i: int, solver, chain: Optional[int] = None,
+                    step: int = 0):
+        """Poison the recycle carry about to warm-start system `i` (the
+        whole carried space for a sequential solver; chain `chain`'s rows
+        for a lockstep solver). Both engines' warm-start rank gates drop a
+        non-finite carry and restart cold, so this fault recovers WITHOUT
+        a retry — the regression the gates exist for."""
+        if solver.u_carry is None or not self._fire("nan_carry", i, step):
+            return
+        u = np.array(solver.u_carry, copy=True)
+        if chain is None:
+            u.reshape(-1)[self._pos(i, u.size)] = np.nan
+        else:
+            u[chain].reshape(-1)[self._pos(i, u[chain].size)] = np.nan
+        solver.u_carry = u
+
+
+def corrupt_file(path: str, mode: str = "truncate", seed: int = 0):
+    """Byte-level corruption of an on-disk artifact (chaos tests).
+
+    truncate: cut the file to half its length (a kill mid-write)
+    flip    : XOR 16 random bytes (bit rot / torn write)
+    zero    : truncate to zero bytes (the classic empty-npz brick)
+    """
+    size = os.path.getsize(path)
+    if mode == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+    elif mode == "flip":
+        rng = np.random.default_rng(seed)
+        with open(path, "r+b") as f:
+            data = bytearray(f.read())
+            for p in rng.integers(0, max(len(data), 1), size=16):
+                data[p] ^= 0xFF
+            f.seek(0)
+            f.write(bytes(data))
+    elif mode == "zero":
+        with open(path, "wb"):
+            pass
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")

@@ -83,8 +83,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import pipeline
 from repro.core.ckpt import NpzCheckpointer
+from repro.core.robust import FaultPlan, RetryPolicy, is_healthy
 from repro.core.sorting import chain_length
 from repro.pde.problems import LinearProblem, ProblemFamily
 from repro.solvers.gcrodr import GCRODRSolver
@@ -102,6 +104,16 @@ class SKRConfig:
     use_kernel: bool = False
     ckpt_every: int = 0             # 0 = no datagen checkpoints
     record_recycle: bool = False    # keep per-system U snapshots (Table 2 δ)
+    # failure containment (core/robust.py): the retry/escalation ladder is a
+    # config axis like precision — None disables containment entirely
+    # (pre-containment jaxprs; no retries, no lockstep quarantine).
+    retry: Optional[RetryPolicy] = RetryPolicy()
+    # "flag": ship every label, non-trustworthy ones flagged in
+    # DataGenResult.label_ok; "exclude": drop them from the emitted dataset.
+    strict_labels: str = "flag"
+
+    def __post_init__(self):
+        assert self.strict_labels in ("flag", "exclude"), self.strict_labels
 
 
 @dataclasses.dataclass
@@ -113,6 +125,10 @@ class DataGenResult:
     sort_seconds: float
     chain_len: float
     recycle_snapshots: list   # optional [(sys_idx, U(n,k)), ...]
+    # per-row label trustworthiness (converged at tol, finite, not
+    # quarantined) — aligned with `solutions`' first axis; all-True after
+    # strict_labels="exclude" filtering. None only from legacy callers.
+    label_ok: Optional[np.ndarray] = None
 
 
 def _index_problem(batch: LinearProblem, i: int) -> LinearProblem:
@@ -152,37 +168,75 @@ class SteadyWork(pipeline.WorkAdapter):
     # ------------------------------------- sequential (single-chain)
     def alloc_full(self, num: int):
         self.outputs = np.zeros((num, self.family.nx, self.family.ny))
+        self.label_ok = np.ones(num, dtype=bool)
 
     def restore_outputs(self, arr: np.ndarray):
+        # caveat: label_ok is not checkpointed — items completed BEFORE a
+        # resume default to trustworthy (pre-containment checkpoints never
+        # shipped unconverged labels, so the default is honest)
         self.outputs = arr
 
-    def _solve_one(self, i: int, solver: GCRODRSolver):
+    def _assemble(self, i: int):
+        """(op, b) for system `i`, applying any pending one-shot faults.
+        Called FRESH per retry attempt (solve_one_guarded's make_problem
+        contract) so an injected transient poisons only one assembly."""
         cfg = self.cfg
         prob_op = _problem_op_of(self.batch, i)
         b = np.asarray(self.batch.b[i]).reshape(-1)
+        if self.fault is not None:
+            b = self.fault.apply_rhs(i, b)
+            coeffs = np.asarray(prob_op.coeffs)
+            poisoned = self.fault.apply_operator(i, coeffs)
+            if poisoned is not coeffs:
+                from repro.pde.dia import Stencil5
+
+                prob_op = Stencil5(jnp.asarray(poisoned))
         precond = make_preconditioner(cfg.precond, prob_op,
                                       use_kernel=cfg.use_kernel)
         op = PreconditionedOp(as_operator(prob_op, cfg.use_kernel), precond)
-        return solver.solve(op, b)
+        return op, b
+
+    def _solve_one(self, i: int, solver: GCRODRSolver):
+        if self.fault is not None:
+            self.fault.apply_carry(i, solver)
+        policy = getattr(self.cfg, "retry", None)
+        if policy is None:
+            return solver.solve(*self._assemble(i))
+        from repro.core.robust import solve_one_guarded
+
+        return solve_one_guarded(solver, lambda: self._assemble(i), policy,
+                                 label=f"{self.item_noun} {i}")
 
     def solve_item(self, i: int, solver: GCRODRSolver,
                    stats: SequenceStats) -> list:
         x, st = self._solve_one(i, solver)
         self.outputs[i] = x.reshape(self.family.nx, self.family.ny)
+        self.label_ok[i] = is_healthy(st)
         stats.append(st)
         if self.cfg.record_recycle and solver.u_carry is not None:
             self.snapshots.append((i, solver.u_carry.copy()))
         return [st]
 
     def full_result(self, order, stats, sort_s, clen) -> DataGenResult:
+        order = np.asarray(order)
+        inputs = np.asarray(self.batch.no_input)
+        sols, label_ok = self.outputs, self.label_ok
+        if getattr(self.cfg, "strict_labels", "flag") == "exclude" \
+                and not label_ok.all():
+            # arrays are in ORIGINAL sample order here: filter them by the
+            # mask; `order` keeps the surviving solves' original indices
+            order = order[label_ok[order]]
+            inputs, sols = inputs[label_ok], sols[label_ok]
+            label_ok = np.ones(len(sols), dtype=bool)
         return DataGenResult(
-            inputs=np.asarray(self.batch.no_input),
-            solutions=self.outputs,
-            order=np.asarray(order),
+            inputs=inputs,
+            solutions=sols,
+            order=order,
             stats=stats,
             sort_seconds=sort_s,
             chain_len=clen,
             recycle_snapshots=self.snapshots,
+            label_ok=label_ok,
         )
 
     # ---------------------------------------------- chunked engines
@@ -209,6 +263,7 @@ class SteadyWork(pipeline.WorkAdapter):
         self._stats = [SequenceStats() for _ in subs]
         self._all_st5 = Stencil5(jnp.asarray(self.batch.op.coeffs))
         self._b_all = np.asarray(self.batch.b).reshape(num, -1)
+        self._requeue = []   # (chain, row, original index) to re-solve
 
     def prepare_row(self, t: int, idx: np.ndarray):
         """HOST-side row assembly (runs on the prefetch thread): gather the
@@ -216,22 +271,74 @@ class SteadyWork(pipeline.WorkAdapter):
         cfg = self.cfg
         clamped = np.where(idx >= 0, idx, 0)
         st5 = self._all_st5.take(jnp.asarray(clamped))   # (W, 5, nx, ny)
+        if self.fault is not None and self.fault.nan_operator:
+            from repro.pde.dia import Stencil5
+
+            coeffs, dirty = np.array(st5.coeffs, copy=True), False
+            for w, i in enumerate(idx):
+                if i < 0:
+                    continue
+                poisoned = self.fault.apply_operator(int(i), coeffs[w])
+                if poisoned is not coeffs[w]:
+                    coeffs[w], dirty = poisoned, True
+            if dirty:   # the preconditioner factors the poisoned operator
+                st5 = Stencil5(jnp.asarray(coeffs))
         precond = make_preconditioner_batched(cfg.precond, st5,
                                               use_kernel=cfg.use_kernel)
         ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), precond)
         bvec = self._b_all[clamped].copy()
         bvec[idx < 0] = 0.0                              # padded slots
+        if self.fault is not None:
+            for w, i in enumerate(idx):
+                if i >= 0:
+                    bvec[w] = self.fault.apply_rhs(int(i), bvec[w])
         return ops, jnp.asarray(bvec)
 
     def execute_row(self, solver, t: int, idx: np.ndarray, prepared):
         ops, bvec = prepared
         nx, ny = self.family.nx, self.family.ny
+        if self.fault is not None:
+            for w, i in enumerate(idx):
+                if i >= 0:
+                    self.fault.apply_carry(int(i), solver, chain=w)
         xs, st_list = solver.solve_batch(ops, bvec, padded_rows=idx < 0)
         for w, i in enumerate(idx):
             if i < 0:
                 continue                                 # padding row
             self._sols[w][t] = xs[w].reshape(nx, ny)
             self._stats[w].append(st_list[w])
+            # any unhealthy solve (quarantined OR plain non-convergence)
+            # goes to the requeue — the sequential engine would have walked
+            # the ladder for it, so the lockstep engine must too
+            if getattr(self.cfg, "retry", None) is not None \
+                    and not is_healthy(st_list[w]):
+                self._requeue.append((w, t, int(i)))
+
+    def requeue_quarantined(self):
+        """Containment requeue: systems the lockstep engine quarantined
+        mid-dispatch are re-solved on a FRESH sequential chain through the
+        escalation ladder, the in-dispatch attempt counting as attempt 0 —
+        so the ladder walk (and `escalation_path`) matches what the
+        sequential engine would have taken under the same fault."""
+        if not self._requeue:
+            return
+        from repro.core.robust import solve_one_guarded
+
+        policy = getattr(self.cfg, "retry", None) or RetryPolicy()
+        nx, ny = self.family.nx, self.family.ny
+        solver = self.make_solver()
+        for w, t, i in self._requeue:
+            solver.u_carry = None    # cold per system: no cross-requeue state
+            # chain w's stats hold exactly one (non-padded) record per row,
+            # so per_system[t] IS row t's in-dispatch attempt
+            x, st = solve_one_guarded(
+                solver, lambda i=i: self._assemble(i), policy,
+                failed_stats=self._stats[w].per_system[t],
+                label=f"{self.item_noun} {i}")
+            self._sols[w][t] = np.asarray(x).reshape(nx, ny)
+            self._stats[w].per_system[t] = st
+        obs.counter_add("health.requeued", len(self._requeue))
+        self._requeue = []
 
     def chunk_result(self, w: int) -> DataGenResult:
         return self._chunk_result(self._subs[w], self._sols[w],
@@ -239,6 +346,13 @@ class SteadyWork(pipeline.WorkAdapter):
 
     def _chunk_result(self, sub, sols, stats) -> DataGenResult:
         sub = np.asarray(sub, dtype=np.int64)
+        label_ok = np.array([is_healthy(s) for s in stats.solved],
+                            dtype=bool) if len(stats.solved) == len(sub) \
+            else np.ones(len(sub), dtype=bool)
+        if getattr(self.cfg, "strict_labels", "flag") == "exclude" \
+                and not label_ok.all():
+            sub, sols = sub[label_ok], sols[label_ok]
+            label_ok = np.ones(len(sub), dtype=bool)
         return DataGenResult(
             inputs=np.asarray(self.batch.no_input)[sub],
             solutions=sols,
@@ -247,6 +361,7 @@ class SteadyWork(pipeline.WorkAdapter):
             sort_seconds=0.0,
             chain_len=chain_length(self.feats, sub),
             recycle_snapshots=[],
+            label_ok=label_ok,
         )
 
 
@@ -263,18 +378,22 @@ class SKRGenerator:
 
     def generate(self, key: jax.Array, num: int,
                  progress_cb: Optional[Callable[[int, int], None]] = None,
-                 fail_at: Optional[int] = None) -> DataGenResult:
+                 fail_at: Optional[int] = None,
+                 fault: Optional[FaultPlan] = None) -> DataGenResult:
         """Generate `num` (input, solution) pairs.
 
         fail_at: injection hook for the fault-tolerance tests — raises after
         that many systems (simulating preemption); a rerun resumes from the
         checkpoint, recycle space intact.
+        fault: full seeded `FaultPlan` (chaos tests) — NaN poisoning of
+        chosen systems' RHS/operator/carry, preemption with optional
+        checkpoint corruption; see core/robust.py.
         """
         work = SteadyWork(self.family, self.cfg)
         return pipeline.run_resumable(work, key, num, ckpt=self._ckpt,
                                       ckpt_every=self.cfg.ckpt_every,
                                       progress_cb=progress_cb,
-                                      fail_at=fail_at)
+                                      fail_at=fail_at, fault=fault)
 
 
 def generate_dataset(family: ProblemFamily, key: jax.Array, num: int,
@@ -296,7 +415,9 @@ def generate_dataset_baseline(family: ProblemFamily, key: jax.Array, num: int,
 
 def generate_dataset_chunked(family: ProblemFamily, key: jax.Array, num: int,
                              cfg: SKRConfig, workers: int = 8,
-                             engine: str = "batched") -> list[DataGenResult]:
+                             engine: str = "batched",
+                             fault: Optional[FaultPlan] = None,
+                             ) -> list[DataGenResult]:
     """App. E.2.2 task decomposition: sort once, split the sorted order into
     `workers` contiguous chunks, each chunk gets its OWN recycle carry.
 
@@ -310,4 +431,5 @@ def generate_dataset_chunked(family: ProblemFamily, key: jax.Array, num: int,
     the sequential path.
     """
     work = SteadyWork(family, cfg)
+    work.fault = fault
     return pipeline.run_chunked(work, key, num, workers, engine)

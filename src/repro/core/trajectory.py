@@ -77,6 +77,7 @@ import numpy as np
 from repro import obs
 from repro.core import pipeline
 from repro.core.ckpt import NpzCheckpointer
+from repro.core.robust import FaultPlan, RetryPolicy, is_healthy
 from repro.core.sorting import chain_length
 from repro.pde.dia import Stencil5, stencil5_matvec
 from repro.pde.timedep import (PIStepController, TimeDepFamily,
@@ -96,9 +97,16 @@ class TrajConfig:
     use_kernel: bool = False
     ckpt_every: int = 0           # 0 = no checkpoints; unit = trajectories
     rhs_mode: str = "full"        # full | increment (module docstring)
+    # failure containment (core/robust.py) — same axes as SKRConfig: the
+    # escalation ladder guards every implicit-step solve (None disables),
+    # strict_labels decides whether untrustworthy trajectories ship flagged
+    # ("flag", in TrajResult.label_ok) or are dropped ("exclude")
+    retry: Optional[RetryPolicy] = RetryPolicy()
+    strict_labels: str = "flag"
 
     def __post_init__(self):
         assert self.rhs_mode in ("full", "increment")
+        assert self.strict_labels in ("flag", "exclude"), self.strict_labels
 
 
 @dataclasses.dataclass
@@ -109,6 +117,10 @@ class TrajResult:
     stats: SequenceStats       # one SolveStats per implicit step solved
     sort_seconds: float
     chain_len: float
+    # per-TRAJECTORY trustworthiness: every accepted step converged at tol
+    # with a finite residual, none quarantined. All-True after
+    # strict_labels="exclude" filtering; None only from legacy callers.
+    label_ok: Optional[np.ndarray] = None
 
 
 _inc_rhs = jax.jit(lambda a, b, u: b - stencil5_matvec(a, u))
@@ -125,12 +137,35 @@ def _spec_at(specs: TrajectorySpec, i) -> TrajectorySpec:
 
 
 def _solve_stencil(a, rhs, cfg: TrajConfig, solver: GCRODRSolver,
-                   nx: int, ny: int):
-    """One implicit-step Stencil5 system through the sequential solver."""
-    st5 = Stencil5(a)
-    pre = make_preconditioner(cfg.precond, st5, use_kernel=cfg.use_kernel)
-    op = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
-    x, st = solver.solve(op, np.asarray(rhs).reshape(-1))
+                   nx: int, ny: int, fault: Optional[FaultPlan] = None,
+                   tidx: int = 0, step: int = 0):
+    """One implicit-step Stencil5 system through the sequential solver,
+    guarded by the retry/escalation ladder when `cfg.retry` is set. `fault`
+    poisons trajectory `tidx`'s assembly at save-step `step` (one-shot, so
+    the first ladder rung already sees clean data)."""
+    def make_problem():
+        a2, r2 = a, np.asarray(rhs).reshape(-1)
+        if fault is not None:
+            r2 = fault.apply_rhs(tidx, r2, step=step)
+            a_np = np.asarray(a2)
+            poisoned = fault.apply_operator(tidx, a_np, step=step)
+            if poisoned is not a_np:
+                a2 = jnp.asarray(poisoned)
+        st5 = Stencil5(a2)
+        pre = make_preconditioner(cfg.precond, st5, use_kernel=cfg.use_kernel)
+        op = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
+        return op, r2
+
+    if fault is not None:
+        fault.apply_carry(tidx, solver, step=step)
+    policy = getattr(cfg, "retry", None)
+    if policy is None:
+        x, st = solver.solve(*make_problem())
+    else:
+        from repro.core.robust import solve_one_guarded
+
+        x, st = solve_one_guarded(solver, make_problem, policy,
+                                  label=f"trajectory {tidx} step {step}")
     return jnp.asarray(np.asarray(x).reshape(nx, ny)), st
 
 
@@ -175,7 +210,8 @@ def _make_policy(family: TimeDepFamily):
 
 
 def _march_one(family: TimeDepFamily, spec: TrajectorySpec, cfg: TrajConfig,
-               solver: GCRODRSolver, stats: Optional[SequenceStats] = None
+               solver: GCRODRSolver, stats: Optional[SequenceStats] = None,
+               fault: Optional[FaultPlan] = None, tidx: int = 0
                ) -> np.ndarray:
     """March ONE trajectory with the (stateful) solver; returns the
     (nt+1, nx, ny) field sequence at the uniform save grid. The carry in
@@ -185,7 +221,8 @@ def _march_one(family: TimeDepFamily, spec: TrajectorySpec, cfg: TrajConfig,
     below, bitwise-unchanged; BDF2 / mass-matrix / adaptive families route
     through `_march_one_stepped`."""
     if not family.classic:
-        return _march_one_stepped(family, spec, cfg, solver, stats)
+        return _march_one_stepped(family, spec, cfg, solver, stats,
+                                  fault=fault, tidx=tidx)
     nx, ny = family.nx, family.ny
     step1 = family.step_fn()
     out = np.zeros((family.nt + 1, nx, ny))
@@ -195,7 +232,8 @@ def _march_one(family: TimeDepFamily, spec: TrajectorySpec, cfg: TrajConfig,
         t_old, t_new = step * family.dt, (step + 1) * family.dt
         a, b = step1(spec.latent, u, t_old, t_new)
         rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
-        x, st = _solve_stencil(a, rhs, cfg, solver, nx, ny)
+        x, st = _solve_stencil(a, rhs, cfg, solver, nx, ny,
+                               fault=fault, tidx=tidx, step=step)
         u = u + x if cfg.rhs_mode == "increment" else x
         out[step + 1] = np.asarray(u)
         if stats is not None:
@@ -205,7 +243,9 @@ def _march_one(family: TimeDepFamily, spec: TrajectorySpec, cfg: TrajConfig,
 
 def _march_one_stepped(family: TimeDepFamily, spec: TrajectorySpec,
                        cfg: TrajConfig, solver: GCRODRSolver,
-                       stats: Optional[SequenceStats] = None) -> np.ndarray:
+                       stats: Optional[SequenceStats] = None,
+                       fault: Optional[FaultPlan] = None,
+                       tidx: int = 0) -> np.ndarray:
     """Generalized sequential march (BDF2 / mass matrices / adaptive Δt).
 
     Internal steps follow the step policy (PI controller or fixed); labels
@@ -235,7 +275,10 @@ def _march_one_stepped(family: TimeDepFamily, spec: TrajectorySpec,
         a, b = build1(spec.latent, state, t, dt_step, pol.dt_prev, boot,
                       boot)
         rhs = _inc_rhs(a, b, state.u) if cfg.rhs_mode == "increment" else b
-        x, st = _solve_stencil(a, rhs, cfg, solver, nx, ny)
+        # fault step index = the save interval being marched toward (the
+        # classic loop's `step`), so both stacks poison the same solve
+        x, st = _solve_stencil(a, rhs, cfg, solver, nx, ny,
+                               fault=fault, tidx=tidx, step=save_i - 1)
         xf = state.u + x if cfg.rhs_mode == "increment" else x
         cand, est = eval1(spec.latent, state, xf, t, dt_step, pol.dt_prev,
                           pol.dt_pprev, boot, pol.naccept >= 2)
@@ -289,25 +332,46 @@ class TrajectoryWork(pipeline.WorkAdapter):
     def alloc_full(self, num: int):
         self.outputs = np.zeros((num, self.family.nt + 1,
                                  self.family.nx, self.family.ny))
+        self.label_ok = np.ones(num, dtype=bool)
 
     def restore_outputs(self, arr: np.ndarray):
+        # caveat (as in SteadyWork): label_ok is not checkpointed, so
+        # trajectories completed before a resume default to trustworthy
         self.outputs = arr
+
+    @staticmethod
+    def _steps_ok(steps) -> bool:
+        """A trajectory's label is trustworthy iff every ACCEPTED step is
+        healthy (rejected steps never produced a label)."""
+        return all(is_healthy(s) for s in steps if not s.rejected)
 
     def solve_item(self, i: int, solver: GCRODRSolver,
                    stats: SequenceStats) -> list:
         before = len(stats.per_system)
         self.outputs[i] = _march_one(self.family, _spec_at(self.specs, i),
-                                     self.cfg, solver, stats)
-        return stats.per_system[before:]
+                                     self.cfg, solver, stats,
+                                     fault=self.fault, tidx=i)
+        steps = stats.per_system[before:]
+        self.label_ok[i] = self._steps_ok(steps)
+        return steps
 
     def full_result(self, order, stats, sort_s, clen) -> TrajResult:
+        order = np.asarray(order)
+        no_input = np.asarray(self.specs.no_input)
+        trajs, label_ok = self.outputs, self.label_ok
+        if getattr(self.cfg, "strict_labels", "flag") == "exclude" \
+                and not label_ok.all():
+            order = order[label_ok[order]]
+            no_input, trajs = no_input[label_ok], trajs[label_ok]
+            label_ok = np.ones(len(trajs), dtype=bool)
         return TrajResult(
-            trajectories=self.outputs,
-            no_input=np.asarray(self.specs.no_input),
-            order=np.asarray(order),
+            trajectories=trajs,
+            no_input=no_input,
+            order=order,
             stats=stats,
             sort_seconds=sort_s,
             chain_len=clen,
+            label_ok=label_ok,
         )
 
     # ---------------------------------------------- chunked engines
@@ -320,10 +384,14 @@ class TrajectoryWork(pipeline.WorkAdapter):
         stats = SequenceStats()
         trajs = np.zeros((len(sub), self.family.nt + 1,
                           self.family.nx, self.family.ny))
+        label_ok = np.ones(len(sub), dtype=bool)
         for pos, i in enumerate(sub):
+            before = len(stats.per_system)
             trajs[pos] = _march_one(self.family, _spec_at(self.specs, int(i)),
-                                    self.cfg, solver, stats)
-        return self._chunk_result(sub, trajs, stats)
+                                    self.cfg, solver, stats,
+                                    fault=self.fault, tidx=int(i))
+            label_ok[pos] = self._steps_ok(stats.per_system[before:])
+        return self._chunk_result(sub, trajs, stats, label_ok)
 
     def begin_lockstep(self, subs):
         self._subs = subs
@@ -331,6 +399,8 @@ class TrajectoryWork(pipeline.WorkAdapter):
                                  self.family.nx, self.family.ny))
                        for s in subs]
         self._stats = [SequenceStats() for _ in subs]
+        self._label_ok = [np.ones(len(s), dtype=bool) for s in subs]
+        self._requeue = []   # (chain, row, traj index, stats slice lo/hi)
         self._u0_all = jnp.asarray(self.specs.u0)
         if self.family.classic:
             self._stepB = self.family.step_fn_batched()
@@ -370,13 +440,18 @@ class TrajectoryWork(pipeline.WorkAdapter):
         nx, ny = family.nx, family.ny
         workers = len(idx)
         lat, u, live, live_dev = prepared
+        live = live.copy()   # containment may freeze chains mid-row
+        starts = [len(s.per_system) for s in self._stats]
         u_np = np.asarray(u)
         for w in np.nonzero(live)[0]:
             self._trajs[w][j, 0] = u_np[w]
         for step in range(family.nt):
+            if not live.any():
+                break
             t_old, t_new = step * family.dt, (step + 1) * family.dt
             with obs.span("assemble_step", cat="trajectory", step=step):
                 a, b = self._stepB(lat, u, t_old, t_new)
+                a, b = self._poison_row(a, b, idx, live, step)
                 rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
                 rhs = jnp.where(live_dev, rhs, 0.0)  # padded chunks, on device
                 st5 = Stencil5(a)                    # (W, 5, nx, ny)
@@ -384,6 +459,10 @@ class TrajectoryWork(pipeline.WorkAdapter):
                                                   use_kernel=cfg.use_kernel)
                 ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel),
                                        pre)
+            if self.fault is not None:
+                for w in np.nonzero(live)[0]:
+                    self.fault.apply_carry(int(idx[w]), solver, chain=int(w),
+                                           step=step)
             with obs.span("solve_dispatch", cat="trajectory", step=step):
                 xs, st_list = solver.solve_batch(ops,
                                                  rhs.reshape(workers, -1),
@@ -391,9 +470,47 @@ class TrajectoryWork(pipeline.WorkAdapter):
             delta = jnp.asarray(xs.reshape(workers, nx, ny))
             u = u + delta if cfg.rhs_mode == "increment" else delta
             u_np = np.asarray(u)                     # one sync per step
+            frozen = False
             for w in np.nonzero(live)[0]:
                 self._trajs[w][j, step + 1] = u_np[w]
                 self._stats[w].append(st_list[w])
+                if not is_healthy(st_list[w]):
+                    self._label_ok[w][j] = False
+                    if getattr(cfg, "retry", None) is not None:
+                        # one unhealthy step taints the whole trajectory:
+                        # freeze the chain (padded from the next dispatch)
+                        # and hand it to requeue_quarantined for a clean
+                        # sequential re-march
+                        self._requeue.append((int(w), j, int(idx[w]),
+                                              starts[w],
+                                              len(self._stats[w].per_system)))
+                        live[w] = False
+                        frozen = True
+            if frozen:
+                live_dev = jnp.asarray(live)[:, None, None]
+
+    def _poison_row(self, a, b, idx, live, steps):
+        """FaultPlan injection for one lockstep dispatch: poison the
+        targeted chains' operator rows / RHS rows (host round-trip — fault
+        runs only). `steps` is the fault step index, scalar (fixed-Δt rows)
+        or per-chain (phase-masked rows, each chain at its own save step)."""
+        if self.fault is None or not (self.fault.nan_rhs
+                                      or self.fault.nan_operator):
+            return a, b
+        a_np, b_np = np.array(a, copy=True), np.array(b, copy=True)
+        dirty = False
+        for w in np.nonzero(live)[0]:
+            i = int(idx[w])
+            step = int(steps) if np.isscalar(steps) else int(steps[w])
+            pa = self.fault.apply_operator(i, a_np[w], step=step)
+            if pa is not a_np[w]:
+                a_np[w], dirty = pa, True
+            pb = self.fault.apply_rhs(i, b_np[w], step=step)
+            if pb is not b_np[w]:
+                b_np[w], dirty = pb, True
+        if dirty:
+            return jnp.asarray(a_np), jnp.asarray(b_np)
+        return a, b
 
     def _execute_row_stepped(self, solver, j: int, idx: np.ndarray,
                              prepared):
@@ -416,6 +533,7 @@ class TrajectoryWork(pipeline.WorkAdapter):
         nt = family.nt
         save_dt = family.t_end / nt
         u_np = np.asarray(states.u)
+        starts = [len(s.per_system) for s in self._stats]
         for w in np.nonzero(live)[0]:
             self._trajs[w][j, 0] = u_np[w]
         pols = {int(w): _make_policy(family) for w in np.nonzero(live)[0]}
@@ -448,6 +566,7 @@ class TrajectoryWork(pipeline.WorkAdapter):
                 a, b = self._buildB(lat, states, jnp.asarray(t),
                                     jnp.asarray(dt_step), jnp.asarray(dtp),
                                     jnp.asarray(boot), bool(boot.any()))
+                a, b = self._poison_row(a, b, idx, act, save_i - 1)
                 rhs = (_inc_rhs(a, b, states.u)
                        if cfg.rhs_mode == "increment" else b)
                 rhs = jnp.where(jnp.asarray(act)[:, None, None], rhs, 0.0)
@@ -456,6 +575,10 @@ class TrajectoryWork(pipeline.WorkAdapter):
                                                   use_kernel=cfg.use_kernel)
                 ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel),
                                        pre)
+            if self.fault is not None:
+                for w in np.nonzero(act)[0]:
+                    self.fault.apply_carry(int(idx[w]), solver, chain=int(w),
+                                           step=int(save_i[w]) - 1)
             with obs.span("solve_dispatch", cat="trajectory"):
                 xs, st_list = solver.solve_batch(ops,
                                                  rhs.reshape(workers, -1),
@@ -470,12 +593,26 @@ class TrajectoryWork(pipeline.WorkAdapter):
             accept = np.zeros(workers, dtype=bool)
             recorded = []
             for w in np.nonzero(act)[0]:
+                st = st_list[w]
+                if getattr(cfg, "retry", None) is not None \
+                        and not is_healthy(st):
+                    # containment: an unhealthy solve must not feed the
+                    # controller (est may be NaN) — freeze the chain and
+                    # hand the trajectory to requeue_quarantined
+                    self._stats[w].append(st)
+                    self._requeue.append((int(w), j, int(idx[w]), starts[w],
+                                          len(self._stats[w].per_system)))
+                    self._label_ok[w][j] = False
+                    mask.finish(w)
+                    continue
                 pol = pols[int(w)]
                 remaining = save_i[w] * save_dt - t[w]
                 ok = pol.decide(float(est_np[w]), float(dt_step[w]))
                 accept[w] = ok
                 st_list[w].rejected = not ok
                 self._stats[w].append(st_list[w])
+                if ok and not is_healthy(st_list[w]):
+                    self._label_ok[w][j] = False   # retry=None legacy mode
                 if not ok:
                     continue
                 if dt_step[w] == remaining:   # landed on a save time
@@ -491,12 +628,50 @@ class TrajectoryWork(pipeline.WorkAdapter):
                 if save_i[w] > nt:
                     mask.finish(w)
 
+    def requeue_quarantined(self):
+        """Containment requeue: trajectories whose lockstep march hit an
+        unhealthy step are RE-MARCHED end to end on a fresh sequential chain
+        (guarded solves — `cfg.retry` — per step). Faults are one-shot, so
+        the re-march sees clean data; its stats REPLACE the tainted row's
+        slice so sequence totals describe the shipped labels."""
+        if not self._requeue:
+            return
+        solver = self.make_solver()
+        # replace highest stats-slice first: earlier replacements must not
+        # shift the recorded (lo, hi) windows of later ones
+        for w, j, i, lo, hi in sorted(self._requeue, key=lambda r: -r[3]):
+            solver.u_carry = None    # cold per trajectory
+            redo = SequenceStats()
+            self._trajs[w][j] = _march_one(
+                self.family, _spec_at(self.specs, i), self.cfg, solver,
+                redo, fault=self.fault, tidx=i)
+            if redo.per_system:
+                # fold the tainted attempts' work into the re-march's first
+                # record and mark the intervention, so summary()["health"]
+                # still reports the recovery after the slice is replaced
+                head = redo.per_system[0]
+                for s in self._stats[w].per_system[lo:hi]:
+                    head.merge_inner(s)
+                    head.retries += max(s.retries, 0)
+                head.retries += 1
+                head.escalation_path = head.escalation_path + ("requeue",)
+            self._stats[w].per_system[lo:hi] = redo.per_system
+            self._label_ok[w][j] = self._steps_ok(redo.per_system)
+        obs.counter_add("health.requeued", len(self._requeue))
+        self._requeue = []
+
     def chunk_result(self, w: int) -> TrajResult:
         return self._chunk_result(self._subs[w], self._trajs[w],
-                                  self._stats[w])
+                                  self._stats[w], self._label_ok[w])
 
-    def _chunk_result(self, sub, trajs, stats) -> TrajResult:
+    def _chunk_result(self, sub, trajs, stats, label_ok=None) -> TrajResult:
         sub = np.asarray(sub, dtype=np.int64)
+        label_ok = np.ones(len(sub), dtype=bool) if label_ok is None \
+            else np.asarray(label_ok, dtype=bool)
+        if getattr(self.cfg, "strict_labels", "flag") == "exclude" \
+                and not label_ok.all():
+            sub, trajs = sub[label_ok], trajs[label_ok]
+            label_ok = np.ones(len(sub), dtype=bool)
         return TrajResult(
             trajectories=trajs,
             no_input=np.asarray(self.specs.no_input)[sub],
@@ -504,6 +679,7 @@ class TrajectoryWork(pipeline.WorkAdapter):
             stats=stats,
             sort_seconds=0.0,
             chain_len=chain_length(self.feats, sub),
+            label_ok=label_ok,
         )
 
 
@@ -521,18 +697,22 @@ class TrajectoryGenerator:
 
     def generate(self, key: jax.Array, num: int,
                  progress_cb: Optional[Callable[[int, int], None]] = None,
-                 fail_at: Optional[int] = None) -> TrajResult:
+                 fail_at: Optional[int] = None,
+                 fault: Optional[FaultPlan] = None) -> TrajResult:
         """Generate `num` trajectories of nt+1 fields each.
 
         fail_at: fault-injection hook (unit = trajectories) — raises after
         that many trajectories; a rerun resumes from the checkpoint with the
         recycle space intact, mirroring `SKRGenerator.generate`.
+        fault: full seeded `FaultPlan` (chaos tests): NaN poisoning of
+        trajectory `i`'s assembly at save-step `fault.step`, preemption
+        with optional checkpoint corruption; see core/robust.py.
         """
         work = TrajectoryWork(self.family, self.cfg)
         return pipeline.run_resumable(work, key, num, ckpt=self._ckpt,
                                       ckpt_every=self.cfg.ckpt_every,
                                       progress_cb=progress_cb,
-                                      fail_at=fail_at)
+                                      fail_at=fail_at, fault=fault)
 
 
 def generate_trajectories(family: TimeDepFamily, key: jax.Array, num: int,
@@ -554,7 +734,9 @@ def generate_trajectories_baseline(family: TimeDepFamily, key: jax.Array,
 
 def generate_trajectories_chunked(family: TimeDepFamily, key: jax.Array,
                                   num: int, cfg: TrajConfig, workers: int = 4,
-                                  engine: str = "batched") -> list[TrajResult]:
+                                  engine: str = "batched",
+                                  fault: Optional[FaultPlan] = None,
+                                  ) -> list[TrajResult]:
     """Chunk-parallel trajectory datagen: sort the trajectories once, split
     the sorted order into `workers` contiguous chunks, one recycle chain per
     chunk (the App. E.2.2 decomposition lifted to trajectory granularity).
@@ -569,4 +751,5 @@ def generate_trajectories_chunked(family: TimeDepFamily, key: jax.Array,
     the sequential path, mirroring `generate_dataset_chunked`.
     """
     work = TrajectoryWork(family, cfg)
+    work.fault = fault
     return pipeline.run_chunked(work, key, num, workers, engine)

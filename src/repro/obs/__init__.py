@@ -39,7 +39,8 @@ from repro.obs.trace import NULL_SPAN, Tracer
 
 __all__ = [
     "enable", "disable", "enabled", "span", "instant", "counter",
-    "tracer", "registry", "record_dispatch", "krylov_capacity",
+    "counter_add", "tracer", "registry", "record_dispatch",
+    "krylov_capacity",
     "delta_enabled", "summary", "export_chrome_trace", "export_jsonl",
     "KrylovTelemetry", "TelemetryConfig", "drain_chain", "ring_order",
     "Tracer", "Registry",
@@ -109,6 +110,16 @@ def tracer() -> Optional[Tracer]:
 # --------------------------------------------------------------- registry
 def registry() -> Optional[Registry]:
     return _REGISTRY
+
+
+def counter_add(name: str, value: float = 1.0):
+    """Bump a registry counter; free no-op when disabled. The containment
+    layer (core/robust.py, solvers/batched.py) reports retry / quarantine /
+    fault events through this — e.g. `health.retries`,
+    `health.quarantined`, `faults.nan_rhs`."""
+    r = _REGISTRY
+    if r is not None:
+        r.counter_add(name, value)
 
 
 def record_dispatch(live: int, total: int, iters=None, cycles: int = 0):

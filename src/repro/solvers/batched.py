@@ -206,27 +206,59 @@ def _zeros_state(b, *, k: int):
 
 
 def _active_mask(s, aux):
-    return (~aux["zerob"] & ~aux["pad"] & ~s["stalled"]
-            & (s["rnorm"] > aux["tol_abs"]) & (s["iters"] < aux["lim"]))
+    act = (~aux["zerob"] & ~aux["pad"] & ~s["stalled"]
+           & (s["rnorm"] > aux["tol_abs"]) & (s["iters"] < aux["lim"]))
+    if "quar" in s:   # containment on: quarantined chains are frozen
+        act = act & ~s["quar"]
+    return act
 
 
 def _flags(s, aux, active_prev, step, any_grew):
-    """The ONLY per-cycle device→host payload: 4 booleans."""
+    """The ONLY per-cycle device→host payload: 4 booleans — 5 with the
+    containment layer on, the health flag riding the SAME fetch (the
+    host_syncs = 2 + cycles budget is untouched)."""
     nxt = _active_mask(s, aux)
-    return jnp.stack([nxt.any(),                    # keep cycling?
-                      (s["est"] | ~nxt).all(),      # deflated-ready?
-                      (step & active_prev).any(),   # anyone advanced?
-                      any_grew])                    # restart growth (k=0)
+    out = [nxt.any(),                    # keep cycling?
+           (s["est"] | ~nxt).all(),      # deflated-ready?
+           (step & active_prev).any(),   # anyone advanced?
+           any_grew]                     # restart growth (k=0)
+    if "quar" in s:
+        out.append(s["quar"].any())      # per-batch health flag
+    return jnp.stack(out)
+
+
+def _contain_guard(s, aux, active, z_prev, r_prev, rn_prev, z, r, rn):
+    """In-dispatch divergence quarantine (containment on): a chain whose
+    updated residual went non-finite or beyond the divergence threshold is
+    rolled back to its cycle-start iterate and quarantined — masked to a
+    frozen row from the next cycle on (reusing the padding machinery via
+    `_active_mask`) instead of poisoning the shared dispatch. Already-
+    quarantined chains stay frozen at their last good iterate (a y = 0
+    update on a NaN basis would otherwise NaN the held z)."""
+    bad = active & (~jnp.isfinite(rn) | (rn > aux["div_abs"]))
+    hold = bad | s["quar"]
+    z = _mask(hold, z_prev, z)
+    r = _mask(hold, r_prev, r)
+    rn = jnp.where(hold, rn_prev, rn)
+    return z, r, rn, s["quar"] | bad
 
 
 @partial(jax.jit, static_argnames=("k", "use_carry", "pad_given",
-                                   "tele_cap", "tele_delta"))
-def _entry(ops, b, z0, c0, u0, uc, cok, pad_in, tol, lim,
+                                   "contain", "tele_cap", "tele_delta"))
+def _entry(ops, b, z0, c0, u0, uc, cok, pad_in, tol, lim, div,
            *, k: int, use_carry: bool, pad_given: bool,
-           tele_cap: int = 0, tele_delta: bool = False):
+           contain: bool = False, tele_cap: int = 0,
+           tele_delta: bool = False):
     """Norms, padding mask and the warm start (Alg. 2 l.2-7) as one fused
     dispatch. The warm-start rank gate is the batched masked triangular
-    inverse (devlinalg.tri_inv_stacked) — no per-chain host loop."""
+    inverse (devlinalg.tri_inv_stacked) — no per-chain host loop.
+
+    contain=False (no RetryPolicy) traces the exact pre-containment
+    program — no quarantine state enters the dict, no extra flag is
+    fetched, bitwise-identical numerics (the tele_cap=0 pattern). With
+    contain=True the state gains a per-chain `quar` bool and aux gains the
+    absolute divergence threshold `div * ||b||`; a chain whose RHS is
+    already non-finite is quarantined at entry (its row never solves)."""
     bsz = b.shape[0]
     dt = b.dtype
     bnorm = jnp.linalg.norm(b, axis=1)
@@ -241,6 +273,9 @@ def _entry(ops, b, z0, c0, u0, uc, cok, pad_in, tol, lim,
              iters=jnp.zeros(bsz, jnp.int32),
              matvecs=jnp.zeros(bsz, jnp.int32),
              cycles=jnp.zeros(bsz, jnp.int32))
+    if contain:
+        aux["div_abs"] = div * bnorm
+        s["quar"] = ~jnp.isfinite(bnorm) & ~pad
     if use_carry and k > 0:
         want = cok & ~zerob & ~pad & (bnorm > tol_abs)
         au = _apply_cols_b(ops, uc)
@@ -264,10 +299,11 @@ def _entry(ops, b, z0, c0, u0, uc, cok, pad_in, tol, lim,
 
 @partial(jax.jit, static_argnames=("m", "k", "orthog", "use_kernel",
                                    "h_acc", "stall_break", "can_grow",
-                                   "tele_cap", "tele_delta"))
+                                   "contain", "tele_cap", "tele_delta"))
 def _fresh_cycle(ops, s, aux, *, m: int, k: int, orthog: str,
                  use_kernel: bool, h_acc: str, stall_break: bool,
-                 can_grow: bool, tele_cap: int = 0, tele_delta: bool = False):
+                 can_grow: bool, contain: bool = False,
+                 tele_cap: int = 0, tele_delta: bool = False):
     """One lockstep fresh GMRES(m) cycle (Alg. 2 l.9-18) as ONE device
     program: Arnoldi sweep → stacked Hessenberg LS → solution update →
     (k > 0) harmonic-Ritz space establishment, all under the same jit."""
@@ -284,6 +320,10 @@ def _fresh_cycle(ops, s, aux, *, m: int, k: int, orthog: str,
     y = dl.hessenberg_lstsq_stacked(cyc.h, j, s["rnorm"])
     rprev = s["rnorm"]
     z, r, rn = _fresh_update_b(ops, aux["b"], s["z"], cyc.v, y.astype(dt))
+    if contain:
+        z, r, rn, quar = _contain_guard(s, aux, active, s["z"], s["r"],
+                                        rprev, z, r, rn)
+        s = dict(s, quar=quar)
     s = dict(s, z=z, r=r, rnorm=rn,
              iters=s["iters"] + jnp.where(step, j, 0),
              matvecs=s["matvecs"] + jnp.where(step, j + 1, 0),
@@ -296,7 +336,7 @@ def _fresh_cycle(ops, s, aux, *, m: int, k: int, orthog: str,
         # establish / re-establish recycle spaces per chain, on device
         p, ritz_ok = dl.harmonic_ritz_first_cycle_stacked(cyc.h, j, k)
         q, inv_rr, qr_ok = dl.refresh_factors(cyc.h @ p, ritz_ok & step)
-        est_new = qr_ok
+        est_new = qr_ok if not contain else qr_ok & ~s["quar"]
         c_new, yk = _fresh_cu_b(cyc.v, cyc.h, p, q)
         u_new = _mat_post_b(yk, inv_rr)
         s["c"] = _mask(est_new, c_new, s["c"])
@@ -323,11 +363,12 @@ def _fresh_cycle(ops, s, aux, *, m: int, k: int, orthog: str,
 
 
 @partial(jax.jit, static_argnames=("mi", "k", "orthog", "use_kernel",
-                                   "h_acc", "stall_break",
+                                   "h_acc", "stall_break", "contain",
                                    "tele_cap", "tele_delta"))
 def _deflated_cycle(ops, s, aux, *, mi: int, k: int, orthog: str,
                     use_kernel: bool, h_acc: str, stall_break: bool,
-                    tele_cap: int = 0, tele_delta: bool = False):
+                    contain: bool = False, tele_cap: int = 0,
+                    tele_delta: bool = False):
     """One lockstep deflated cycle (Alg. 2 l.19-33) as ONE device program:
     deflated Arnoldi sweep → stacked Ĝ least-squares → solution update →
     stacked generalized harmonic-Ritz refresh of (C, U)."""
@@ -352,6 +393,10 @@ def _deflated_cycle(ops, s, aux, *, mi: int, k: int, orthog: str,
     rprev = s["rnorm"]
     z, r, rn = _deflated_update_b(ops, aux["b"], s["z"], ut, cyc.v,
                                   y_k.astype(dt), y_m.astype(dt))
+    if contain:
+        z, r, rn, quar = _contain_guard(s, aux, active, s["z"], s["r"],
+                                        rprev, z, r, rn)
+        s = dict(s, quar=quar)
     s = dict(s, z=z, r=r, rnorm=rn,
              iters=s["iters"] + jnp.where(step, j, 0),
              matvecs=s["matvecs"] + jnp.where(step, j + 1, 0),
@@ -365,6 +410,8 @@ def _deflated_cycle(ops, s, aux, *, mi: int, k: int, orthog: str,
     cu, cv, vu, vv = _whv_blocks_b(s["c"], ut, cyc.v)
     whv = dl.assemble_whv_stacked(cu, cv, vu, vv, j)
     p, ritz_ok = dl.harmonic_ritz_deflated_stacked(g, whv, j, k)
+    if contain:   # a quarantined chain must not refresh from garbage
+        ritz_ok = ritz_ok & ~s["quar"]
     q, inv_rr, ref_ok = dl.refresh_factors(g @ p, ritz_ok & step)
     c_new, yk = _next_cu_b(ut, cyc.v, s["c"], p[:, :k], p[:, k:],
                            q[:, :k], q[:, k:])
@@ -401,7 +448,7 @@ class BatchedGCRODRSolver:
     """
 
     def __init__(self, cfg: KrylovConfig, use_kernel: bool = False,
-                 stall_break: bool = False, sharding=None):
+                 stall_break: bool = False, sharding=None, policy=None):
         if cfg.k > 0 and cfg.ritz_refresh != "cycle":
             raise NotImplementedError(
                 "BatchedGCRODRSolver implements the paper-faithful "
@@ -409,6 +456,15 @@ class BatchedGCRODRSolver:
                 "last-cycle snapshots (use the sequential engine)")
         self.cfg = cfg
         self.use_kernel = use_kernel
+        # policy: optional core.robust.RetryPolicy — arms the in-dispatch
+        # containment layer: per-chain quarantine state, the divergence
+        # guard in every cycle program, a 5th health flag riding the
+        # per-cycle fetch, and carry-write blocking for quarantined chains.
+        # None (the default) traces the EXACT pre-containment programs —
+        # bitwise-identical numerics, same sync budget. Escalation/retry
+        # itself is the pipeline's job (core/robust.solve_one_guarded on
+        # the requeued systems); the solver only contains and reports.
+        self.policy = policy
         # sharding: optional distributed.sharding.ChainSharding — shards the
         # leading chain axis of every large device array over the `data`
         # mesh axis, turning each lockstep dispatch into one SPMD program
@@ -483,15 +539,22 @@ class BatchedGCRODRSolver:
         # exact pre-telemetry programs — bitwise-identical, no extra work
         tele_cap = obs.krylov_capacity()
         tele_delta = obs.delta_enabled() and k > 0
+        # containment is STATIC the same way: no policy → the exact
+        # pre-containment programs, bitwise-identical
+        contain = self.policy is not None
+        div = (self.policy.divergence_ratio if contain else 0.0)
         # 0-d numpy scalars: a bare python scalar counts as an IMPLICIT
         # host→device transfer under jax.transfer_guard("disallow")
         s, aux, f = _entry(ops, b, z0, c0, u0, uc, cok, pad_in,
                            jnp.asarray(np.asarray(cfg.tol, dt)),
                            jnp.asarray(np.asarray(cfg.maxiter, np.int32)),
+                           jnp.asarray(np.asarray(div, dt)),
                            k=k, use_carry=use_carry, pad_given=pad_given,
-                           tele_cap=tele_cap, tele_delta=tele_delta)
+                           contain=contain, tele_cap=tele_cap,
+                           tele_delta=tele_delta)
         with obs.span("host_sync", cat="solver", what="entry_flags"):
-            any_active, all_est, _, _ = map(bool, jax.device_get(f))
+            fl = jax.device_get(f)
+        any_active, all_est = bool(fl[0]), bool(fl[1])
         host_syncs, dispatches = 1, 1
 
         m_fresh = cfg.m  # k=0: grows adaptively, mirroring gmres_solve
@@ -504,17 +567,20 @@ class BatchedGCRODRSolver:
                     ops, s, aux, m=m_fresh, k=k, orthog=cfg.orthog,
                     use_kernel=self.use_kernel, h_acc=cfg.cgs2_acc,
                     stall_break=self.stall_break,
-                    can_grow=m_fresh < m_cap,
+                    can_grow=m_fresh < m_cap, contain=contain,
                     tele_cap=tele_cap, tele_delta=tele_delta)
             else:
                 s, f = _deflated_cycle(
                     ops, s, aux, mi=cfg.m - k, k=k, orthog=cfg.orthog,
                     use_kernel=self.use_kernel, h_acc=cfg.cgs2_acc,
-                    stall_break=self.stall_break,
+                    stall_break=self.stall_break, contain=contain,
                     tele_cap=tele_cap, tele_delta=tele_delta)
             with obs.span("host_sync", cat="solver", what="cycle_flags"):
-                any_active, all_est, any_step, any_grew = map(
-                    bool, jax.device_get(f))
+                fl = jax.device_get(f)
+            any_active, all_est, any_step, any_grew = map(bool, fl[:4])
+            if contain and bool(fl[4]):
+                # the health flag rides the SAME fetch: zero extra syncs
+                obs.counter_add("health.lockstep_quarantine_flag")
             host_syncs += 1
             dispatches += 1
             if any_grew and m_fresh < m_cap:
@@ -529,6 +595,10 @@ class BatchedGCRODRSolver:
         fetch = (x_dev, s["rnorm"], s["iters"], s["matvecs"], s["cycles"],
                  s["stalled"], s["est"], s["u"], aux["bnorm"],
                  aux["zerob"], aux["pad"])
+        if contain:
+            # the quarantine verdicts ride the EXISTING finalize fetch
+            fetch = fetch + (s["quar"],)
+        nbase = len(fetch)
         tkeys = ()
         if tele_cap > 0:
             tkeys = (("tlm_res", "tlm_stall", "tlm_dim")
@@ -538,9 +608,10 @@ class BatchedGCRODRSolver:
             got = jax.device_get(fetch)
         (x, rnorm, iters, matvecs, cycles, stalled, established, u_np,
          bnorm, zerob, pad) = got[:11]
+        quar = got[11] if contain else np.zeros(bsz, bool)
         tbufs, tcnt = None, 0
         if tele_cap > 0:
-            tbufs = dict(zip(tkeys, got[11:-1]))
+            tbufs = dict(zip(tkeys, got[nbase:-1]))
             tcnt = int(got[-1])
         host_syncs += 1
         dispatches += 1
@@ -552,7 +623,11 @@ class BatchedGCRODRSolver:
                 iterations=int(iters[i]),
                 matvecs=int(matvecs[i]),
                 cycles=int(cycles[i]),
-                converged=bool(converged[i]),
+                converged=bool(converged[i]) and not bool(quar[i]),
+                # quarantined: the in-dispatch guard froze this chain —
+                # the pipeline requeues the system through the escalation
+                # ladder (core/robust.py) and replaces this record
+                quarantined=bool(quar[i]),
                 rel_residual=0.0 if zerob[i]
                 else float(rnorm[i] / bnorm[i]),
                 # lockstep latency, shared by the batch; a padding row
@@ -581,6 +656,11 @@ class BatchedGCRODRSolver:
             # a space this solve keep their previous carry — BITWISE (the
             # old numpy rows are reused, not round-tripped). The carry is
             # stored in the SOLVE dtype (fp32 under the mixed inner solver).
+            if contain:
+                # carry quarantine: a quarantined chain's space was built
+                # from (or alongside) a diverging iterate — never let it
+                # seed the chain's NEXT system; the chain restarts cold
+                established = established & ~quar
             if self.u_carry is None:
                 self.u_carry = np.zeros((bsz, n, k), dtype=u_np.dtype)
                 self.carry_ok = np.zeros(bsz, dtype=bool)
@@ -588,6 +668,11 @@ class BatchedGCRODRSolver:
             self.u_carry = np.where(keep, u_np,
                                     self.u_carry.astype(u_np.dtype))
             self.carry_ok = self.carry_ok | established
+            if contain and quar.any():
+                self.u_carry[quar] = 0.0
+                self.carry_ok = self.carry_ok & ~quar
+                obs.counter_add("health.quarantined_chains",
+                                int(quar.sum()))
         self.systems_solved += int((~zerob & ~pad).sum())
         return x, stats
 
@@ -726,13 +811,25 @@ class BatchedGCRODRSolver:
         host_syncs += 1
         wall = time.perf_counter() - t0
         converged = zerob | (rnorm <= tol_abs)
+        # containment (policy armed): the outer IR loop is host-mediated,
+        # so quarantine here is a pure host-side classification — a chain
+        # whose norms went non-finite (poisoned RHS/operator) or whose
+        # residual diverged past the policy threshold is flagged for the
+        # pipeline's requeue; NaN comparison semantics already kept it out
+        # of every outer pass (a NaN `need` entry is False)
+        quar = np.zeros(bsz, dtype=bool)
+        if self.policy is not None:
+            quar = (~pad & ~zerob
+                    & (~np.isfinite(bnorm) | ~np.isfinite(rnorm)
+                       | (rnorm > self.policy.divergence_ratio * bnorm)))
         stats = []
         for i in range(bsz):
             stats.append(SolveStats(
                 iterations=int(iters[i]),
                 matvecs=int(matvecs[i]),
                 cycles=int(cycles[i]),
-                converged=bool(converged[i]),
+                converged=bool(converged[i]) and not bool(quar[i]),
+                quarantined=bool(quar[i]),
                 rel_residual=0.0 if zerob[i]
                 else float(rnorm[i] / bnorm[i]),
                 # shared lockstep latency; 0 for padding rows
@@ -755,5 +852,12 @@ class BatchedGCRODRSolver:
             self.u_carry = np.asarray(inner.u_carry, np.float32)
             self.carry_ok = (inner.carry_ok.copy()
                              if inner.carry_ok is not None else None)
+            if quar.any():   # carry quarantine, as in the fp64 path
+                self.u_carry[quar] = 0.0
+                if self.carry_ok is not None:
+                    self.carry_ok = self.carry_ok & ~quar
+                inner.u_carry[quar] = 0.0
+                if inner.carry_ok is not None:
+                    inner.carry_ok = inner.carry_ok & ~quar
         self.systems_solved += int((~zerob & ~pad).sum())
         return x_np, stats

@@ -40,6 +40,18 @@ class SolveStats:
     # the claim the trajectory_recycle benchmark tracks.
     host_syncs: int = 0
     dispatches: int = 0
+    # failure-containment accounting (core/robust.py): `retries` counts
+    # escalation-ladder attempts taken before this record's solve settled;
+    # `escalation_path` names the rungs, in order (e.g. ("drop_carry",
+    # "grow_m")); `quarantined=True` marks a solve whose ladder was
+    # exhausted without a converged finite solution — the label is NOT
+    # trustworthy (strict_labels decides whether it ships flagged or is
+    # excluded). The lockstep engine also sets `quarantined` on chains its
+    # in-dispatch divergence guard masked out mid-solve; the pipeline then
+    # requeues those systems and REPLACES the record.
+    retries: int = 0
+    quarantined: bool = False
+    escalation_path: tuple = ()
     # convergence telemetry (observability runs only): a
     # `repro.obs.KrylovTelemetry` with this system's per-cycle residual /
     # stall / deflation-dimension history. None whenever `repro.obs` is
@@ -142,6 +154,42 @@ class SequenceStats:
     def total_dispatches(self) -> int:
         return int(sum(s.dispatches for s in self.solved))
 
+    # ------------------------------------------------ health aggregates
+    @property
+    def num_quarantined(self) -> int:
+        return int(sum(s.quarantined for s in self.solved))
+
+    @property
+    def num_retried(self) -> int:
+        """Solves that walked at least one escalation-ladder rung."""
+        return int(sum(s.retries > 0 for s in self.solved))
+
+    @property
+    def total_retries(self) -> int:
+        return int(sum(s.retries for s in self.solved))
+
+    @property
+    def num_recovered(self) -> int:
+        """Retried solves that still converged — the ladder paid off."""
+        return int(sum(s.retries > 0 and s.converged for s in self.solved))
+
+    @property
+    def label_quality(self) -> float:
+        """Fraction of real solves whose label is trustworthy (converged,
+        finite residual, not quarantined) — the signal `strict_labels`
+        acts on and the obs layer exports as a gauge."""
+        good = sum(s.converged and not s.quarantined
+                   and np.isfinite(s.rel_residual) for s in self.solved)
+        return good / max(1, self.num)
+
+    def escalation_counts(self) -> dict:
+        """How often each ladder rung was taken across the sequence."""
+        out: dict = {}
+        for s in self.solved:
+            for rung in s.escalation_path:
+                out[rung] = out.get(rung, 0) + 1
+        return out
+
     @property
     def utilization(self) -> float:
         """Live fraction of all lockstep rows this sequence dispatched
@@ -167,6 +215,21 @@ class SequenceStats:
             "mean_host_syncs": self.mean_host_syncs,
             "dispatches": self.total_dispatches,
             "utilization": self.utilization,
+            # containment surfacing (core/robust.py): retry/quarantine
+            # counts and the per-rung escalation tally, always present so
+            # consumers need not special-case fault-free runs
+            "health": {
+                "healthy": int(sum(not s.quarantined and s.retries == 0
+                                   for s in self.solved)),
+                "recovered": self.num_recovered,
+                "quarantined": self.num_quarantined,
+                "failed": int(sum(
+                    s.quarantined and not np.isfinite(s.rel_residual)
+                    for s in self.solved)),
+                "retries": self.total_retries,
+                "escalations": self.escalation_counts(),
+                "label_quality": self.label_quality,
+            },
         }
         # merge the live telemetry registry (occupancy counters, imbalance
         # gauges) when observability is on; a late import keeps the stats

@@ -1,0 +1,315 @@
+"""Chaos suite for the failure-containment layer (core/robust.py).
+
+Every test drives the REAL pipeline through a seeded `FaultPlan` — NaN
+poisoning of chosen systems' RHS / operator / recycle carry, simulated
+preemption, byte-level checkpoint corruption — and asserts the containment
+contract: bounded deterministic escalation, identical ladder walks across
+engines, quarantined chains requeued onto fresh chains, corrupted
+checkpoints falling back a generation, and (with no faults) bitwise
+identity to the containment-free configuration."""
+import dataclasses
+import os
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.ckpt import NpzCheckpointer
+from repro.core.robust import (FaultPlan, RetryPolicy, corrupt_file,
+                               health_of, solve_one_guarded)
+from repro.core.skr import (SKRConfig, SKRGenerator, generate_dataset,
+                            generate_dataset_chunked)
+from repro.core.trajectory import (TrajConfig, TrajectoryGenerator,
+                                   generate_trajectories_chunked)
+from repro.pde.registry import get_family
+from repro.pde.timedep import HeatTimeFamily
+from repro.solvers.types import KrylovConfig, SolveStats
+
+pytestmark = pytest.mark.chaos
+
+KC = KrylovConfig(m=30, k=10, tol=1e-8, maxiter=6000)
+CFG = SKRConfig(krylov=KC, precond="jacobi")
+
+
+# ---------------------------------------------------------------------------
+# health state machine / policy units
+# ---------------------------------------------------------------------------
+
+def test_health_state_machine():
+    ok = SolveStats(iterations=5, rel_residual=1e-10, converged=True)
+    assert health_of(ok) == "healthy"
+    re = dataclasses.replace(ok, retries=1, escalation_path=("drop_carry",))
+    assert health_of(re) == "retrying"
+    qr = SolveStats(iterations=99, rel_residual=1e-2, converged=False,
+                    quarantined=True)
+    assert health_of(qr) == "quarantined"
+    fl = dataclasses.replace(qr, rel_residual=float("nan"))
+    assert health_of(fl) == "failed"
+
+
+def test_retry_policy_validates():
+    with pytest.raises(AssertionError):
+        RetryPolicy(ladder=("no_such_rung",))
+    with pytest.raises(AssertionError):
+        RetryPolicy(divergence_ratio=0.5)
+
+
+def test_guarded_solve_quarantines_after_exhaustion():
+    """A problem no rung can fix walks the whole applicable ladder, then
+    quarantines with a finite (zero) iterate and the full path recorded."""
+    fam = get_family("poisson", nx=10, ny=10)
+    work_cfg = dataclasses.replace(
+        CFG, retry=RetryPolicy(max_retries=3))
+    from repro.core.skr import SteadyWork
+
+    work = SteadyWork(fam, work_cfg)
+    work.sample(jax.random.PRNGKey(0), 2)
+    solver = work.make_solver()
+
+    calls = []
+
+    def impossible():
+        op, b = work._assemble(0)
+        calls.append(1)
+        bad = np.array(b, copy=True)
+        bad[0] = np.nan           # poison EVERY attempt, not one-shot
+        return op, bad
+
+    x, st = solve_one_guarded(solver, impossible, work_cfg.retry)
+    assert st.quarantined
+    assert health_of(st) in ("quarantined", "failed")
+    # fp64_inner does not apply on an fp64 config: drop_carry + grow_m only
+    assert st.escalation_path == ("drop_carry", "grow_m")
+    assert np.isfinite(x).all()   # zero-filled fallback, shapes hold
+    assert solver.u_carry is None  # a failed chain's carry never escapes
+
+
+# ---------------------------------------------------------------------------
+# cross-engine escalation determinism
+# ---------------------------------------------------------------------------
+
+def _paths(results):
+    out = []
+    for r in (results if isinstance(results, list) else [results]):
+        for s in r.stats.solved:
+            if s.retries or s.quarantined:
+                out.append((s.escalation_path, s.quarantined))
+    return sorted(out)
+
+
+def test_escalation_paths_identical_across_engines():
+    """The same seeded FaultPlan must produce the same ladder walks on the
+    sequential, batched and sharded engines (sharded degenerates to batched
+    on one device — the dispatch path is still exercised)."""
+    fam = get_family("poisson", nx=14, ny=14)
+    key = jax.random.PRNGKey(3)
+    num = 10
+
+    def plan():
+        return FaultPlan(nan_rhs=(2, 7), nan_operator=(4,), seed=5)
+
+    seq = generate_dataset_chunked(fam, key, num, CFG, workers=4,
+                                   engine="sequential", fault=plan())
+    bat = generate_dataset_chunked(fam, key, num, CFG, workers=4,
+                                   engine="batched", fault=plan())
+    shd = generate_dataset_chunked(fam, key, num, CFG, workers=4,
+                                   engine="sharded", fault=plan())
+    assert _paths(seq) == _paths(bat) == _paths(shd)
+    assert len(_paths(seq)) == 3          # every fault produced one recovery
+    for res in (seq, bat, shd):
+        for r in res:
+            assert r.label_ok.all()       # ...and every label recovered
+            h = r.stats.summary()["health"]
+            assert h["quarantined"] == 0
+
+
+def test_nan_carry_recovers_without_retry():
+    """Both engines' warm-start rank gates silently drop a non-finite carry
+    and restart cold — the poisoned-carry fault must heal with ZERO retries
+    (the regression the gates exist for)."""
+    fam = get_family("poisson", nx=14, ny=14)
+    key = jax.random.PRNGKey(4)
+    for engine in ("sequential", "batched"):
+        res = generate_dataset_chunked(fam, key, 8, CFG, workers=2,
+                                       engine=engine,
+                                       fault=FaultPlan(nan_carry=(3, 5)))
+        for r in res:
+            assert r.label_ok.all(), engine
+            assert r.stats.summary()["health"]["retries"] == 0, engine
+
+
+def test_lockstep_quarantine_requeues_onto_fresh_chain():
+    """A mid-solve NaN in one lockstep chain is masked in-dispatch and the
+    system re-solved sequentially; the emitted labels match a fault-free
+    run to solver tolerance and the recovery shows in summary()."""
+    fam = get_family("poisson", nx=14, ny=14)
+    key = jax.random.PRNGKey(5)
+    clean = generate_dataset_chunked(fam, key, 8, CFG, workers=4,
+                                     engine="batched")
+    fallen = generate_dataset_chunked(fam, key, 8, CFG, workers=4,
+                                      engine="batched",
+                                      fault=FaultPlan(nan_rhs=(1,)))
+    total = {"recovered": 0}
+    for a, b in zip(clean, fallen):
+        np.testing.assert_allclose(a.solutions, b.solutions,
+                                   rtol=1e-5, atol=1e-8)
+        assert b.label_ok.all()
+        total["recovered"] += b.stats.summary()["health"]["recovered"]
+    assert total["recovered"] == 1
+
+
+# ---------------------------------------------------------------------------
+# strict label modes
+# ---------------------------------------------------------------------------
+
+def test_strict_labels_exclude_drops_untrustworthy_rows():
+    """With retries disabled entirely (max_retries=0) a poisoned system
+    stays quarantined; "exclude" removes it from the emitted dataset while
+    "flag" ships it with label_ok False."""
+    fam = get_family("poisson", nx=12, ny=12)
+    key = jax.random.PRNGKey(6)
+    base = dataclasses.replace(CFG, retry=RetryPolicy(max_retries=0))
+
+    flagged = SKRGenerator(fam, base).generate(
+        key, 6, fault=FaultPlan(nan_rhs=(2,)))
+    assert flagged.solutions.shape[0] == 6
+    assert not flagged.label_ok[2] and flagged.label_ok.sum() == 5
+    assert flagged.stats.summary()["health"]["quarantined"] == 1
+
+    strict = dataclasses.replace(base, strict_labels="exclude")
+    excluded = SKRGenerator(fam, strict).generate(
+        key, 6, fault=FaultPlan(nan_rhs=(2,)))
+    assert excluded.solutions.shape[0] == 5
+    assert excluded.label_ok.all()
+    assert 2 not in excluded.order.tolist()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["truncate", "flip", "zero"])
+def test_checkpoint_corruption_falls_back_a_generation(tmp_path, mode):
+    ck = NpzCheckpointer(str(tmp_path), "state.npz")
+    ck.save(pos=np.array(2), data=np.arange(4) * 2.0)
+    ck.save(pos=np.array(3), data=np.arange(4) * 3.0)
+    corrupt_file(ck.gen_path(0), mode=mode)
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        state = ck.load(required=("pos", "data"))
+    assert state is not None and int(state["pos"]) == 2
+    assert any("generation 1" in str(w.message) for w in wlog)
+
+
+def test_checkpoint_all_generations_dead_degrades_to_none(tmp_path):
+    ck = NpzCheckpointer(str(tmp_path), "state.npz")
+    ck.save(pos=np.array(1))
+    ck.save(pos=np.array(2))
+    for g in (0, 1):
+        corrupt_file(ck.gen_path(g), mode="zero")
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        assert ck.load(required=("pos",)) is None
+
+
+def test_checkpoint_stale_schema_skipped(tmp_path):
+    ck = NpzCheckpointer(str(tmp_path), "state.npz")
+    ck.save(pos=np.array(1))
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        assert ck.load(required=("pos", "new_field")) is None
+    assert any("stale schema" in str(w.message) for w in wlog)
+
+
+def test_concurrent_writers_do_not_collide(tmp_path):
+    """Two checkpointers sharing dir+filename stage through UNIQUE mkstemp
+    siblings (the old fixed ".tmp.npz" raced); interleaved saves leave a
+    valid newest snapshot plus a valid previous generation."""
+    a = NpzCheckpointer(str(tmp_path), "shared.npz")
+    b = NpzCheckpointer(str(tmp_path), "shared.npz")
+    a.save(pos=np.array(1))
+    b.save(pos=np.array(2))
+    a.save(pos=np.array(3))
+    assert int(a.load(required=("pos",))["pos"]) == 3
+    corrupt_file(a.gen_path(0), mode="truncate")
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        assert int(b.load(required=("pos",))["pos"]) == 2
+    # no stray tmp staging files left behind
+    leftovers = [f for f in os.listdir(tmp_path) if ".tmp" in f]
+    assert leftovers == []
+
+
+def test_resume_after_corrupted_checkpoint_end_to_end(tmp_path):
+    """The acceptance scenario: preemption mid-write corrupts the newest
+    snapshot; the rerun falls back one generation, resumes warm and emits
+    the identical dataset."""
+    fam = get_family("poisson", nx=14, ny=14)
+    cfg = dataclasses.replace(CFG, ckpt_every=2)
+    key = jax.random.PRNGKey(7)
+    ref = generate_dataset(fam, key, 8, cfg)
+
+    gen = SKRGenerator(fam, cfg, ckpt_dir=str(tmp_path))
+    with pytest.raises(RuntimeError, match="injected datagen fault"):
+        gen.generate(key, 8,
+                     fault=FaultPlan(preempt_at=5, ckpt_corrupt="truncate"))
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        res = SKRGenerator(fam, cfg, ckpt_dir=str(tmp_path)).generate(key, 8)
+    msgs = [str(w.message) for w in wlog]
+    assert any("generation 1" in m for m in msgs)
+    np.testing.assert_allclose(res.solutions, ref.solutions,
+                               rtol=1e-6, atol=1e-9)
+    assert res.label_ok.all()
+
+
+# ---------------------------------------------------------------------------
+# trajectory datagen under faults
+# ---------------------------------------------------------------------------
+
+def test_trajectory_containment_across_engines():
+    """Mid-march NaN in one trajectory: the sequential engine retries the
+    step in place, the lockstep engine freezes the chain and re-marches the
+    trajectory — both end with every label trustworthy and matching the
+    fault-free labels at solver tolerance."""
+    fam = HeatTimeFamily(nx=12, ny=12, nt=4, dt=0.01)
+    cfg = TrajConfig(krylov=KrylovConfig(m=20, k=6, tol=1e-8, maxiter=4000),
+                     precond="jacobi")
+    key = jax.random.PRNGKey(8)
+
+    ref = TrajectoryGenerator(fam, cfg).generate(key, 6)
+    seq = TrajectoryGenerator(fam, cfg).generate(
+        key, 6, fault=FaultPlan(nan_rhs=(2,), step=1))
+    assert seq.label_ok.all()
+    np.testing.assert_allclose(seq.trajectories, ref.trajectories,
+                               rtol=1e-4, atol=1e-7)
+
+    clean = generate_trajectories_chunked(fam, key, 6, cfg, workers=3)
+    fallen = generate_trajectories_chunked(
+        fam, key, 6, cfg, workers=3, engine="batched",
+        fault=FaultPlan(nan_rhs=(2,), step=1))
+    recovered = 0
+    for a, b in zip(clean, fallen):
+        assert b.label_ok.all()
+        assert np.isfinite(b.trajectories).all()
+        np.testing.assert_allclose(a.trajectories, b.trajectories,
+                                   rtol=1e-4, atol=1e-7)
+        recovered += b.stats.summary()["health"]["recovered"]
+    assert recovered == 1
+
+
+# ---------------------------------------------------------------------------
+# no-fault bitwise identity (containment default-ON must be free)
+# ---------------------------------------------------------------------------
+
+def test_no_fault_outputs_bitwise_identical_to_containment_off():
+    fam = get_family("poisson", nx=14, ny=14)
+    key = jax.random.PRNGKey(9)
+    off = dataclasses.replace(CFG, retry=None)
+    a = SKRGenerator(fam, CFG).generate(key, 8)
+    b = SKRGenerator(fam, off).generate(key, 8)
+    assert np.array_equal(a.solutions, b.solutions)
+    for x, y in zip(generate_dataset_chunked(fam, key, 8, CFG, workers=4),
+                    generate_dataset_chunked(fam, key, 8, off, workers=4)):
+        assert np.array_equal(x.solutions, y.solutions)

@@ -71,6 +71,27 @@ def test_lockstep_solve_has_no_implicit_transfers(k, telemetry):
         assert all(s.telemetry is None for s in stats)
 
 
+@pytest.mark.parametrize("k", [0, 6])
+def test_lockstep_containment_keeps_sync_budget(k):
+    """Containment ON (a RetryPolicy attached) adds a per-batch health flag
+    to the EXISTING per-cycle flag fetch and a quarantine mask to the
+    EXISTING finalize fetch — the sync budget must stay 2 + cycles and the
+    solve must run clean under the transfer guard."""
+    from repro.core.robust import RetryPolicy
+
+    ops, b = _batched_ops()
+    cfg = KrylovConfig(m=18, k=k, tol=1e-8, maxiter=2000)
+    solver = BatchedGCRODRSolver(cfg, policy=RetryPolicy())
+    with jax.transfer_guard("disallow"):
+        x, stats = solver.solve_batch(ops, b)
+        if k > 0:
+            x, stats = solver.solve_batch(ops, b)
+    assert all(s.converged for s in stats)
+    assert not any(s.quarantined for s in stats)
+    cycles = max(s.cycles for s in stats)
+    assert all(s.host_syncs <= 2 + cycles for s in stats if not s.padded)
+
+
 def test_lockstep_syncs_scale_with_cycles_not_chains():
     """host_syncs is a batch-shared count: growing B must not grow it."""
     cfg = KrylovConfig(m=18, k=6, tol=1e-8, maxiter=2000)
