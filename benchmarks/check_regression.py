@@ -10,6 +10,10 @@ must hold its ≤ 1 blocking host sync per cycle budget. A PR that slows the
 device-resident cycle path back toward host-mediated dispatch overhead
 fails CI here instead of shipping as an unnoticed wall-time regression.
 
+Also ratchets the label-expansion stage (benchmarks/label_expansion.py)
+against `results/BENCH_label_expansion.json`: the worst-family K=8
+labels/s ratio must stay within the same REGRESSION_FACTOR.
+
 The committed baseline is read BEFORE the fresh run (the bench harness
 overwrites the same artifact path), so this module must be the one to
 launch the bench — run it stand-alone:
@@ -22,8 +26,10 @@ import json
 import os
 import sys
 
-BASELINE = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "results", "BENCH_trajectory_recycle.json")
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+BASELINE = os.path.join(RESULTS, "BENCH_trajectory_recycle.json")
+EXPAND_BASELINE = os.path.join(RESULTS, "BENCH_label_expansion.json")
 
 # CI runners are noisy shared VMs: allow the ratio to dip to 75% of the
 # committed value before calling it a regression (same slack philosophy as
@@ -87,6 +93,42 @@ def containment_overhead() -> bool:
     return True
 
 
+def label_expansion_ratchet() -> bool:
+    """Labels/s ratchet for the expansion stage (benchmarks/
+    label_expansion.py): the fresh worst-family K=8 labels/s ratio must
+    stay within REGRESSION_FACTOR of the committed artifact's. A change
+    that sneaks a host sync, a recompile, or a per-label dispatch back
+    into the expansion wave shows up here as the ratio collapsing toward
+    1x. The fresh run skips the FNO quality gates (gates=False) — those
+    are validated when the artifact is (re)committed, not per CI run —
+    but matches the committed quick/full mode for the throughput cells."""
+    if not os.path.exists(EXPAND_BASELINE):
+        print("[check_regression] no label_expansion baseline committed; "
+              "skipping labels/s ratchet")
+        return True
+    with open(EXPAND_BASELINE) as f:
+        doc = json.load(f)
+    fams = [k for k, v in doc["metrics"].items()
+            if isinstance(v, dict) and "k8_ratio" in v]
+    committed = min(doc["metrics"][k]["k8_ratio"] for k in fams)
+    floor = REGRESSION_FACTOR * committed
+
+    from benchmarks import label_expansion
+    fresh_doc = label_expansion.run(quick=bool(doc.get("quick")),
+                                    gates=False)
+    fresh = min(fresh_doc[k]["k8_ratio"] for k in fams)
+
+    print(f"[check_regression] label expansion worst-family K=8 labels/s "
+          f"ratio: fresh {fresh:.2f}x vs committed {committed:.2f}x "
+          f"(floor {floor:.2f}x)")
+    if fresh < floor:
+        print("[check_regression] FAIL: label-expansion throughput "
+              f"regressed below {REGRESSION_FACTOR:.0%} of the committed "
+              "baseline — per-label cost crept back toward per-solve cost")
+        return False
+    return True
+
+
 def main() -> int:
     with open(BASELINE) as f:
         doc = json.load(f)
@@ -131,6 +173,8 @@ def main() -> int:
               "packing")
         ok = False
     if not containment_overhead():
+        ok = False
+    if not label_expansion_ratchet():
         ok = False
     if ok:
         print("[check_regression] OK")

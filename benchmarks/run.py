@@ -14,6 +14,9 @@
   sharded_datagen      multi-device sharded pipeline: per-device throughput
                        at 1/2/4/8 virtual CPU devices (subprocess sweep)
   table33_no_training  Table 33 (FNO on SKR vs GMRES data)
+  label_expansion      few-solves-many-labels: labels/s vs expansion K
+                       (DiffOAS f' = A u' waves; poisson/darcy/heat) +
+                       FNO quality gates at equal label count (full mode)
   roofline_report      §Roofline (aggregates dry-run artifacts)
 
 Each run also writes a machine-readable ``results/BENCH_<name>.json``
@@ -41,9 +44,9 @@ import subprocess
 import tempfile
 import time
 
-from benchmarks import (batched_solver, convergence_fig11, mixed_precision,
-                        parallel_e22, roofline_report, sharded_datagen,
-                        stability_fig13, table1_speedup,
+from benchmarks import (batched_solver, convergence_fig11, label_expansion,
+                        mixed_precision, parallel_e22, roofline_report,
+                        sharded_datagen, stability_fig13, table1_speedup,
                         table2_sort_ablation, table33_no_training,
                         trajectory_recycle)
 
@@ -58,6 +61,7 @@ BENCHES = [
     ("trajectory_recycle", trajectory_recycle.run),
     ("sharded_datagen", sharded_datagen.run),
     ("table33_no_training", table33_no_training.run),
+    ("label_expansion", label_expansion.run),
     ("roofline_report", roofline_report.run),
 ]
 

@@ -1,0 +1,405 @@
+"""Label expansion: few solves, many labels (operator action in solution
+space, after arxiv 2402.05957 "DiffOAS").
+
+SKR (core/skr.py) makes every Krylov solve cheaper; this stage removes the
+solve from most labels entirely. Once an anchor solution u of A u = f
+exists, new supervised pairs are MANUFACTURED in solution space:
+
+    u' = u + a·std(u)·g           additive GRF perturbation (pde/grf.py)
+    u' = u · (1 + a·g)            multiplicative GRF perturbation
+    u' = λ·u + (1−λ)·u_prev       convex combination of same-chain anchors
+    f' = A u'                     one batched SpMV — no solver in the loop
+
+(f', u') is an EXACT pair of the operator by construction (machine eps —
+tests/test_expand.py checks it against the dense oracle), so labels/s
+decouples from Krylov iterations: each retired anchor fans into K derived
+labels for the price of one `dia_spmv` batch row.
+
+Dispatch shape: one expansion WAVE re-labels every anchor of a retired
+lockstep row at once — the (K+1)·anchors perturbed solutions stack on the
+batch axis of a single `dia_spmv_batched_pallas`-family dispatch, with the
+anchor operators broadcast by the `op_stride` index-arithmetic path
+(kernels/ops.py) instead of K+1 materialized copies. Anchors enter the wave
+DEVICE-RESIDENT (the lockstep solver's `x_device` stash / the trajectory
+march's live state) and results accumulate as device arrays until
+`result()` drains them in one bulk fetch — expansion adds ZERO extra H2D
+traffic and ZERO host syncs to the solve loop (tests/test_transfer_guard.py
+runs a wave under `jax.transfer_guard("disallow")`).
+
+Slot 0 of every anchor's fan-out is the anchor itself, re-labeled under the
+same manufactured-RHS convention (f = A u — for a converged anchor this
+equals its b to solver tolerance, and for θ-scheme steps with zero source
+it IS the previous state, so trajectory expansion emits genuine one-step
+pairs). Provenance rides per label: `anchor_idx` (original sample index),
+`kind` ("solved" for slot 0, "expanded" otherwise), `t` (snapshot time;
+0 for steady systems).
+
+Determinism: slot j of anchor i at step s draws from
+`fold_in(fold_in(fold_in(PRNGKey(seed), i), s), j)` — independent of
+engine, batch shape, wave order and K (the `pde/grf.py` fold_in contract),
+so sequential and lockstep engines emit identical labels (combine=0;
+convex combinations pair each anchor with its chain PREDECESSOR, which is
+an engine-dependent notion — documented, not an invariant).
+
+Health interplay (core/robust.py): only healthy anchors expand — a wave
+masks unhealthy/padded rows out at drain time, `drop_anchor` retracts every
+label of an anchor whose trajectory was tainted after the fact, and the
+requeue path re-expands from the re-solved anchor (labels appended after
+the drop survive it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.kernels import ops
+from repro.pde.dia import Stencil5
+from repro.pde.grf import GRFSpec, sample_grf
+
+MODES = ("additive", "multiplicative")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpandConfig:
+    """The label-expansion axis on `SKRConfig` / `TrajConfig` (None = off —
+    bitwise-identical pre-expansion pipeline).
+
+    k         : derived labels per anchor (the anchor itself ships too, so
+                each healthy anchor yields k+1 labels)
+    mode      : "additive" (u + amplitude·std(u)·g) or "multiplicative"
+                (u·(1 + amplitude·g)) GRF perturbation
+    amplitude : perturbation strength relative to the anchor field
+    combine   : fraction of the k slots drawn as convex combinations with
+                the chain's previous healthy anchor instead (0 disables;
+                round(combine·k) slots, falling back to perturbation for a
+                chain's first anchor)
+    seed      : expansion key seed (independent of the datagen key)
+    grf_alpha/grf_tau: smoothness of the perturbation fields (the same
+                Matérn-like spectrum the samplers use; higher alpha /
+                lower tau = smoother perturbations)
+    boundary  : "dirichlet" multiplies perturbation fields by a
+                sin(πx)·sin(πy) bubble before normalization — the FFT GRF
+                draws are periodic and carry full amplitude at the grid
+                edge, while solutions of the Dirichlet families decay to
+                the boundary; untapered perturbations push u' off the
+                solution manifold there, which measurably degrades FNO
+                training on expanded labels. "none" disables (periodic /
+                Neumann problems).
+    """
+
+    k: int = 8
+    mode: str = "additive"
+    amplitude: float = 0.1
+    combine: float = 0.0
+    seed: int = 0
+    grf_alpha: float = 3.0
+    grf_tau: float = 5.0
+    boundary: str = "dirichlet"
+
+    def __post_init__(self):
+        assert self.k >= 1, self.k
+        assert self.mode in MODES, self.mode
+        assert self.amplitude > 0.0, self.amplitude
+        assert 0.0 <= self.combine <= 1.0, self.combine
+        assert self.boundary in ("dirichlet", "none"), self.boundary
+
+    @property
+    def k_comb(self) -> int:
+        return int(round(self.combine * self.k))
+
+
+@dataclasses.dataclass
+class LabelSet:
+    """The expanded dataset: (f, u) pairs with per-label provenance.
+
+    Every row satisfies f = A_{anchor} u to machine eps by construction.
+    `kind` is "solved" for the anchor rows (slot 0 of each fan-out) and
+    "expanded" for manufactured rows; `anchor_idx` is the ORIGINAL sample
+    index of the anchor; `t` the snapshot time (0.0 for steady systems).
+    """
+
+    f: np.ndarray           # (L, nx, ny) manufactured inputs  A u'
+    u: np.ndarray           # (L, nx, ny) solution-space labels u'
+    anchor_idx: np.ndarray  # (L,) int64
+    kind: np.ndarray        # (L,) "solved" | "expanded"
+    t: np.ndarray           # (L,) float64 snapshot time
+
+    def __len__(self) -> int:
+        return int(self.f.shape[0])
+
+    @classmethod
+    def empty(cls, nx: int, ny: int) -> "LabelSet":
+        return cls(f=np.zeros((0, nx, ny)), u=np.zeros((0, nx, ny)),
+                   anchor_idx=np.zeros(0, np.int64),
+                   kind=np.zeros(0, dtype="<U8"), t=np.zeros(0))
+
+    @classmethod
+    def concat(cls, parts: list) -> "LabelSet":
+        return cls(*(np.concatenate([getattr(p, f.name) for p in parts])
+                     for f in dataclasses.fields(cls)))
+
+    def select(self, mask: np.ndarray) -> "LabelSet":
+        return LabelSet(*(getattr(self, f.name)[mask]
+                          for f in dataclasses.fields(LabelSet)))
+
+
+# --------------------------------------------------------- device programs
+# Compiled once per (config, grid) and SHARED across Expander instances —
+# a fresh Expander is built per generation run (per chunk, per lockstep
+# batch), and per-instance `jax.jit` closures would recompile the wave
+# programs every run, burying the per-label cost under ~seconds of
+# compilation. ExpandConfig and GRFSpec are frozen/hashable, so they key
+# the cache directly.
+
+@functools.lru_cache(maxsize=None)
+def _perturb_program(cfg: ExpandConfig, spec: GRFSpec):
+    k, k_comb = cfg.k, cfg.k_comb
+    amp = float(cfg.amplitude)
+    base_key = jax.random.PRNGKey(cfg.seed)
+    if cfg.boundary == "dirichlet":
+        # interior-point Dirichlet bubble: tapers the periodic GRF draws
+        # to zero at the (implicit) boundary like the solutions they
+        # perturb; a trace-time constant folded into the jitted program
+        bx = np.sin(np.pi * (np.arange(spec.nx) + 1) / (spec.nx + 1))
+        by = np.sin(np.pi * (np.arange(spec.ny) + 1) / (spec.ny + 1))
+        taper = jnp.asarray(bx[:, None] * by[None, :])
+    else:
+        taper = None
+
+    def one(uf, i, s, up, hp):
+        """uf (nx, ny) anchor; i, s scalars (anchor index, step);
+        up (nx, ny) previous same-chain anchor; hp scalar bool.
+        Returns (k+1, nx, ny): [anchor, k perturbed/combined]."""
+        key = jax.random.fold_in(jax.random.fold_in(base_key, i), s)
+        keys = jax.vmap(lambda j: jax.random.fold_in(key, j))(
+            jnp.arange(k))
+        g = jax.vmap(lambda kk: sample_grf(spec, kk)[0])(keys)
+        if taper is not None:
+            g = g * taper[None]
+        g = g / (jnp.std(g, axis=(1, 2), keepdims=True) + 1e-30)
+        if cfg.mode == "additive":
+            pert = uf[None] + amp * jnp.std(uf) * g
+        else:
+            pert = uf[None] * (1.0 + amp * g)
+        if k_comb > 0:
+            lam = jax.vmap(
+                lambda kk: jax.random.uniform(kk, dtype=uf.dtype))(
+                    keys[:k_comb])[:, None, None]
+            comb = lam * uf[None] + (1.0 - lam) * up[None]
+            pert = pert.at[:k_comb].set(
+                jnp.where(hp, comb, pert[:k_comb]))
+        return jnp.concatenate([uf[None], pert], axis=0)
+
+    return jax.jit(jax.vmap(one))
+
+
+@functools.lru_cache(maxsize=None)
+def _spmv_program(kp1: int, use_kernel: bool):
+    def spmv(coeffs, u_flat):
+        # DIA export + strided SpMV fused in ONE jitted program (the
+        # export indexes stencil bands — host ints, fine under jit)
+        return ops.dia_spmv(Stencil5(coeffs).to_dia(), u_flat,
+                            op_stride=kp1, use_kernel=use_kernel)
+
+    return jax.jit(spmv)
+
+
+@functools.lru_cache(maxsize=None)
+def _row_take():
+    return jax.jit(lambda a, w: a[w])   # guard-safe row gather
+
+
+@functools.lru_cache(maxsize=None)
+def _zero_field(nx: int, ny: int):
+    # jitted constant: no host→device scalar transfer under guard
+    return jax.jit(lambda: jnp.zeros((nx, ny)))()
+
+
+class Expander:
+    """Accumulates expansion waves device-side; drains once at finalize.
+
+    One instance serves one generation run (all chains). Wave inputs stay
+    on device; per-wave host metadata (anchor indices, health mask, times,
+    chain ids) is plain numpy the caller already owns — submitting a wave
+    performs no host sync and no H2D transfer beyond what the caller
+    already uploaded for the solve itself.
+    """
+
+    def __init__(self, cfg: ExpandConfig, nx: int, ny: int,
+                 use_kernel: bool = False):
+        self.cfg = cfg
+        self.nx, self.ny = int(nx), int(ny)
+        self.use_kernel = use_kernel
+        self.spec = GRFSpec(nx=self.nx, ny=self.ny, alpha=cfg.grf_alpha,
+                            tau=cfg.grf_tau)
+        self._perturb = _perturb_program(cfg, self.spec)
+        self._spmv = _spmv_program(cfg.k + 1, use_kernel)
+        self._take = _row_take()
+        self._records: list = []       # per-wave device arrays + host meta
+        self._drops: dict = {}         # anchor_idx -> seq at drop time
+        self._seq = 0
+        self._prev: dict = {}          # chain -> (u_dev (nx,ny), anchor)
+        self._restored: Optional[LabelSet] = None
+        self._cache = None             # drained LabelSet (+chain), memoized
+        self._t0 = time.perf_counter()
+
+    def _wave_arrays(self, coeffs, u, idx_dev, step_dev, up, hp):
+        """(u_all, f_all) each (B, k+1, nx, ny), device-resident. One
+        perturbation dispatch + ONE strided SpMV dispatch for the whole
+        wave (B anchors × (k+1) vectors against B operators)."""
+        kp1 = self.cfg.k + 1
+        u_all = self._perturb(u, idx_dev, step_dev, up, hp)
+        bsz = u_all.shape[0]
+        f = self._spmv(coeffs, u_all.reshape(bsz * kp1, -1))
+        return u_all, f.reshape(bsz, kp1, self.nx, self.ny)
+
+    # ------------------------------------------------------------- waves
+    def wave(self, coeffs, u, idx, live, chain=None, t=0.0, step=0):
+        """Expand one retired lockstep row.
+
+        coeffs (B, 5, nx, ny) and u (B, nx, ny) DEVICE-resident (the row's
+        operator stack / the solver's device solution); idx (B,) np int
+        original anchor indices; live (B,) np bool — healthy, non-padded
+        rows (dead rows ride the dispatch as zero work and are masked out
+        at drain); chain (B,) np int owning chain per row (defaults to the
+        row index); t scalar or (B,) snapshot times; step scalar or (B,)
+        int key-derivation step (0 for steady systems)."""
+        idx = np.asarray(idx, np.int64)
+        live = np.asarray(live, bool)
+        bsz = idx.shape[0]
+        chain = (np.arange(bsz) if chain is None
+                 else np.asarray(chain, np.int64))
+        t = np.broadcast_to(np.asarray(t, np.float64), (bsz,)).copy()
+        step_np = np.broadcast_to(np.asarray(step, np.int64), (bsz,)).copy()
+        # explicit device placement (a no-op for the already-resident
+        # lockstep inputs; permitted under jax.transfer_guard("disallow"))
+        u = jnp.asarray(u).reshape(bsz, self.nx, self.ny)
+        up, hp = self._gather_prev(chain, live, u)
+        u_all, f_all = self._wave_arrays(
+            coeffs, u, jnp.asarray(idx), jnp.asarray(step_np), up, hp)
+        self._push(u_all, f_all, idx, live, chain, t)
+
+    def expand_one(self, coeffs, u, i, chain=0, t=0.0, step=0):
+        """Sequential-engine fan-out of ONE healthy anchor (a B=1 wave —
+        same device program, same keys, so labels match the lockstep waves
+        element-for-element at combine=0)."""
+        coeffs = jnp.asarray(coeffs).reshape(1, 5, self.nx, self.ny)
+        u = jnp.asarray(u).reshape(1, self.nx, self.ny)
+        self.wave(coeffs, u, np.array([i]), np.array([True]),
+                  chain=np.array([chain]), t=t, step=step)
+
+    def _gather_prev(self, chain, live, u):
+        """(u_prev (B, nx, ny), has_prev (B,)) for convex-combination
+        slots, then roll the chain state forward with this wave's live
+        anchors. With combine=0 the program never reads them, so no state
+        is tracked at all (and no per-row device gathers happen — the
+        transfer-guard tests run this path)."""
+        zero = _zero_field(self.nx, self.ny)
+        bsz = len(chain)
+        if self.cfg.k_comb == 0:
+            return (jnp.broadcast_to(zero, (bsz, self.nx, self.ny)),
+                    jnp.asarray(np.zeros(bsz, bool)))
+        prevs, flags = [], np.zeros(bsz, bool)
+        for w, c in enumerate(chain):
+            got = self._prev.get(int(c))
+            flags[w] = got is not None
+            prevs.append(got if got is not None else zero)
+        for w, c in enumerate(chain):
+            if live[w]:
+                # jnp.asarray(w) is an EXPLICIT transfer (guard-permitted);
+                # the row gather itself runs inside jit
+                self._prev[int(c)] = self._take(u, jnp.asarray(w))
+        return jnp.stack(prevs), jnp.asarray(flags)
+
+    def _push(self, u_all, f_all, idx, live, chain, t):
+        self._records.append(dict(u=u_all, f=f_all, idx=idx, live=live,
+                                  chain=chain, t=t, seq=self._seq))
+        self._seq += 1
+        self._cache = None
+        obs.counter_add("expand.waves")
+        obs.counter_add("expand.labels",
+                        int(live.sum()) * (self.cfg.k + 1))
+
+    # ------------------------------------------------------------ health
+    def drop_anchor(self, i: int):
+        """Retract every label of anchor `i` emitted SO FAR (tainted
+        trajectory, excluded anchor). Labels appended afterwards — the
+        requeue's re-expansion — survive."""
+        self._drops[int(i)] = self._seq
+        self._cache = None
+
+    # ----------------------------------------------------------- drain
+    def _drain(self):
+        """One bulk fetch of every wave's device arrays → host LabelSet
+        (+ per-label chain ids for per-chunk slicing). Memoized."""
+        if self._cache is not None:
+            return self._cache
+        kp1 = self.cfg.k + 1
+        fetch = jax.device_get([(r["u"], r["f"]) for r in self._records])
+        parts, chains = [], []
+        for r, (u_np, f_np) in zip(self._records, fetch):
+            keep = r["live"].copy()
+            for w in np.nonzero(keep)[0]:
+                d = self._drops.get(int(r["idx"][w]))
+                if d is not None and r["seq"] < d:
+                    keep[w] = False
+            if not keep.any():
+                continue
+            nb = int(keep.sum())
+            kind = np.full((nb, kp1), "expanded", dtype="<U8")
+            kind[:, 0] = "solved"
+            parts.append(LabelSet(
+                f=f_np[keep].reshape(nb * kp1, self.nx, self.ny),
+                u=u_np[keep].reshape(nb * kp1, self.nx, self.ny),
+                anchor_idx=np.repeat(r["idx"][keep], kp1),
+                kind=kind.reshape(-1),
+                t=np.repeat(r["t"][keep], kp1)))
+            chains.append(np.repeat(r["chain"][keep], kp1))
+        if self._restored is not None:
+            parts.insert(0, self._restored)
+            chains.insert(0, np.full(len(self._restored), -1, np.int64))
+        if parts:
+            out = (LabelSet.concat(parts), np.concatenate(chains))
+        else:
+            out = (LabelSet.empty(self.nx, self.ny),
+                   np.zeros(0, np.int64))
+        self._cache = out
+        return out
+
+    def result(self, chain: Optional[int] = None) -> LabelSet:
+        """The accumulated LabelSet (all chains, or one chain's slice).
+        Updates the `expand.labels_per_second` gauge against wall time
+        since construction."""
+        labels, chains = self._drain()
+        if obs.enabled():
+            dt = max(time.perf_counter() - self._t0, 1e-9)
+            obs.gauge_set("expand.labels_per_second", len(labels) / dt)
+        if chain is None:
+            return labels
+        return labels.select(chains == chain)
+
+    # ------------------------------------------------------- checkpoints
+    def ckpt_arrays(self) -> dict:
+        """Flat npz-ready snapshot of the labels emitted so far (the
+        resumable pipeline folds these into its atomic snapshots)."""
+        labels = self._drain()[0]
+        return {"exp_f": labels.f, "exp_u": labels.u,
+                "exp_anchor": labels.anchor_idx, "exp_kind": labels.kind,
+                "exp_t": labels.t}
+
+    def restore(self, state: dict):
+        """Adopt a checkpoint's labels (items completed before the resume
+        point); waves for the remaining items append after them."""
+        self._restored = LabelSet(
+            f=state["exp_f"], u=state["exp_u"],
+            anchor_idx=np.asarray(state["exp_anchor"], np.int64),
+            kind=np.asarray(state["exp_kind"]),
+            t=np.asarray(state["exp_t"], np.float64))
+        self._cache = None

@@ -47,10 +47,16 @@ imports a PDE. The adapter protocol:
   begin_lockstep(subs)             allocate per-chain output buffers
   prepare_row(t, idx) -> prepared  HOST-side row assembly (prefetchable)
   execute_row(solver, t, idx, prepared)   device solve(s) + writeback
+  expand_row / expand_item         POST-SOLVE label expansion phase
+                                   (core/expand.py — fan retired anchors
+                                   into derived labels; default no-op)
   chunk_result(w) -> result        finalize chain w
   alloc_full / restore_outputs / solve_item / full_result
                                    the resumable single-chain path
   item_noun, ckpt_key              checkpoint format compatibility
+  ckpt_extra / ckpt_required / restore_extra
+                                   extra snapshot arrays (expanded labels
+                                   + provenance ride the atomic npz)
 
 Solver construction and the lockstep-compatibility predicate (`batchable`,
 `make_solver`, `make_lockstep_solver`) are shared scaffolding on the
@@ -117,6 +123,33 @@ class WorkAdapter:
         """Containment hook: re-solve items the lockstep engines quarantined
         mid-dispatch (fresh chain, escalation ladder) before results
         finalize. Default no-op; workload adapters override."""
+
+    # ---- label expansion (core/expand.py): post-solve phase hooks ----
+    # Default no-ops — the pipeline calls them unconditionally so the
+    # expansion stage is a SCHEDULED phase, not workload-private plumbing.
+    # SteadyWork expands retired anchors here; TrajectoryWork expands
+    # inside its row march instead (the per-step operator A(t) is only
+    # live there) and leaves these as no-ops.
+    def expand_item(self, i: int, solver):
+        """After one sequential solve: fan item `i` into derived labels."""
+
+    def expand_row(self, solver, t: int, idx: np.ndarray):
+        """After one lockstep row retires: expand the row's anchors in one
+        device wave (operator stack + solutions still device-resident)."""
+
+    # ---- checkpoint extras (expanded labels + provenance) -------------
+    def ckpt_extra(self) -> dict:
+        """Extra arrays folded into every resumable snapshot."""
+        return {}
+
+    def ckpt_required(self) -> tuple:
+        """Extra REQUIRED checkpoint fields (schema validation): when
+        expansion is on, a snapshot without labels must not load — losing
+        the completed items' labels silently."""
+        return ()
+
+    def restore_extra(self, state: dict):
+        """Adopt the extra arrays of a loaded snapshot."""
 
 
 class PhaseMask:
@@ -199,6 +232,8 @@ def _run_lockstep(work, subs, solver, prefetch: bool = True):
             prepared = _prepare_row_traced(work, t, idx)
             with obs.span("execute_row", cat="pipeline", row=t):
                 work.execute_row(solver, t, idx, prepared)
+            with obs.span("expand_row", cat="pipeline", row=t):
+                work.expand_row(solver, t, idx)
         return
     with ThreadPoolExecutor(max_workers=1,
                             thread_name_prefix="prefetch") as ex:
@@ -213,6 +248,10 @@ def _run_lockstep(work, subs, solver, prefetch: bool = True):
                 fut = ex.submit(_prepare_row_traced, work, t + 1, idx)
             with obs.span("execute_row", cat="pipeline", row=t):
                 work.execute_row(solver, t, cur_idx, prepared)
+            # post-solve label expansion: submits device work only (the
+            # wave), so it overlaps the prefetch thread like the solve did
+            with obs.span("expand_row", cat="pipeline", row=t):
+                work.expand_row(solver, t, cur_idx)
 
 
 def run_chunked(work, key, num: int, workers: int, engine: str,
@@ -296,13 +335,16 @@ def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
         with obs.span("checkpoint", cat="pipeline", pos=int(pos)):
             ckpt.save(pos=pos, order=order, u_carry=encode_carry(solver),
                       iters=np.asarray(iters), times=np.asarray(times),
-                      **{work.ckpt_key: work.outputs})
+                      **{work.ckpt_key: work.outputs},
+                      **work.ckpt_extra())
 
-    required = ("pos", "order", "iters", "times", "u_carry", work.ckpt_key)
+    required = ("pos", "order", "iters", "times", "u_carry", work.ckpt_key) \
+        + tuple(work.ckpt_required())
     state = ckpt.load(required=required) if enabled else None
     if state is not None and len(state["order"]) == num:
         order = state["order"]
         work.restore_outputs(state[work.ckpt_key])
+        work.restore_extra(state)
         start_pos = int(state["pos"])
         solver.u_carry = decode_carry(state)
         iters, times = list(state["iters"]), list(state["times"])
@@ -325,6 +367,8 @@ def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
         i = int(order[pos])
         with obs.span("solve_item", cat="pipeline", pos=pos):
             sts = list(work.solve_item(i, solver, stats))
+        with obs.span("expand_item", cat="pipeline", pos=pos):
+            work.expand_item(i, solver)
         for st in sts:
             iters.append(st.iterations)
             times.append(st.wall_time_s)

@@ -5,7 +5,13 @@ Figure-1 pipeline, end to end:
   2-3. export PDE → linear systems                         pde/
   c.  SORT the systems (Algorithm 1)                       core/sorting.py
   d.  solve sequentially with GCRO-DR recycling            solvers/gcrodr.py
-  e.  assemble the (input, solution) dataset               here
+  d'. EXPAND retired anchors into K derived labels each   core/expand.py
+      (operator action in solution space, DiffOAS —
+      optional `SKRConfig.expand` axis; f' = A u' by one
+      batched SpMV, no solver in the loop)
+  e.  assemble the (input, solution) dataset              here
+      (+ the expanded `DataGenResult.labels` LabelSet
+      with per-label provenance when d' is on)
 
 Time-dependent axis (beyond the paper's steady-state scope):
   t1. sample trajectory latents (IC + coefficient drift)  pde/timedep.py
@@ -86,6 +92,7 @@ import numpy as np
 from repro import obs
 from repro.core import pipeline
 from repro.core.ckpt import NpzCheckpointer
+from repro.core.expand import ExpandConfig, Expander, LabelSet
 from repro.core.robust import FaultPlan, RetryPolicy, is_healthy
 from repro.core.sorting import chain_length
 from repro.pde.problems import LinearProblem, ProblemFamily
@@ -111,6 +118,10 @@ class SKRConfig:
     # "flag": ship every label, non-trustworthy ones flagged in
     # DataGenResult.label_ok; "exclude": drop them from the emitted dataset.
     strict_labels: str = "flag"
+    # label expansion (core/expand.py): fan each healthy anchor solution
+    # into k derived (f' = A u', u') labels. None (the default) is OFF —
+    # the pipeline runs bitwise-identical to pre-expansion builds.
+    expand: Optional[ExpandConfig] = None
 
     def __post_init__(self):
         assert self.strict_labels in ("flag", "exclude"), self.strict_labels
@@ -129,6 +140,10 @@ class DataGenResult:
     # quarantined) — aligned with `solutions`' first axis; all-True after
     # strict_labels="exclude" filtering. None only from legacy callers.
     label_ok: Optional[np.ndarray] = None
+    # expanded labels (core/expand.py) when cfg.expand is set: every
+    # healthy anchor's k+1 (f' = A u', u') pairs with per-label provenance
+    # (anchor_idx / kind / t). None when expansion is off.
+    labels: Optional[LabelSet] = None
 
 
 def _index_problem(batch: LinearProblem, i: int) -> LinearProblem:
@@ -158,6 +173,14 @@ class SteadyWork(pipeline.WorkAdapter):
         self.feats: Optional[np.ndarray] = None
         self.outputs: Optional[np.ndarray] = None
         self.snapshots: list = []
+        self.expander: Optional[Expander] = None
+
+    def _make_expander(self) -> Optional[Expander]:
+        ecfg = getattr(self.cfg, "expand", None)
+        if ecfg is None:
+            return None
+        return Expander(ecfg, self.family.nx, self.family.ny,
+                        use_kernel=self.cfg.use_kernel)
 
     # ------------------------------------------------------- sampling
     def sample(self, key: jax.Array, num: int) -> np.ndarray:
@@ -169,6 +192,7 @@ class SteadyWork(pipeline.WorkAdapter):
     def alloc_full(self, num: int):
         self.outputs = np.zeros((num, self.family.nx, self.family.ny))
         self.label_ok = np.ones(num, dtype=bool)
+        self.expander = self._make_expander()
 
     def restore_outputs(self, arr: np.ndarray):
         # caveat: label_ok is not checkpointed — items completed BEFORE a
@@ -217,6 +241,41 @@ class SteadyWork(pipeline.WorkAdapter):
             self.snapshots.append((i, solver.u_carry.copy()))
         return [st]
 
+    # -------------------------------- label expansion (pipeline hooks)
+    def expand_item(self, i: int, solver):
+        """Post-solve phase, sequential engine: fan system `i`'s retired
+        anchor into k derived labels (only healthy anchors expand)."""
+        if self.expander is None or not self.label_ok[i]:
+            return
+        self.expander.expand_one(self.batch.op.coeffs[i], self.outputs[i],
+                                 i, chain=0)
+
+    def expand_row(self, solver, t: int, idx: np.ndarray):
+        """Post-solve phase, lockstep engines: ONE expansion wave over the
+        retired row — operator stack and solutions are still device-resident
+        (`prepare_row`'s upload / the solver's `x_device` stash), so the
+        wave adds no H2D traffic and no host syncs."""
+        if self.expander is None or self._row_ctx is None:
+            return
+        coeffs, healthy = self._row_ctx
+        self._row_ctx = None
+        if solver.x_device is None:
+            return
+        self.expander.wave(coeffs, solver.x_device,
+                           np.where(idx >= 0, idx, 0), healthy)
+
+    # ---- checkpoint extras: expanded labels + provenance ------------
+    def ckpt_extra(self) -> dict:
+        return self.expander.ckpt_arrays() if self.expander else {}
+
+    def ckpt_required(self) -> tuple:
+        return ("exp_f", "exp_u", "exp_anchor", "exp_kind", "exp_t") \
+            if self.expander else ()
+
+    def restore_extra(self, state: dict):
+        if self.expander is not None and "exp_f" in state:
+            self.expander.restore(state)
+
     def full_result(self, order, stats, sort_s, clen) -> DataGenResult:
         order = np.asarray(order)
         inputs = np.asarray(self.batch.no_input)
@@ -237,6 +296,7 @@ class SteadyWork(pipeline.WorkAdapter):
             chain_len=clen,
             recycle_snapshots=self.snapshots,
             label_ok=label_ok,
+            labels=self.expander.result() if self.expander else None,
         )
 
     # ---------------------------------------------- chunked engines
@@ -247,11 +307,15 @@ class SteadyWork(pipeline.WorkAdapter):
         stats = SequenceStats()
         nx, ny = self.family.nx, self.family.ny
         sols = np.zeros((len(sub), nx, ny))
+        expander = self._make_expander()   # chunk-local expansion chain
         for pos, i in enumerate(sub):
             x, st = self._solve_one(int(i), solver)
             sols[pos] = x.reshape(nx, ny)
             stats.append(st)
-        return self._chunk_result(sub, sols, stats)
+            if expander is not None and is_healthy(st):
+                expander.expand_one(self.batch.op.coeffs[int(i)], sols[pos],
+                                    int(i), chain=0)
+        return self._chunk_result(sub, sols, stats, expander=expander)
 
     def begin_lockstep(self, subs):
         from repro.pde.dia import Stencil5
@@ -264,6 +328,8 @@ class SteadyWork(pipeline.WorkAdapter):
         self._all_st5 = Stencil5(jnp.asarray(self.batch.op.coeffs))
         self._b_all = np.asarray(self.batch.b).reshape(num, -1)
         self._requeue = []   # (chain, row, original index) to re-solve
+        self.expander = self._make_expander()
+        self._row_ctx = None   # (row coeffs device, healthy mask) for waves
 
     def prepare_row(self, t: int, idx: np.ndarray):
         """HOST-side row assembly (runs on the prefetch thread): gather the
@@ -302,17 +368,23 @@ class SteadyWork(pipeline.WorkAdapter):
                 if i >= 0:
                     self.fault.apply_carry(int(i), solver, chain=w)
         xs, st_list = solver.solve_batch(ops, bvec, padded_rows=idx < 0)
+        healthy = np.zeros(len(idx), dtype=bool)
         for w, i in enumerate(idx):
             if i < 0:
                 continue                                 # padding row
             self._sols[w][t] = xs[w].reshape(nx, ny)
             self._stats[w].append(st_list[w])
+            healthy[w] = is_healthy(st_list[w])
             # any unhealthy solve (quarantined OR plain non-convergence)
             # goes to the requeue — the sequential engine would have walked
             # the ladder for it, so the lockstep engine must too
             if getattr(self.cfg, "retry", None) is not None \
                     and not is_healthy(st_list[w]):
                 self._requeue.append((w, t, int(i)))
+        if self.expander is not None:
+            # stash for the pipeline's expand_row phase: the row's operator
+            # stack (already device-resident from prepare_row) + health mask
+            self._row_ctx = (ops.base.coeffs, healthy)
 
     def requeue_quarantined(self):
         """Containment requeue: systems the lockstep engine quarantined
@@ -337,14 +409,22 @@ class SteadyWork(pipeline.WorkAdapter):
                 label=f"{self.item_noun} {i}")
             self._sols[w][t] = np.asarray(x).reshape(nx, ny)
             self._stats[w].per_system[t] = st
+            if self.expander is not None and is_healthy(st):
+                # the in-dispatch attempt was unhealthy, so the wave masked
+                # this anchor out; the recovered solve expands here instead
+                self.expander.drop_anchor(i)
+                self.expander.expand_one(self.batch.op.coeffs[i],
+                                         self._sols[w][t], i, chain=w)
         obs.counter_add("health.requeued", len(self._requeue))
         self._requeue = []
 
     def chunk_result(self, w: int) -> DataGenResult:
         return self._chunk_result(self._subs[w], self._sols[w],
-                                  self._stats[w])
+                                  self._stats[w], expander=self.expander,
+                                  chain=w)
 
-    def _chunk_result(self, sub, sols, stats) -> DataGenResult:
+    def _chunk_result(self, sub, sols, stats, expander=None,
+                      chain=None) -> DataGenResult:
         sub = np.asarray(sub, dtype=np.int64)
         label_ok = np.array([is_healthy(s) for s in stats.solved],
                             dtype=bool) if len(stats.solved) == len(sub) \
@@ -362,6 +442,7 @@ class SteadyWork(pipeline.WorkAdapter):
             chain_len=chain_length(self.feats, sub),
             recycle_snapshots=[],
             label_ok=label_ok,
+            labels=expander.result(chain=chain) if expander else None,
         )
 
 

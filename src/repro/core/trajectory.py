@@ -77,6 +77,7 @@ import numpy as np
 from repro import obs
 from repro.core import pipeline
 from repro.core.ckpt import NpzCheckpointer
+from repro.core.expand import ExpandConfig, Expander, LabelSet
 from repro.core.robust import FaultPlan, RetryPolicy, is_healthy
 from repro.core.sorting import chain_length
 from repro.pde.dia import Stencil5, stencil5_matvec
@@ -103,6 +104,11 @@ class TrajConfig:
     # ("flag", in TrajResult.label_ok) or are dropped ("exclude")
     retry: Optional[RetryPolicy] = RetryPolicy()
     strict_labels: str = "flag"
+    # label expansion (core/expand.py): re-label GRF-perturbed snapshots
+    # under the time-dependent operator at the snapshot's t — each healthy
+    # accepted save-step fans into k+1 (f' = A(t) u', u') pairs. None (the
+    # default) is OFF: bitwise-identical pre-expansion marching.
+    expand: Optional[ExpandConfig] = None
 
     def __post_init__(self):
         assert self.rhs_mode in ("full", "increment")
@@ -121,6 +127,10 @@ class TrajResult:
     # with a finite residual, none quarantined. All-True after
     # strict_labels="exclude" filtering; None only from legacy callers.
     label_ok: Optional[np.ndarray] = None
+    # expanded labels (core/expand.py) when cfg.expand is set: per-snapshot
+    # (f' = A(t) u', u') pairs with provenance — `anchor_idx` the trajectory
+    # index, `t` the snapshot time. None when expansion is off.
+    labels: Optional[LabelSet] = None
 
 
 _inc_rhs = jax.jit(lambda a, b, u: b - stencil5_matvec(a, u))
@@ -211,18 +221,26 @@ def _make_policy(family: TimeDepFamily):
 
 def _march_one(family: TimeDepFamily, spec: TrajectorySpec, cfg: TrajConfig,
                solver: GCRODRSolver, stats: Optional[SequenceStats] = None,
-               fault: Optional[FaultPlan] = None, tidx: int = 0
+               fault: Optional[FaultPlan] = None, tidx: int = 0,
+               expander: Optional[Expander] = None, chain: int = 0
                ) -> np.ndarray:
     """March ONE trajectory with the (stateful) solver; returns the
     (nt+1, nx, ny) field sequence at the uniform save grid. The carry in
     `solver` survives the call — that is the across-trajectory recycling.
+
+    `expander` (label expansion, core/expand.py): every healthy step's
+    snapshot fans into k+1 labels under the step's operator A(t) while the
+    operator and solution are still device-resident; the first unhealthy
+    step taints the trajectory — its labels so far are retracted and
+    expansion stops (the requeue path re-expands from the clean re-march).
 
     Classic families (fixed-Δt θ-scheme, M = I) take the ORIGINAL loop
     below, bitwise-unchanged; BDF2 / mass-matrix / adaptive families route
     through `_march_one_stepped`."""
     if not family.classic:
         return _march_one_stepped(family, spec, cfg, solver, stats,
-                                  fault=fault, tidx=tidx)
+                                  fault=fault, tidx=tidx,
+                                  expander=expander, chain=chain)
     nx, ny = family.nx, family.ny
     step1 = family.step_fn()
     out = np.zeros((family.nt + 1, nx, ny))
@@ -238,6 +256,13 @@ def _march_one(family: TimeDepFamily, spec: TrajectorySpec, cfg: TrajConfig,
         out[step + 1] = np.asarray(u)
         if stats is not None:
             stats.append(st)
+        if expander is not None:
+            if is_healthy(st):
+                expander.expand_one(a, u, tidx, chain=chain,
+                                    t=t_new, step=step)
+            else:
+                expander.drop_anchor(tidx)
+                expander = None
     return out
 
 
@@ -245,7 +270,8 @@ def _march_one_stepped(family: TimeDepFamily, spec: TrajectorySpec,
                        cfg: TrajConfig, solver: GCRODRSolver,
                        stats: Optional[SequenceStats] = None,
                        fault: Optional[FaultPlan] = None,
-                       tidx: int = 0) -> np.ndarray:
+                       tidx: int = 0, expander: Optional[Expander] = None,
+                       chain: int = 0) -> np.ndarray:
     """Generalized sequential march (BDF2 / mass matrices / adaptive Δt).
 
     Internal steps follow the step policy (PI controller or fixed); labels
@@ -284,9 +310,16 @@ def _march_one_stepped(family: TimeDepFamily, spec: TrajectorySpec,
                           pol.dt_pprev, boot, pol.naccept >= 2)
         if pol.decide(float(est), dt_step):
             state = cand
+            if expander is not None and not is_healthy(st):
+                # tainted: retract the trajectory's labels, stop expanding
+                expander.drop_anchor(tidx)
+                expander = None
             if dt_step == remaining:      # landed exactly on a save time
                 t = save_i * save_dt
                 out[save_i] = np.asarray(state.u)
+                if expander is not None:
+                    expander.expand_one(a, state.u, tidx, chain=chain,
+                                        t=t, step=save_i - 1)
                 save_i += 1
             else:
                 t += dt_step
@@ -321,6 +354,14 @@ class TrajectoryWork(pipeline.WorkAdapter):
         self.specs: Optional[TrajectorySpec] = None
         self.feats: Optional[np.ndarray] = None
         self.outputs: Optional[np.ndarray] = None
+        self.expander: Optional[Expander] = None
+
+    def _make_expander(self) -> Optional[Expander]:
+        ecfg = getattr(self.cfg, "expand", None)
+        if ecfg is None:
+            return None
+        return Expander(ecfg, self.family.nx, self.family.ny,
+                        use_kernel=self.cfg.use_kernel)
 
     # ------------------------------------------------------- sampling
     def sample(self, key: jax.Array, num: int) -> np.ndarray:
@@ -333,6 +374,7 @@ class TrajectoryWork(pipeline.WorkAdapter):
         self.outputs = np.zeros((num, self.family.nt + 1,
                                  self.family.nx, self.family.ny))
         self.label_ok = np.ones(num, dtype=bool)
+        self.expander = self._make_expander()
 
     def restore_outputs(self, arr: np.ndarray):
         # caveat (as in SteadyWork): label_ok is not checkpointed, so
@@ -350,10 +392,23 @@ class TrajectoryWork(pipeline.WorkAdapter):
         before = len(stats.per_system)
         self.outputs[i] = _march_one(self.family, _spec_at(self.specs, i),
                                      self.cfg, solver, stats,
-                                     fault=self.fault, tidx=i)
+                                     fault=self.fault, tidx=i,
+                                     expander=self.expander, chain=0)
         steps = stats.per_system[before:]
         self.label_ok[i] = self._steps_ok(steps)
         return steps
+
+    # ---- checkpoint extras: expanded labels + provenance ------------
+    def ckpt_extra(self) -> dict:
+        return self.expander.ckpt_arrays() if self.expander else {}
+
+    def ckpt_required(self) -> tuple:
+        return ("exp_f", "exp_u", "exp_anchor", "exp_kind", "exp_t") \
+            if self.expander else ()
+
+    def restore_extra(self, state: dict):
+        if self.expander is not None and "exp_f" in state:
+            self.expander.restore(state)
 
     def full_result(self, order, stats, sort_s, clen) -> TrajResult:
         order = np.asarray(order)
@@ -372,6 +427,7 @@ class TrajectoryWork(pipeline.WorkAdapter):
             sort_seconds=sort_s,
             chain_len=clen,
             label_ok=label_ok,
+            labels=self.expander.result() if self.expander else None,
         )
 
     # ---------------------------------------------- chunked engines
@@ -385,13 +441,16 @@ class TrajectoryWork(pipeline.WorkAdapter):
         trajs = np.zeros((len(sub), self.family.nt + 1,
                           self.family.nx, self.family.ny))
         label_ok = np.ones(len(sub), dtype=bool)
+        expander = self._make_expander()   # chunk-local expansion chain
         for pos, i in enumerate(sub):
             before = len(stats.per_system)
             trajs[pos] = _march_one(self.family, _spec_at(self.specs, int(i)),
                                     self.cfg, solver, stats,
-                                    fault=self.fault, tidx=int(i))
+                                    fault=self.fault, tidx=int(i),
+                                    expander=expander, chain=0)
             label_ok[pos] = self._steps_ok(stats.per_system[before:])
-        return self._chunk_result(sub, trajs, stats, label_ok)
+        return self._chunk_result(sub, trajs, stats, label_ok,
+                                  expander=expander)
 
     def begin_lockstep(self, subs):
         self._subs = subs
@@ -402,6 +461,7 @@ class TrajectoryWork(pipeline.WorkAdapter):
         self._label_ok = [np.ones(len(s), dtype=bool) for s in subs]
         self._requeue = []   # (chain, row, traj index, stats slice lo/hi)
         self._u0_all = jnp.asarray(self.specs.u0)
+        self.expander = self._make_expander()
         if self.family.classic:
             self._stepB = self.family.step_fn_batched()
         else:
@@ -471,11 +531,16 @@ class TrajectoryWork(pipeline.WorkAdapter):
             u = u + delta if cfg.rhs_mode == "increment" else delta
             u_np = np.asarray(u)                     # one sync per step
             frozen = False
+            exp_live = np.zeros(workers, dtype=bool)
             for w in np.nonzero(live)[0]:
                 self._trajs[w][j, step + 1] = u_np[w]
                 self._stats[w].append(st_list[w])
                 if not is_healthy(st_list[w]):
                     self._label_ok[w][j] = False
+                    if self.expander is not None:
+                        # taint retracts the trajectory's labels so far;
+                        # a healthy requeue re-march re-expands them
+                        self.expander.drop_anchor(int(idx[w]))
                     if getattr(cfg, "retry", None) is not None:
                         # one unhealthy step taints the whole trajectory:
                         # freeze the chain (padded from the next dispatch)
@@ -486,6 +551,13 @@ class TrajectoryWork(pipeline.WorkAdapter):
                                               len(self._stats[w].per_system)))
                         live[w] = False
                         frozen = True
+                elif self._label_ok[w][j]:
+                    exp_live[w] = True
+            if self.expander is not None and exp_live.any():
+                # ONE expansion wave over the step's retired snapshots —
+                # operator stack `st5` and state `u` still device-resident
+                self.expander.wave(st5.coeffs, u, idx, exp_live,
+                                   t=t_new, step=step)
             if frozen:
                 live_dev = jnp.asarray(live)[:, None, None]
 
@@ -603,6 +675,8 @@ class TrajectoryWork(pipeline.WorkAdapter):
                     self._requeue.append((int(w), j, int(idx[w]), starts[w],
                                           len(self._stats[w].per_system)))
                     self._label_ok[w][j] = False
+                    if self.expander is not None:
+                        self.expander.drop_anchor(int(idx[w]))
                     mask.finish(w)
                     continue
                 pol = pols[int(w)]
@@ -613,6 +687,8 @@ class TrajectoryWork(pipeline.WorkAdapter):
                 self._stats[w].append(st_list[w])
                 if ok and not is_healthy(st_list[w]):
                     self._label_ok[w][j] = False   # retry=None legacy mode
+                    if self.expander is not None:
+                        self.expander.drop_anchor(int(idx[w]))
                 if not ok:
                     continue
                 if dt_step[w] == remaining:   # landed on a save time
@@ -622,11 +698,24 @@ class TrajectoryWork(pipeline.WorkAdapter):
                     t[w] += dt_step[w]
             states = _sel_tree(jnp.asarray(accept), cand, states)
             u_np = np.asarray(states.u)       # one sync per iteration
+            exp_live = np.zeros(workers, dtype=bool)
+            t_arr = np.zeros(workers)
+            step_arr = np.zeros(workers, dtype=np.int64)
             for w in recorded:
+                if self._label_ok[w][j]:
+                    exp_live[w] = True
+                    t_arr[w] = save_i[w] * save_dt
+                    step_arr[w] = save_i[w] - 1
                 self._trajs[w][j, save_i[w]] = u_np[w]
                 save_i[w] += 1
                 if save_i[w] > nt:
                     mask.finish(w)
+            if self.expander is not None and exp_live.any():
+                # wave over the chains that LANDED on a save time this
+                # iteration — each at its own (t, step) phase; the step's
+                # operator stack `st5` + accepted state stay device-resident
+                self.expander.wave(st5.coeffs, states.u, idx, exp_live,
+                                   t=t_arr, step=step_arr)
 
     def requeue_quarantined(self):
         """Containment requeue: trajectories whose lockstep march hit an
@@ -642,9 +731,15 @@ class TrajectoryWork(pipeline.WorkAdapter):
         for w, j, i, lo, hi in sorted(self._requeue, key=lambda r: -r[3]):
             solver.u_carry = None    # cold per trajectory
             redo = SequenceStats()
+            if self.expander is not None:
+                # taint already dropped this anchor's wave labels; the
+                # re-march's expand_one calls append AFTER the drop seq,
+                # so a healthy re-march re-emits the full label fan-out
+                self.expander.drop_anchor(i)
             self._trajs[w][j] = _march_one(
                 self.family, _spec_at(self.specs, i), self.cfg, solver,
-                redo, fault=self.fault, tidx=i)
+                redo, fault=self.fault, tidx=i,
+                expander=self.expander, chain=w)
             if redo.per_system:
                 # fold the tainted attempts' work into the re-march's first
                 # record and mark the intervention, so summary()["health"]
@@ -662,9 +757,11 @@ class TrajectoryWork(pipeline.WorkAdapter):
 
     def chunk_result(self, w: int) -> TrajResult:
         return self._chunk_result(self._subs[w], self._trajs[w],
-                                  self._stats[w], self._label_ok[w])
+                                  self._stats[w], self._label_ok[w],
+                                  expander=self.expander, chain=w)
 
-    def _chunk_result(self, sub, trajs, stats, label_ok=None) -> TrajResult:
+    def _chunk_result(self, sub, trajs, stats, label_ok=None,
+                      expander=None, chain=None) -> TrajResult:
         sub = np.asarray(sub, dtype=np.int64)
         label_ok = np.ones(len(sub), dtype=bool) if label_ok is None \
             else np.asarray(label_ok, dtype=bool)
@@ -680,6 +777,7 @@ class TrajectoryWork(pipeline.WorkAdapter):
             sort_seconds=0.0,
             chain_len=chain_length(self.feats, sub),
             label_ok=label_ok,
+            labels=expander.result(chain=chain) if expander else None,
         )
 
 

@@ -136,3 +136,113 @@ def dia_spmv_batched_pallas(offsets, data: jax.Array, x: jax.Array, *,
         interpret=interpret,
     )(data, xpad)
     return y[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "op_stride",
+                                             "interpret", "block_n"))
+def dia_spmv_strided_pallas(offsets, data: jax.Array, x: jax.Array, *,
+                            op_stride: int, interpret: bool = True,
+                            block_n: int = 1024) -> jax.Array:
+    """A operators, each applied to `op_stride` consecutive x rows.
+
+    offsets: static tuple; data (A, ndiag, n); x (A·op_stride, n) →
+    y (A·op_stride, n), with y[b] = data[b // op_stride] @ x[b]. The
+    label-expansion shape: one anchor operator re-labels its K+1 perturbed
+    solutions without `DIA.take` ever materializing K+1 operator copies —
+    the broadcast is PURE INDEX ARITHMETIC in the BlockSpec index_map
+    (`b // op_stride`), so the same (1, ndiag, bn) operator block is simply
+    fetched for each of its op_stride batch rows and the kernel body is the
+    matched-batch body unchanged. Zero-padding semantics match
+    `dia_spmv_pallas`.
+    """
+    nops, _, n = data.shape
+    bsz = x.shape[0]
+    if bsz != nops * op_stride:
+        raise ValueError(f"strided batch mismatch: {nops} operators x "
+                         f"stride {op_stride} != {bsz} vectors")
+    pad = max(1, max(abs(o) for o in offsets))
+    bn, n_pad, nt = padded_tiles(n, block_n, "dia_spmv_strided")
+    if bsz * nt > _MAX_GRID_STEPS:
+        raise ValueError(f"dia_spmv_strided grid of {bsz}x{nt} steps exceeds "
+                         f"the sanity cap {_MAX_GRID_STEPS}")
+    if n_pad != n:
+        data = jnp.pad(data, ((0, 0), (0, 0), (0, n_pad - n)))
+    xpad = jnp.pad(x, ((0, 0), (pad, pad + (n_pad - n))))
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel_batched, offsets=tuple(offsets), pad=pad,
+                          bn=bn),
+        grid=(bsz, nt),
+        in_specs=[
+            pl.BlockSpec((1, len(offsets), bn),
+                         lambda b, t: (b // op_stride, 0, t)),
+            pl.BlockSpec((1, n_pad + 2 * pad), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda b, t: (b, t)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_pad), out_dtype),
+        interpret=interpret,
+    )(data, xpad)
+    return y[:, :n]
+
+
+def _kernel_gather(idx_ref, data_ref, xpad_ref, o_ref, *, offsets, pad, bn):
+    b, t = pl.program_id(0), pl.program_id(1)
+    i = idx_ref[b]
+    acc = jnp.zeros((1, bn), o_ref.dtype)
+    base = t * bn
+    for d, off in enumerate(offsets):
+        xs = pl.load(xpad_ref, (pl.dslice(0, 1),
+                                pl.dslice(base + pad + off, bn)))
+        row = pl.load(data_ref, (pl.dslice(i, 1), pl.dslice(d, 1),
+                                 pl.dslice(base, bn)))
+        acc = acc + row[0] * xs
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "interpret",
+                                             "block_n"))
+def dia_spmv_gather_pallas(offsets, data: jax.Array, x: jax.Array,
+                           op_index: jax.Array, *, interpret: bool = True,
+                           block_n: int = 1024) -> jax.Array:
+    """Arbitrary operator-per-vector assignment: y[b] = data[op_index[b]] @
+    x[b].
+
+    offsets: static tuple; data (A, ndiag, n); x (B, n); op_index (B,)
+    int32 — the general companion of the strided path for non-uniform
+    fan-out (ragged expansion waves, mixed re-label batches). The operator
+    stack stays fully VMEM-resident ((A, ndiag, n_pad) block, A is small:
+    one operator per anchor) and each grid step dynamically slices its
+    assigned operator's rows with `pl.ds` — on production TPU the idiomatic
+    form moves `op_index` into `PrefetchScalarGridSpec` scalar prefetch so
+    the index feeds the data BlockSpec's index_map instead; the dynamic
+    in-kernel slice below is the portable/interpret form of the same
+    access. Zero-padding semantics match `dia_spmv_pallas`.
+    """
+    nops, ndiag, n = data.shape
+    bsz = x.shape[0]
+    pad = max(1, max(abs(o) for o in offsets))
+    bn, n_pad, nt = padded_tiles(n, block_n, "dia_spmv_gather")
+    if bsz * nt > _MAX_GRID_STEPS:
+        raise ValueError(f"dia_spmv_gather grid of {bsz}x{nt} steps exceeds "
+                         f"the sanity cap {_MAX_GRID_STEPS}")
+    if n_pad != n:
+        data = jnp.pad(data, ((0, 0), (0, 0), (0, n_pad - n)))
+    xpad = jnp.pad(x, ((0, 0), (pad, pad + (n_pad - n))))
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
+    op_index = op_index.astype(jnp.int32)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel_gather, offsets=tuple(offsets), pad=pad,
+                          bn=bn),
+        grid=(bsz, nt),
+        in_specs=[
+            pl.BlockSpec((bsz,), lambda b, t: (0,)),
+            pl.BlockSpec((nops, ndiag, n_pad), lambda b, t: (0, 0, 0)),
+            pl.BlockSpec((1, n_pad + 2 * pad), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda b, t: (b, t)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_pad), out_dtype),
+        interpret=interpret,
+    )(op_index, data, xpad)
+    return y[:, :n]

@@ -30,7 +30,8 @@ def stencil5_matvec(coeffs: jax.Array, x: jax.Array, *, use_kernel: bool = False
 
 
 def dia_spmv(dia, x: jax.Array, *, use_kernel: bool = False,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool = True, op_stride: int | None = None,
+             op_index: jax.Array | None = None) -> jax.Array:
     """DIA sparse matvec on flat (…, n) vectors.
 
     A matched batch (data (B, ndiag, n) against x (B, n)) routes through the
@@ -39,12 +40,34 @@ def dia_spmv(dia, x: jax.Array, *, use_kernel: bool = False,
     boundary; inside `jax.vmap` (the lockstep solver's cycles) tracer shapes
     are per-chain, and it is Pallas's own vmap batching rule that lifts the
     single kernel to an equivalent batched grid.
+
+    Broadcastable operator stacks (a SMALLER data (A, ndiag, n) against a
+    LARGER x (B, n), the label-expansion fan-out) never materialize per-row
+    operator copies:
+      op_stride=s  uniform fan-out, B = A·s, y[b] = data[b // s] @ x[b]
+                   (index arithmetic in the kernel's BlockSpec; the ref
+                   path broadcasts a (A, 1, …) reshape)
+      op_index     arbitrary (B,) int assignment, y[b] = data[op_index[b]]
+                   @ x[b] (in-kernel dynamic slice; ref path gathers)
+    The two are mutually exclusive; with neither, shapes must match or
+    broadcast as before.
     """
+    if op_stride is not None and op_index is not None:
+        raise ValueError("op_stride and op_index are mutually exclusive")
     if use_kernel:
         from repro.kernels.dia_spmv import (dia_spmv_batched_pallas,
-                                            dia_spmv_pallas)
+                                            dia_spmv_gather_pallas,
+                                            dia_spmv_pallas,
+                                            dia_spmv_strided_pallas)
 
         data = dia.data
+        if op_stride is not None:
+            return dia_spmv_strided_pallas(dia.offsets, data, x,
+                                           op_stride=op_stride,
+                                           interpret=interpret)
+        if op_index is not None:
+            return dia_spmv_gather_pallas(dia.offsets, data, x, op_index,
+                                          interpret=interpret)
         if data.ndim == 3 and x.ndim == 2 and data.shape[0] == x.shape[0]:
             return dia_spmv_batched_pallas(dia.offsets, data, x,
                                            interpret=interpret)
@@ -53,6 +76,14 @@ def dia_spmv(dia, x: jax.Array, *, use_kernel: bool = False,
             for _ in range(x.ndim - 1):
                 fn = jax.vmap(fn)
         return fn(data, x)
+    if op_stride is not None:
+        nops = dia.data.shape[0]
+        n = dia.data.shape[-1]
+        y = ref.dia_spmv(dia.offsets, dia.data[:, None],
+                         x.reshape(nops, op_stride, n))
+        return y.reshape(nops * op_stride, n)
+    if op_index is not None:
+        return ref.dia_spmv(dia.offsets, dia.data[op_index], x)
     return ref.dia_spmv(dia.offsets, dia.data, x)
 
 

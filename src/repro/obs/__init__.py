@@ -39,7 +39,7 @@ from repro.obs.trace import NULL_SPAN, Tracer
 
 __all__ = [
     "enable", "disable", "enabled", "span", "instant", "counter",
-    "counter_add", "tracer", "registry", "record_dispatch",
+    "counter_add", "gauge_set", "tracer", "registry", "record_dispatch",
     "krylov_capacity",
     "delta_enabled", "summary", "export_chrome_trace", "export_jsonl",
     "KrylovTelemetry", "TelemetryConfig", "drain_chain", "ring_order",
@@ -120,6 +120,15 @@ def counter_add(name: str, value: float = 1.0):
     r = _REGISTRY
     if r is not None:
         r.counter_add(name, value)
+
+
+def gauge_set(name: str, value: float):
+    """Set a last-value registry gauge; free no-op when disabled. The
+    label-expansion stage reports its headline rate through this
+    (`expand.labels_per_second`)."""
+    r = _REGISTRY
+    if r is not None:
+        r.gauge_set(name, value)
 
 
 def record_dispatch(live: int, total: int, iters=None, cycles: int = 0):

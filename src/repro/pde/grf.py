@@ -1,10 +1,20 @@
 """Gaussian random fields (GRF) — the parameter sampler behind the Darcy and
-Helmholtz families (paper §6.1, App. D.2).
+Helmholtz families (paper §6.1, App. D.2), and the solution-space
+perturbation source of the label-expansion stage (core/expand.py).
 
 Spectral (Matérn-like) sampling: white noise shaped by the power spectrum
     sqrt_spec(k) ∝ scale * (4π²|k|² + τ²)^(−α/2)
 via FFT. The white-noise tensor is the *latent*; its low-frequency block is
 the sorting feature ("parameter matrix" P^(i) of Algorithm 1).
+
+Key handling: batched draws derive per-draw keys with `jax.random.fold_in`
+on the draw index, NOT `jax.random.split` on the batch size — so draw i of
+`sample_grf_batch(spec, key, n)` depends only on (key, i), never on n.
+That makes batched draws prefix-stable (the first m draws of a size-n
+batch equal a size-m batch), identical whether the per-draw sampling runs
+under `jax.vmap` or in a python loop, and lets consumers that fan keys out
+themselves (the seeded expansion waves) reproduce any single draw from its
+index alone.
 """
 from __future__ import annotations
 
@@ -33,16 +43,19 @@ def _sqrt_spectrum(spec: GRFSpec, dtype=jnp.float64) -> jax.Array:
     return s.at[0, 0].set(0.0)  # zero-mean field
 
 
-@partial(jax.jit, static_argnums=0)
-def sample_grf(spec: GRFSpec, key: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Returns (field (nx, ny) real f64, latent_features (2·m·m,)).
+@partial(jax.jit, static_argnums=(0, 2))
+def sample_grf(spec: GRFSpec, key: jax.Array,
+               dtype=jnp.float64) -> tuple[jax.Array, jax.Array]:
+    """Returns (field (nx, ny) real, latent_features (2·m·m,)), both `dtype`.
 
     The latent is the low-frequency complex spectrum (real/imag stacked):
     nearby latents ⇒ nearby fields, which is exactly the property the sorting
-    pass exploits.
+    pass exploits. `dtype` selects the noise/spectrum precision — fp32 draws
+    run the FFT in complex64 (the label-expansion waves perturb fp64 anchors
+    but may sample perturbation fields in fp32).
     """
-    noise = jax.random.normal(key, (spec.nx, spec.ny), dtype=jnp.float64)
-    coef = jnp.fft.fft2(noise) * _sqrt_spectrum(spec)
+    noise = jax.random.normal(key, (spec.nx, spec.ny), dtype=dtype)
+    coef = jnp.fft.fft2(noise) * _sqrt_spectrum(spec, dtype=dtype)
     field = jnp.real(jnp.fft.ifft2(coef))
     m = spec.feature_modes
     low = coef[:m, :m]
@@ -50,6 +63,16 @@ def sample_grf(spec: GRFSpec, key: jax.Array) -> tuple[jax.Array, jax.Array]:
     return field, feats
 
 
-def sample_grf_batch(spec: GRFSpec, key: jax.Array, n: int):
-    keys = jax.random.split(key, n)
-    return jax.vmap(lambda k: sample_grf(spec, k))(keys)
+def batch_keys(key: jax.Array, n) -> jax.Array:
+    """Per-draw keys for a batch: key i = fold_in(key, i). `n` may be an
+    int or an index array (reproducing an arbitrary subset of draws)."""
+    idx = jnp.arange(n) if isinstance(n, int) else jnp.asarray(n)
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+
+
+def sample_grf_batch(spec: GRFSpec, key: jax.Array, n: int,
+                     dtype=jnp.float64):
+    """n independent draws, vmapped. Draw i equals
+    `sample_grf(spec, fold_in(key, i), dtype)` exactly — see the module
+    docstring for the reproducibility contract."""
+    return jax.vmap(lambda k: sample_grf(spec, k, dtype))(batch_keys(key, n))

@@ -477,6 +477,12 @@ class BatchedGCRODRSolver:
         self.u_carry: np.ndarray | None = None   # (B, n, k)
         self.carry_ok: np.ndarray | None = None  # (B,) bool
         self.systems_solved = 0
+        # x_device: the DEVICE-resident (B, n) solution of the most recent
+        # solve_batch — the finalize fetch returns numpy, but post-solve
+        # device consumers (the label-expansion waves, core/expand.py) read
+        # this stash instead of re-uploading x. Same buffer the numpy copy
+        # came from, so consuming it is bitwise-equivalent.
+        self.x_device = None
         self._inner: BatchedGCRODRSolver | None = None    # fp32 correction
         self._inner64: BatchedGCRODRSolver | None = None  # fp64 fallback
 
@@ -484,6 +490,7 @@ class BatchedGCRODRSolver:
         self.u_carry = None
         self.carry_ok = None
         self.systems_solved = 0
+        self.x_device = None
         self._inner = None
         self._inner64 = None
 
@@ -592,6 +599,7 @@ class BatchedGCRODRSolver:
         # the telemetry rings ride IN the same fetch — draining them costs
         # zero additional syncs, preserving host_syncs = 2 + cycles
         x_dev = _from_z_b(ops, s["z"])
+        self.x_device = x_dev
         fetch = (x_dev, s["rnorm"], s["iters"], s["matvecs"], s["cycles"],
                  s["stalled"], s["est"], s["u"], aux["bnorm"],
                  aux["zerob"], aux["pad"])
@@ -807,6 +815,7 @@ class BatchedGCRODRSolver:
                 fallback = True      # fp32 stagnated somewhere → fp64 batch
 
         # ---- finalize ----------------------------------------------------
+        self.x_device = x   # fp64 accumulated iterate, device-resident
         x_np = np.asarray(x)
         host_syncs += 1
         wall = time.perf_counter() - t0

@@ -91,6 +91,79 @@ def test_property_dia_spmv_matches_dense(n, seed):
                                atol=1e-10)
 
 
+# ----------------------------------------- dia spmv: broadcast operators
+# (label expansion's dispatch shape: K+1 vectors per operator via index
+#  arithmetic — `op_stride` — or an explicit per-vector `op_index` gather)
+
+@pytest.mark.parametrize("nops,stride", [(1, 4), (3, 5), (4, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_dia_spmv_strided_matches_ref(nops, stride, dtype):
+    from repro.pde.dia import DIA
+
+    n = 144
+    key = jax.random.PRNGKey(nops * 10 + stride)
+    offsets = (-12, -1, 0, 1, 12)
+    data = _rand(key, (nops, len(offsets), n), dtype)
+    x = _rand(jax.random.fold_in(key, 1), (nops * stride, n), dtype)
+    dia = DIA(offsets=offsets, data=data)
+    got = ops.dia_spmv(dia, x, op_stride=stride, use_kernel=True,
+                       interpret=True)
+    want = ref.dia_spmv(offsets, data[:, None], x.reshape(nops, stride, n)
+                        ).reshape(nops * stride, n)
+    tol = dict(rtol=1e-5, atol=1e-5) if dtype == jnp.float32 else \
+        dict(rtol=1e-12, atol=1e-12)
+    assert got.shape == (nops * stride, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["ref", "pallas"])
+def test_dia_spmv_strided_equals_materialized(use_kernel):
+    """op_stride broadcast ≡ repeating every operator stride times."""
+    from repro.pde.dia import DIA
+
+    nops, stride, n = 3, 4, 100
+    key = jax.random.PRNGKey(7)
+    offsets = (-10, -1, 0, 1, 10)
+    data = _rand(key, (nops, 5, n), jnp.float64)
+    x = _rand(jax.random.fold_in(key, 1), (nops * stride, n), jnp.float64)
+    got = ops.dia_spmv(DIA(offsets=offsets, data=data), x, op_stride=stride,
+                       use_kernel=use_kernel, interpret=True)
+    rep = jnp.repeat(data, stride, axis=0)
+    want = ops.dia_spmv(DIA(offsets=offsets, data=rep), x,
+                        use_kernel=use_kernel, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-13, atol=1e-13)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_dia_spmv_gather_matches_ref(dtype):
+    from repro.pde.dia import DIA
+
+    nops, bsz, n = 4, 9, 121
+    key = jax.random.PRNGKey(21)
+    offsets = (-11, -1, 0, 1, 11)
+    data = _rand(key, (nops, len(offsets), n), dtype)
+    x = _rand(jax.random.fold_in(key, 1), (bsz, n), dtype)
+    op_index = jnp.asarray(np.random.default_rng(0).integers(0, nops, bsz))
+    dia = DIA(offsets=offsets, data=data)
+    got = ops.dia_spmv(dia, x, op_index=op_index, use_kernel=True,
+                       interpret=True)
+    want = ref.dia_spmv(offsets, data[op_index], x)
+    tol = dict(rtol=1e-5, atol=1e-5) if dtype == jnp.float32 else \
+        dict(rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+def test_dia_spmv_broadcast_args_are_exclusive():
+    from repro.pde.dia import DIA
+
+    data = jnp.zeros((2, 5, 64))
+    dia = DIA(offsets=(-8, -1, 0, 1, 8), data=data)
+    x = jnp.zeros((4, 64))
+    with pytest.raises(ValueError):
+        ops.dia_spmv(dia, x, op_stride=2, op_index=jnp.zeros(4, jnp.int32))
+
+
 # -------------------------------------------------------- fused orthog
 
 @pytest.mark.parametrize("m,n", [(8, 128), (16, 256), (40, 1024)])

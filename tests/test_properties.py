@@ -124,3 +124,72 @@ def test_phase_mask_monotone_shutdown(n, workers):
         assert not mask.active[w]
         np.testing.assert_array_equal(mask.padded_rows, ~mask.active)
     assert not mask.any_active
+
+
+# ------------------------------------------------- GRF sampling contract
+# (pde/grf.py: fold_in key derivation — the label-expansion waves rebuild
+#  any single draw from its index, so these properties are load-bearing)
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(1, 6))
+def test_grf_batch_prefix_stable(seed, m, extra):
+    """The first m draws of a size-(m+extra) batch equal a size-m batch."""
+    import jax
+    from repro.pde.grf import GRFSpec, sample_grf_batch
+
+    spec = GRFSpec(nx=8, ny=8)
+    key = jax.random.PRNGKey(seed)
+    small, _ = sample_grf_batch(spec, key, m)
+    big, _ = sample_grf_batch(spec, key, m + extra)
+    np.testing.assert_array_equal(np.asarray(small), np.asarray(big)[:m])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 7))
+def test_grf_batch_draw_equals_single_fold_in(seed, i):
+    """Draw i of a batch ≡ sample_grf(spec, fold_in(key, i)) bitwise —
+    vmap vs single-call equivalence AND the fold_in indexing contract."""
+    import jax
+    from repro.pde.grf import GRFSpec, sample_grf, sample_grf_batch
+
+    spec = GRFSpec(nx=8, ny=8)
+    key = jax.random.PRNGKey(seed)
+    fields, feats = sample_grf_batch(spec, key, 8)
+    f1, l1 = sample_grf(spec, jax.random.fold_in(key, i))
+    np.testing.assert_array_equal(np.asarray(fields)[i], np.asarray(f1))
+    np.testing.assert_array_equal(np.asarray(feats)[i], np.asarray(l1))
+
+
+def test_grf_batch_keys_subset_indexing():
+    """batch_keys accepts an index array: keys for an arbitrary subset of
+    draws match the corresponding rows of the full key batch."""
+    import jax
+    from repro.pde.grf import batch_keys
+
+    key = jax.random.PRNGKey(5)
+    full = np.asarray(batch_keys(key, 10))
+    sub = np.asarray(batch_keys(key, np.array([7, 2, 2, 9])))
+    np.testing.assert_array_equal(sub, full[[7, 2, 2, 9]])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_grf_dtype_axis(seed):
+    """The dtype axis: fp32 draws come back fp32 end to end (field AND
+    latent), finite, zero-mean, and with the spectrum actually applied
+    (non-trivial spatial correlation). fp64 stays the default."""
+    import jax
+    import jax.numpy as jnp
+    from repro.pde.grf import GRFSpec, sample_grf
+
+    spec = GRFSpec(nx=16, ny=16)
+    key = jax.random.PRNGKey(seed)
+    f64, l64 = sample_grf(spec, key)
+    f32, l32 = sample_grf(spec, key, jnp.float32)
+    assert f64.dtype == jnp.float64 and l64.dtype == jnp.float64
+    assert f32.dtype == jnp.float32 and l32.dtype == jnp.float32
+    f = np.asarray(f32, np.float64)
+    assert np.isfinite(f).all()
+    np.testing.assert_allclose(f.mean(), 0.0, atol=1e-6)
+    # smoothness: neighbor differences much smaller than the field scale
+    assert np.abs(np.diff(f, axis=0)).max() < np.abs(f).max()

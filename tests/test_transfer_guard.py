@@ -92,6 +92,34 @@ def test_lockstep_containment_keeps_sync_budget(k):
     assert all(s.host_syncs <= 2 + cycles for s in stats if not s.padded)
 
 
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["ref", "pallas"])
+def test_expansion_wave_adds_no_transfers_or_syncs(use_kernel):
+    """Label expansion (core/expand.py) rides the retired lockstep row:
+    the wave consumes the solver's device-resident `x_device` stash and the
+    row's already-uploaded operator stack, accumulates its results as
+    device arrays, and drains them only at `result()` — so a solve + wave
+    runs clean under the transfer guard and the solver's sync budget stays
+    exactly 2 + cycles with expansion ON."""
+    from repro.core.expand import ExpandConfig, Expander
+
+    chains = 3
+    ops, b = _batched_ops(chains=chains)
+    cfg = KrylovConfig(m=18, k=6, tol=1e-8, maxiter=2000)
+    solver = BatchedGCRODRSolver(cfg)
+    exp = Expander(ExpandConfig(k=4), 10, 10, use_kernel=use_kernel)
+    idx = np.arange(chains)
+    live = np.ones(chains, dtype=bool)
+    with jax.transfer_guard("disallow"):
+        x, stats = solver.solve_batch(ops, b)
+        exp.wave(ops.base.coeffs, solver.x_device, idx, live)
+    cycles = max(s.cycles for s in stats)
+    assert all(s.host_syncs <= 2 + cycles for s in stats if not s.padded)
+    labels = exp.result()    # the one bulk drain, outside the guard
+    assert len(labels) == chains * 5
+    assert np.isfinite(labels.f).all() and np.isfinite(labels.u).all()
+
+
 def test_lockstep_syncs_scale_with_cycles_not_chains():
     """host_syncs is a batch-shared count: growing B must not grow it."""
     cfg = KrylovConfig(m=18, k=6, tol=1e-8, maxiter=2000)
