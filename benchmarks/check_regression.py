@@ -14,6 +14,12 @@ Also ratchets the label-expansion stage (benchmarks/label_expansion.py)
 against `results/BENCH_label_expansion.json`: the worst-family K=8
 labels/s ratio must stay within the same REGRESSION_FACTOR.
 
+And the streaming scheduler (benchmarks/streaming_datagen.py) against
+`results/BENCH_streaming_datagen.json`: the worst-family mid-flight
+lockstep utilization must stay above 0.8x the committed value — a change
+that lets retired slots ride as padding again (or stalls admission) shows
+up here as live-row fraction collapsing toward the wave baseline.
+
 The committed baseline is read BEFORE the fresh run (the bench harness
 overwrites the same artifact path), so this module must be the one to
 launch the bench — run it stand-alone:
@@ -30,6 +36,7 @@ RESULTS = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "results")
 BASELINE = os.path.join(RESULTS, "BENCH_trajectory_recycle.json")
 EXPAND_BASELINE = os.path.join(RESULTS, "BENCH_label_expansion.json")
+STREAM_BASELINE = os.path.join(RESULTS, "BENCH_streaming_datagen.json")
 
 # CI runners are noisy shared VMs: allow the ratio to dip to 75% of the
 # committed value before calling it a regression (same slack philosophy as
@@ -129,6 +136,45 @@ def label_expansion_ratchet() -> bool:
     return True
 
 
+def streaming_ratchet() -> bool:
+    """Mid-flight streaming utilization ratchet (benchmarks/
+    streaming_datagen.py): the fresh worst-family `midflight.utilization`
+    must stay above 0.8x the committed artifact's. The bench's own `ok`
+    gate (absolute > 0.8, beats the wave baseline, label parity) rides
+    along — a fresh run that fails its acceptance fails the ratchet."""
+    if not os.path.exists(STREAM_BASELINE):
+        print("[check_regression] no streaming_datagen baseline committed; "
+              "skipping utilization ratchet")
+        return True
+    with open(STREAM_BASELINE) as f:
+        doc = json.load(f)
+    fams = [k for k, v in doc["metrics"].items()
+            if isinstance(v, dict) and "midflight" in v]
+    committed = min(doc["metrics"][k]["midflight"]["utilization"]
+                    for k in fams)
+    floor = 0.8 * committed
+
+    from benchmarks import streaming_datagen
+    fresh_doc = streaming_datagen.run(quick=bool(doc.get("quick")))
+    fresh = min(fresh_doc[k]["midflight"]["utilization"] for k in fams)
+
+    print(f"[check_regression] streaming worst-family mid-flight "
+          f"utilization: fresh {fresh:.3f} vs committed {committed:.3f} "
+          f"(floor {floor:.3f})")
+    ok = True
+    if fresh < floor:
+        print("[check_regression] FAIL: streaming utilization regressed "
+              "below 0.8x the committed baseline — retired slots are "
+              "riding as padding again")
+        ok = False
+    if not fresh_doc.get("ok"):
+        print("[check_regression] FAIL: streaming_datagen acceptance gate "
+              "(absolute utilization / wave gap / label parity) failed on "
+              "the fresh run")
+        ok = False
+    return ok
+
+
 def main() -> int:
     with open(BASELINE) as f:
         doc = json.load(f)
@@ -175,6 +221,8 @@ def main() -> int:
     if not containment_overhead():
         ok = False
     if not label_expansion_ratchet():
+        ok = False
+    if not streaming_ratchet():
         ok = False
     if ok:
         print("[check_regression] OK")

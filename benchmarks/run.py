@@ -17,6 +17,9 @@
   label_expansion      few-solves-many-labels: labels/s vs expansion K
                        (DiffOAS f' = A u' waves; poisson/darcy/heat) +
                        FNO quality gates at equal label count (full mode)
+  streaming_datagen    online streaming scheduler: mid-flight slot refill
+                       vs wave-padding baseline on Poisson traces
+                       (utilization, p50/p99 latency, label parity)
   roofline_report      §Roofline (aggregates dry-run artifacts)
 
 Each run also writes a machine-readable ``results/BENCH_<name>.json``
@@ -46,9 +49,9 @@ import time
 
 from benchmarks import (batched_solver, convergence_fig11, label_expansion,
                         mixed_precision, parallel_e22, roofline_report,
-                        sharded_datagen, stability_fig13, table1_speedup,
-                        table2_sort_ablation, table33_no_training,
-                        trajectory_recycle)
+                        sharded_datagen, stability_fig13, streaming_datagen,
+                        table1_speedup, table2_sort_ablation,
+                        table33_no_training, trajectory_recycle)
 
 BENCHES = [
     ("table1_speedup", table1_speedup.run),
@@ -62,6 +65,7 @@ BENCHES = [
     ("sharded_datagen", sharded_datagen.run),
     ("table33_no_training", table33_no_training.run),
     ("label_expansion", label_expansion.run),
+    ("streaming_datagen", streaming_datagen.run),
     ("roofline_report", roofline_report.run),
 ]
 

@@ -1,0 +1,191 @@
+"""Streaming datagen scheduler vs the offline chunked pipeline.
+
+Drives `core/serve.StreamScheduler` over seeded Poisson-arrival traces on
+one steady family (poisson) and one time-dependent family (heat). The
+arrival rate is calibrated to a burst overload (RATE_FACTOR x the streamed
+service capacity, itself measured by a fully-backlogged calibration pass)
+— a backlog forms and stays, which is the regime the mid-flight refill
+path exists for; on short in-cache traces anything milder is dominated by
+the ramp-up/drain transient and never exercises slot recycling. Reports,
+per family:
+
+  * offline `run_chunked` wall time / throughput (reference only — the
+    trace rate is derived from the streamed capacity),
+  * streamed throughput, p50/p99 request latency, and lockstep row
+    utilization for BOTH refill modes on the SAME trace:
+      - refill="midflight": retired slots refilled from the queue between
+        dispatches (the tentpole path),
+      - refill="wave": admission only when every slot is free — each
+        admitted set drains to empty with padding, the offline-style
+        baseline,
+  * max relative label error of the streamed outputs vs the offline
+    chunked labels on the identical sampled batch.
+
+Win condition (`metrics["ok"]`): mid-flight utilization > 0.8 live rows,
+strictly above the wave baseline on the same trace, with streamed labels
+matching offline at 1e-6.
+
+Run:  PYTHONPATH=src python -m benchmarks.streaming_datagen [--quick]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import CSV
+from repro.core import serve
+from repro.core.skr import SKRConfig, SteadyStream, generate_dataset_chunked
+from repro.core.trajectory import (TrajConfig, TrajectoryStream,
+                                   generate_trajectories_chunked)
+from repro.pde.registry import get_family, get_timedep_family
+from repro.solvers.types import KrylovConfig
+
+KC = KrylovConfig(m=30, k=10, tol=1e-8, maxiter=6000)
+UTIL_TARGET = 0.8
+LABEL_TOL = 1e-6
+RATE_FACTOR = 4.0       # arrival rate vs streamed capacity: burst overload
+TRACE_SEED = 5
+
+
+def _rel_err(a, b):
+    return float(np.abs(np.asarray(a) - np.asarray(b)).max()
+                 / max(np.abs(np.asarray(b)).max(), 1e-300))
+
+
+def _stream_once(make_work, key, num, slots, rate, refill):
+    work = make_work()
+    work.sample(key, num)
+    reqs = serve.poisson_trace(num, rate=rate, seed=TRACE_SEED)
+    cfg = serve.StreamConfig(slots=slots, tick=None, refill=refill)
+    rep = serve.StreamScheduler(work, cfg).run(reqs)
+    assert len(rep.completed) == num, refill
+    return rep, work
+
+
+def _family(label, make_work, offline_fn, offline_scatter, key, num, slots):
+    """One family's full comparison: offline baseline, then both streaming
+    refill modes on the identical trace."""
+    # offline baseline: warmup compiles every lockstep dispatch (the
+    # streamed path reuses the same jit cache where shapes agree), then
+    # one timed pass
+    offline_fn()
+    t0 = time.perf_counter()
+    chunks = offline_fn()
+    offline_wall = time.perf_counter() - t0
+    offline = offline_scatter(chunks)
+    offline_thr = num / offline_wall
+
+    # calibrate the trace against the STREAMED service capacity, not the
+    # offline wall (the streamed dispatch path is leaner — a rate derived
+    # from offline throughput never builds a backlog and every wave runs
+    # part-empty). A fully-backlogged calibration pass measures saturated
+    # items/s; the first also compiles the streamed dispatch programs, so
+    # run it twice and read capacity off the warm pass.
+    for _ in range(2):
+        rep_cal, _ = _stream_once(make_work, key, num, slots,
+                                  50.0 * offline_thr, "midflight")
+    rate = RATE_FACTOR * rep_cal.throughput
+
+    out = {"offline_wall_s": round(offline_wall, 3),
+           "offline_throughput": round(offline_thr, 2),
+           "stream_capacity": round(rep_cal.throughput, 2),
+           "rate": round(rate, 2)}
+    rel = 0.0
+    for refill in ("midflight", "wave"):
+        rep, work = _stream_once(make_work, key, num, slots, rate, refill)
+        rel = max(rel, _rel_err(work.outputs, offline))
+        out[refill] = {
+            "utilization": round(rep.utilization, 4),
+            "throughput": round(rep.throughput, 2),
+            "p50_ms": round(1e3 * rep.latency_percentile(50), 2),
+            "p99_ms": round(1e3 * rep.latency_percentile(99), 2),
+            "dispatches": rep.dispatches,
+            "chains": rep.chains,
+            "forced": rep.forced,
+        }
+        assert bool(np.asarray(work.label_ok).all()), \
+            f"{label}/{refill}: unhealthy streamed label"
+    out["label_rel_err"] = rel
+    out["ok"] = bool(out["midflight"]["utilization"] > UTIL_TARGET
+                     and out["midflight"]["utilization"]
+                     > out["wave"]["utilization"]
+                     and rel < LABEL_TOL)
+    return out
+
+
+def run(quick: bool = False):
+    if quick:
+        s_nx, s_num, s_slots = 10, 48, 4
+        t_nx, t_nt, t_num, t_slots = 8, 3, 24, 4
+    else:
+        s_nx, s_num, s_slots = 20, 64, 6
+        t_nx, t_nt, t_num, t_slots = 14, 6, 24, 6
+
+    metrics = {}
+
+    sfam = get_family("poisson", nx=s_nx, ny=s_nx)
+    scfg = SKRConfig(krylov=KC, precond="jacobi")
+    skey = jax.random.PRNGKey(0)
+
+    def steady_offline():
+        return generate_dataset_chunked(sfam, skey, s_num, scfg,
+                                        workers=s_slots, engine="batched")
+
+    def steady_scatter(chunks):
+        out = np.zeros((s_num, s_nx, s_nx))
+        for r in chunks:
+            out[r.order] = r.solutions
+        return out
+
+    metrics["poisson"] = _family(
+        "poisson", lambda: SteadyStream(sfam, scfg), steady_offline,
+        steady_scatter, skey, s_num, s_slots)
+
+    tfam = get_timedep_family("heat", nx=t_nx, ny=t_nx, nt=t_nt)
+    tcfg = TrajConfig(krylov=KC, precond="jacobi")
+    tkey = jax.random.PRNGKey(1)
+
+    def traj_offline():
+        return generate_trajectories_chunked(tfam, tkey, t_num, tcfg,
+                                             workers=t_slots,
+                                             engine="batched")
+
+    def traj_scatter(chunks):
+        out = np.zeros((t_num, t_nt + 1, t_nx, t_nx))
+        for r in chunks:
+            out[r.order] = r.trajectories
+        return out
+
+    metrics["heat"] = _family(
+        "heat", lambda: TrajectoryStream(tfam, tcfg), traj_offline,
+        traj_scatter, tkey, t_num, t_slots)
+
+    csv = CSV(["family", "mode", "utilization", "throughput_per_s",
+               "p50_ms", "p99_ms", "chains", "forced"])
+    for fam_name, m in metrics.items():
+        for mode in ("midflight", "wave"):
+            r = m[mode]
+            csv.row(fam_name, mode, r["utilization"], r["throughput"],
+                    r["p50_ms"], r["p99_ms"], r["chains"], r["forced"])
+    csv.emit("streaming datagen: mid-flight refill vs wave padding")
+    for fam_name, m in metrics.items():
+        gain = m["midflight"]["utilization"] - m["wave"]["utilization"]
+        print(f"  {fam_name}: mid-flight refill utilization "
+              f"{m['midflight']['utilization']:.3f} vs wave "
+              f"{m['wave']['utilization']:.3f} (+{gain:.3f}); "
+              f"label rel err {m['label_rel_err']:.2e}")
+
+    metrics["ok"] = bool(all(metrics[f]["ok"] for f in ("poisson", "heat")))
+    return metrics
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    raise SystemExit(0 if out["ok"] else 1)

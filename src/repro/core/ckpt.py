@@ -86,6 +86,38 @@ class NpzCheckpointer:
                 if os.path.exists(dsrc):
                     os.replace(dsrc, self._digest_path(dst))
 
+    def rotate_aside(self) -> Optional[str]:
+        """Move every existing generation OUT of the generation ladder to
+        `.staleN`-suffixed siblings that no future `save`/`_rotate` will
+        ever touch, digests moving with their snapshots.
+
+        This is the mismatch guard for `pipeline.run_resumable`: a loaded
+        snapshot that belongs to a DIFFERENTLY-SIZED run must not be
+        silently rotated off by the new run's next two saves — its
+        completed work stays recoverable on disk under the side name.
+        Returns the side path of the (former) live snapshot, or None when
+        nothing was on disk."""
+        if not self.ckpt_dir:
+            return None
+        moved = None
+        for g in range(self.generations):
+            src = self.gen_path(g)
+            if not os.path.exists(src):
+                continue
+            n = 0
+            while True:
+                dst = src[:-len(".npz")] + f".stale{n}.npz"
+                if not os.path.exists(dst):
+                    break
+                n += 1
+            os.replace(src, dst)
+            dsrc = self._digest_path(src)
+            if os.path.exists(dsrc):
+                os.replace(dsrc, self._digest_path(dst))
+            if moved is None:
+                moved = dst
+        return moved
+
     def save(self, **arrays):
         # mkstemp: a unique tmp per writer — concurrent generators sharing
         # a dir/filename each stage privately and the LAST publish wins

@@ -70,6 +70,7 @@ checkpoints keep loading.
 from __future__ import annotations
 
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional
 
@@ -153,20 +154,38 @@ class WorkAdapter:
 
 
 class PhaseMask:
-    """Active-chain mask for lockstep rows whose chains advance at
-    different rates (the adaptive-Δt trajectory engine).
+    """Live slot table for lockstep rows whose chains advance at
+    different rates — and for the streaming scheduler (core/serve.py),
+    whose slots retire and REFILL mid-flight.
 
-    Fixed-Δt lockstep rows stay aligned by construction; with per-chain
-    adaptive stepping each chain takes its own number of internal steps
-    per row, so the engine iterates until EVERY chain finished and masks
-    the early finishers: a finished (or never-live padding-slot) chain
-    rides along as a zero-RHS padded row — `SolveStats.padded`, 0
-    iterations, x = 0, recycle carry untouched — while the live chains
-    keep stepping inside the same SPMD dispatch. One copy of the mask
-    bookkeeping lives here so workload adapters cannot drift."""
+    Offline (the adaptive-Δt trajectory engine): fixed-Δt lockstep rows
+    stay aligned by construction; with per-chain adaptive stepping each
+    chain takes its own number of internal steps per row, so the engine
+    iterates until EVERY chain finished and masks the early finishers: a
+    finished (or never-live padding-slot) chain rides along as a zero-RHS
+    padded row — `SolveStats.padded`, 0 iterations, x = 0, recycle carry
+    untouched — while the live chains keep stepping inside the same SPMD
+    dispatch. Shutdown is monotone on that path: `finish` only.
 
-    def __init__(self, live: np.ndarray):
+    Streaming: each slot holds the chain id currently riding it
+    (`chain[w]`, -1 when free/padding); `refill(w, chain)` re-opens a
+    retired slot for a new chain mid-flight. `finished` counts genuine
+    active→inactive retirements — never-live sharding fill slots do NOT
+    count (they were never a chain), and a refilled slot counts once per
+    chain it retires. One copy of the bookkeeping lives here so workload
+    adapters cannot drift."""
+
+    def __init__(self, live: np.ndarray, chains: np.ndarray | None = None):
         self.active = np.asarray(live, dtype=bool).copy()
+        n = self.active.shape[0]
+        # offline callers identify slot w with chain w; the streaming
+        # scheduler assigns its own ids via refill()
+        self.chain = np.full(n, -1, dtype=np.int64)
+        if chains is None:
+            self.chain[self.active] = np.nonzero(self.active)[0]
+        else:
+            self.chain[self.active] = np.asarray(chains, dtype=np.int64)
+        self.finished = 0  # chains retired through finish(), cumulative
 
     @property
     def any_active(self) -> bool:
@@ -179,12 +198,29 @@ class PhaseMask:
 
     def finish(self, w: int):
         """Chain `w` is done with this row (trajectory complete or step
-        budget exhausted) — padded from the next dispatch on."""
+        budget exhausted) — padded from the next dispatch on. Finishing a
+        never-live or already-finished slot is a no-op for the finished
+        count: only a genuine active→inactive transition retires a chain."""
+        if self.active[w]:
+            self.finished += 1
         self.active[w] = False
         # occupancy timeline sample: how many chains remain live after
         # this finish (renders as a counter track in the Chrome trace)
         obs.counter("phase_active", {"active": int(self.active.sum()),
-                                     "finished": int((~self.active).sum())},
+                                     "finished": self.finished},
+                    cat="pipeline")
+
+    def refill(self, w: int, chain: int):
+        """Slot `w` adopts chain `chain` mid-flight — the streaming
+        scheduler's slot-recycling primitive. The offline engines never
+        call this, so their shutdown stays monotone."""
+        if self.active[w]:
+            raise ValueError(f"refill of live slot {w} "
+                             f"(still riding chain {int(self.chain[w])})")
+        self.active[w] = True
+        self.chain[w] = int(chain)
+        obs.counter("phase_active", {"active": int(self.active.sum()),
+                                     "finished": self.finished},
                     cat="pipeline")
 
 
@@ -235,8 +271,14 @@ def _run_lockstep(work, subs, solver, prefetch: bool = True):
             with obs.span("expand_row", cat="pipeline", row=t):
                 work.expand_row(solver, t, idx)
         return
-    with ThreadPoolExecutor(max_workers=1,
-                            thread_name_prefix="prefetch") as ex:
+    # manually managed executor: on an execute_row error the in-flight
+    # prepare for row t+1 must not delay (or, under a FaultPlan, mask) the
+    # real failure — a `with` block's __exit__ waits for it. Cancel it if
+    # still queued and shut down WITHOUT waiting; an already-running
+    # prepare drains on its daemon thread while the error propagates now.
+    ex = ThreadPoolExecutor(max_workers=1, thread_name_prefix="prefetch")
+    fut = None
+    try:
         idx = _row_index(subs, 0)
         fut = ex.submit(_prepare_row_traced, work, 0, idx)
         for t in range(length):
@@ -252,6 +294,13 @@ def _run_lockstep(work, subs, solver, prefetch: bool = True):
             # wave), so it overlaps the prefetch thread like the solve did
             with obs.span("expand_row", cat="pipeline", row=t):
                 work.expand_row(solver, t, cur_idx)
+    except BaseException:
+        if fut is not None:
+            fut.cancel()
+        ex.shutdown(wait=False, cancel_futures=True)
+        raise
+    else:
+        ex.shutdown(wait=True)
 
 
 def run_chunked(work, key, num: int, workers: int, engine: str,
@@ -302,7 +351,8 @@ def run_chunked(work, key, num: int, workers: int, engine: str,
 
 def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
                   progress_cb: Optional[Callable[[int, int], None]] = None,
-                  fail_at: Optional[int] = None, fault=None):
+                  fail_at: Optional[int] = None, fault=None,
+                  mismatch: str = "rotate"):
     """The resumable single-chain pipeline (the plain generators' engine):
     sort, then solve the whole order on ONE recycling chain, snapshotting
     state atomically every `ckpt_every` items. `fail_at` is the simple
@@ -311,7 +361,18 @@ def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
     seeded `core.robust.FaultPlan` — data poisoning is applied by the work
     adapter at assembly points, while `preempt_at` simulates a mid-run kill
     here (after the snapshot, optionally corrupting the just-published
-    checkpoint per `fault.ckpt_corrupt` to exercise generation fallback)."""
+    checkpoint per `fault.ckpt_corrupt` to exercise generation fallback).
+
+    `mismatch` governs a loaded snapshot whose `order` length differs from
+    `num` — completed work from a DIFFERENTLY-SIZED run that this run's
+    next save would otherwise destroy:
+      "rotate"  (default) warn loudly and move the stale snapshot (all
+                generations) aside to `.staleN.npz` names outside the
+                rotation ladder, then start fresh — nothing is overwritten
+      "error"   raise RuntimeError — for callers that would rather stop
+                than ever touch a mismatched checkpoint
+      "discard" the old silent behavior, now an explicit acknowledgment:
+                ignore the snapshot and let the next save overwrite it"""
     cfg = work.cfg
     work.fault = fault
     if fault is not None and fault.preempt_at is not None and fail_at is None:
@@ -341,7 +402,21 @@ def run_resumable(work, key, num: int, ckpt=None, ckpt_every: int = 0,
     required = ("pos", "order", "iters", "times", "u_carry", work.ckpt_key) \
         + tuple(work.ckpt_required())
     state = ckpt.load(required=required) if enabled else None
-    if state is not None and len(state["order"]) == num:
+    if state is not None and len(state["order"]) != num:
+        msg = (f"checkpoint {ckpt.path} belongs to a "
+               f"{len(state['order'])}-{work.item_noun} run but this run "
+               f"asked for {num} {work.item_noun}s")
+        if mismatch == "error":
+            raise RuntimeError(msg)
+        if mismatch == "discard":
+            warnings.warn(msg + " — discarding it (mismatch='discard'); "
+                          "the next save will overwrite it")
+        else:
+            aside = ckpt.rotate_aside()
+            warnings.warn(msg + f" — stale snapshot preserved at {aside}; "
+                          "starting fresh")
+        state = None
+    if state is not None:
         order = state["order"]
         work.restore_outputs(state[work.ckpt_key])
         work.restore_extra(state)

@@ -1,0 +1,343 @@
+"""Streaming datagen front end — continuous chain-batching over the
+lockstep engines (the ROADMAP "datagen-as-a-service" item).
+
+Everything in `core/pipeline.py` is offline: sort a CLOSED set (paper
+Algorithm 1), partition it into chains, drain the lockstep rows. This
+module serves an OPEN stream: requests arrive continuously, are assigned
+online to the nearest live recycle chain, and lockstep slots that retire a
+finished chain are refilled mid-flight from the queue instead of riding as
+zero-RHS padding. The paper's §5.2 robustness analysis is what licenses
+the greedy online assignment — the recycled small-eigenvalue subspace
+tolerates a non-optimal ordering, so "nearest live chain head now" is a
+good-enough stand-in for a global sort.
+
+The loop borrows the classic continuous-batching shape of LLM serving
+stacks (request queue → slot recycling → prefetch the next wave while the
+device works):
+
+  ingest    arrivals visible at the current clock enter a bounded queue
+  admit     each queued request is scored against the CURRENT HEAD feature
+            of every live chain (`sorting.nearest_features`, one
+            incremental Algorithm-1 step). Within the similarity budget →
+            append to that chain's FIFO (its carry will be relevant by the
+            time the request reaches the device). Otherwise a free slot
+            opens a fresh chain — adopting the retiring chain's carry when
+            the new head is within budget of the slot's LAST head, else
+            clearing it via `solver.swap_slot(w)` (carry hygiene: a refill
+            never inherits a foreign chain's subspace unless assignment
+            said so). A chain closes to appends once it accumulates
+            `max_chain` items (stale-carry guard) or its backlog reaches
+            `max_backlog` (a deep FIFO is worse latency than a cold
+            chain). Deadline-expired requests are force-admitted to the
+            least-bad live chain, budget ignored.
+  dispatch  one lockstep wave: the head item of every occupied slot, -1
+            padding elsewhere — a single `solve_batch`, same shapes every
+            time, so jit never recompiles across refills.
+  retire    finished items complete their requests; an emptied slot is
+            `PhaseMask.finish`ed and becomes refillable at the NEXT admit
+            pass (mid-flight — it never drains as padding while work is
+            queued). With `refill="wave"` admission only runs when every
+            slot is free: the padding-only baseline that drains each
+            admitted wave-set to empty, offline-style.
+  prefetch  when every slot stays occupied, the next wave's composition is
+            already final (appends only extend FIFO tails; opens need a
+            free slot), so its host assembly is submitted to a one-thread
+            executor while the device solves — exactly the offline
+            pipeline's overlap, gated on `work.stream_prefetchable`
+            (trajectory assembly consumes the previous step's solution, so
+            it cannot run ahead).
+
+Clock: virtual seconds. `tick` fixed per dispatch makes runs fully
+deterministic (tests); `tick=None` advances by measured wall time
+(benchmarks). Idle gaps jump straight to the next arrival — waiting for
+traffic is not padding.
+
+Work adapters: `skr.SteadyStream` (one dispatch per item) and
+`trajectory.TrajectoryStream` (nt dispatches per item; slots drift out of
+phase, stepped per-slot via `TimeDepFamily.step_fn_streamed`). Streaming
+v1 keeps the solver-level containment (quarantine, divergence guards) but
+not the offline requeue ladder: an unhealthy solve flags `label_ok` and
+the stream moves on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import List, Optional
+
+import numpy as np
+
+from repro import obs
+from repro.core import pipeline, sorting
+
+
+@dataclasses.dataclass
+class Request:
+    """One streamed work item: an index into the stream work's sampled
+    batch plus arrival/deadline metadata. The scheduler fills the
+    admission/completion fields."""
+
+    item: int                          # index into work's sampled batch
+    arrival: float = 0.0               # virtual seconds
+    deadline: Optional[float] = None   # ABSOLUTE admission deadline
+    # filled by the scheduler:
+    rid: int = -1
+    chain: int = -1
+    admitted: float = np.nan
+    completed: float = np.nan
+    forced: bool = False               # admitted past-deadline, budget ignored
+
+    @property
+    def latency(self) -> float:
+        return self.completed - self.arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    slots: int = 4                     # lockstep width B
+    queue_cap: int = 4096              # bounded admission queue
+    # None auto-calibrates: budget_scale × median nearest-neighbor
+    # Frobenius distance over the sampled features (sorting.typical_nn_
+    # distance). A negative budget never matches — every chain is fresh.
+    similarity_budget: Optional[float] = None
+    budget_scale: float = 1.5
+    max_chain: int = 64                # stale-carry guard: chain closes after
+    max_backlog: int = 4               # FIFO depth beyond which appends stop
+    deadline: Optional[float] = None   # default relative deadline per request
+    refill: str = "midflight"          # midflight | wave (padding baseline)
+    tick: Optional[float] = None       # fixed virtual secs/dispatch; None=wall
+    prefetch: bool = True
+
+    def __post_init__(self):
+        assert self.slots >= 1
+        assert self.refill in ("midflight", "wave"), self.refill
+
+
+@dataclasses.dataclass
+class StreamReport:
+    completed: List[Request]
+    utilization: float                 # live fraction of dispatched rows
+    dispatches: int
+    rows_live: int
+    rows_total: int
+    forced: int                        # deadline force-admissions
+    chains: int                        # chains opened
+    makespan: float                    # final clock (virtual seconds)
+    budget: float                      # resolved similarity budget
+
+    def latencies(self) -> np.ndarray:
+        return np.array([r.latency for r in self.completed], dtype=np.float64)
+
+    def latency_percentile(self, q: float) -> float:
+        lat = self.latencies()
+        return float(np.percentile(lat, q)) if lat.size else 0.0
+
+    @property
+    def throughput(self) -> float:
+        """Completed items per virtual second."""
+        return len(self.completed) / self.makespan if self.makespan > 0 \
+            else float(len(self.completed))
+
+
+def poisson_trace(num: int, rate: float, seed: int = 0,
+                  deadline: Optional[float] = None) -> List[Request]:
+    """Seeded Poisson-arrival request trace: exponential inter-arrival
+    gaps at `rate` items/virtual-second over items 0..num-1."""
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / rate, size=num))
+    return [Request(item=i, arrival=float(arr[i]), deadline=deadline)
+            for i in range(num)]
+
+
+class StreamScheduler:
+    """Online admission + mid-flight slot refill over one stream work
+    adapter (module docstring). `run(requests)` drives the full trace to
+    completion and returns a `StreamReport`; per-item outputs land on the
+    adapter (`work.outputs`, `work.label_ok`, `work.stats`)."""
+
+    def __init__(self, work, cfg: StreamConfig = StreamConfig()):
+        self.work = work
+        self.cfg = cfg
+        self.budget: Optional[float] = None   # resolved on run()
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> StreamReport:
+        cfg, work = self.cfg, self.work
+        B = int(cfg.slots)
+        work.begin_stream(B)
+        solver = work.make_lockstep_solver()
+        # all slots start FREE: refill() doubles as "open", so the slot
+        # table sees exactly one code path for fresh and recycled slots
+        mask = pipeline.PhaseMask(np.zeros(B, dtype=bool))
+        fifos = [deque() for _ in range(B)]          # admitted, per slot
+        counts = np.zeros(B, dtype=np.int64)         # items in current chain
+        last_feat: List[Optional[np.ndarray]] = [None] * B   # newest head
+        budget = cfg.similarity_budget
+        if budget is None:
+            budget = cfg.budget_scale * sorting.typical_nn_distance(work.feats)
+        self.budget = budget = float(budget)
+
+        reqs = sorted(requests, key=lambda r: r.arrival)
+        for rid, r in enumerate(reqs):
+            r.rid = rid
+        pending = deque(reqs)                        # future arrivals
+        queue: deque = deque()                       # visible, unadmitted
+        completed: List[Request] = []
+        forced = 0
+        next_chain = 0
+        rows_live = rows_total = dispatches = 0
+        now = 0.0
+        feat_dim = work.feats.shape[1]
+        zero_feat = np.zeros(feat_dim)
+
+        def resolve_deadline(req: Request) -> Optional[float]:
+            if req.deadline is not None:
+                return req.deadline
+            if cfg.deadline is not None:
+                return req.arrival + cfg.deadline
+            return None
+
+        def place(req: Request, w: int, feat: np.ndarray):
+            was_empty = not fifos[w]
+            fifos[w].append(req)
+            counts[w] += 1
+            last_feat[w] = feat
+            req.admitted = now
+            req.chain = int(mask.chain[w])
+            if was_empty:
+                work.start_item(w, req.item)
+
+        def open_slot(req: Request, feat: np.ndarray):
+            nonlocal next_chain
+            free = np.nonzero(~mask.active)[0]
+            # prefer a retired slot whose LAST chain head is within budget:
+            # its carry is still relevant and gets ADOPTED; any other slot
+            # is cleared so the new chain never inherits a foreign subspace
+            cand = [int(v) for v in free if last_feat[v] is not None]
+            w, adopt = int(free[0]), False
+            if cand:
+                wc, d = sorting.nearest_features(
+                    feat, np.stack([last_feat[v] for v in cand]))
+                if wc >= 0 and d[wc] <= budget:
+                    w, adopt = cand[wc], True
+            if not adopt:
+                solver.swap_slot(w)
+            mask.refill(w, next_chain)
+            next_chain += 1
+            counts[w] = 0
+            place(req, w, feat)
+
+        def admit():
+            nonlocal forced
+            if cfg.refill == "wave" and mask.any_active:
+                return   # padding baseline: admission only between waves
+            keep: deque = deque()
+            while queue:
+                req = queue.popleft()
+                feat = np.asarray(work.feats[req.item], dtype=np.float64)
+                heads = np.stack([lf if lf is not None else zero_feat
+                                  for lf in last_feat])
+                backlog_ok = np.array([len(f) < cfg.max_backlog
+                                       for f in fifos])
+                open_mask = mask.active & (counts < cfg.max_chain) \
+                    & backlog_ok
+                w, d = sorting.nearest_features(feat, heads, open_mask)
+                if w >= 0 and d[w] <= budget:
+                    place(req, w, feat)
+                    continue
+                if not mask.active.all():
+                    open_slot(req, feat)
+                    continue
+                dl = resolve_deadline(req)
+                if dl is not None and now >= dl:
+                    # past deadline: least-bad live chain, budget ignored
+                    # (only the staleness cap still applies when possible)
+                    wf, _ = sorting.nearest_features(
+                        feat, heads, mask.active & (counts < cfg.max_chain))
+                    if wf < 0:
+                        wf, _ = sorting.nearest_features(feat, heads,
+                                                         mask.active)
+                    if wf >= 0:
+                        req.forced = True
+                        forced += 1
+                        place(req, wf, feat)
+                        continue
+                keep.append(req)
+            queue.extend(keep)
+
+        ex = None
+        if cfg.prefetch and getattr(work, "stream_prefetchable", False):
+            ex = ThreadPoolExecutor(max_workers=1,
+                                    thread_name_prefix="stream-prefetch")
+        pre_items = None
+        pre_fut = None
+        try:
+            while pending or queue or mask.any_active:
+                while pending and pending[0].arrival <= now \
+                        and len(queue) < cfg.queue_cap:
+                    queue.append(pending.popleft())
+                admit()
+                if not mask.any_active:
+                    if queue:   # cannot happen: free slots always admit
+                        raise RuntimeError(
+                            "stream scheduler stalled with a non-empty "
+                            "queue and no live slot")
+                    if not pending:
+                        break
+                    # idle gap: jump the clock to the next arrival instead
+                    # of dispatching empty waves — waiting is not padding
+                    now = max(now, pending[0].arrival)
+                    continue
+                slot_items = np.array(
+                    [fifos[w][0].item if mask.active[w] else -1
+                     for w in range(B)], dtype=np.int64)
+                t0 = time.perf_counter()
+                prepared = None
+                if pre_fut is not None:
+                    got = pre_fut.result()
+                    if np.array_equal(pre_items, slot_items):
+                        prepared = got
+                    pre_fut = pre_items = None
+                if prepared is None:
+                    with obs.span("stream_assemble", cat="serve"):
+                        prepared = work.assemble(slot_items)
+                with obs.span("stream_dispatch", cat="serve",
+                              live=int(mask.active.sum())):
+                    done = work.apply(solver, slot_items, prepared)
+                now += cfg.tick if cfg.tick is not None \
+                    else time.perf_counter() - t0
+                live = int(mask.active.sum())
+                rows_live += live
+                rows_total += B
+                dispatches += 1
+                obs.record_stream(len(queue), live, B)
+                for w in range(B):
+                    if not (mask.active[w] and done[w]):
+                        continue
+                    req = fifos[w].popleft()
+                    req.completed = now
+                    completed.append(req)
+                    if fifos[w]:
+                        work.start_item(w, fifos[w][0].item)
+                    else:
+                        mask.finish(w)   # refillable at the next admit pass
+                # speculative next-wave assembly: with every slot still
+                # occupied the composition is final — appends only extend
+                # FIFO tails and opens need a free slot
+                if ex is not None and mask.active.all():
+                    pre_items = np.array([fifos[w][0].item
+                                          for w in range(B)], dtype=np.int64)
+                    pre_fut = ex.submit(work.assemble, pre_items)
+        finally:
+            if ex is not None:
+                if pre_fut is not None:
+                    pre_fut.cancel()
+                ex.shutdown(wait=False, cancel_futures=True)
+
+        util = rows_live / rows_total if rows_total else 1.0
+        return StreamReport(completed=completed, utilization=util,
+                            dispatches=dispatches, rows_live=rows_live,
+                            rows_total=rows_total, forced=forced,
+                            chains=next_chain, makespan=now, budget=budget)

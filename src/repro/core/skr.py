@@ -446,6 +446,58 @@ class SteadyWork(pipeline.WorkAdapter):
         )
 
 
+class SteadyStream(SteadyWork):
+    """Streaming work adapter for steady systems (core/serve.py): the
+    scheduler dispatches WAVES — one system per occupied slot — instead of
+    pre-packed lockstep rows. Row assembly is `prepare_row` verbatim (the
+    wave's slot→item map plays the row index), so the streamed solve per
+    item is the same device program as the offline lockstep path. Every
+    live slot's item finishes in one dispatch (`done` all-live).
+
+    Streaming v1 posture: solver-level containment stays armed (quarantine,
+    divergence guards via `cfg.retry`), but the offline requeue ladder does
+    not run — an unhealthy solve flags `label_ok[i]` False and the stream
+    moves on. Results land per ITEM (`outputs[i]`), not per chain."""
+
+    stream_prefetchable = True   # assembly is item-pure: safe to run ahead
+
+    def begin_stream(self, slots: int):
+        from repro.pde.dia import Stencil5
+
+        nx, ny = self.family.nx, self.family.ny
+        num = int(np.asarray(self.batch.b).shape[0])
+        self._all_st5 = Stencil5(jnp.asarray(self.batch.op.coeffs))
+        self._b_all = np.asarray(self.batch.b).reshape(num, -1)
+        self.outputs = np.zeros((num, nx, ny))
+        self.label_ok = np.zeros(num, dtype=bool)
+        self.item_iters = np.zeros(num, dtype=np.int64)
+        self.stats = SequenceStats()
+
+    def start_item(self, w: int, i: int):
+        """Steady items carry no per-slot state — the wave assembly reads
+        everything from the sampled batch."""
+
+    def assemble(self, slot_items: np.ndarray):
+        return self.prepare_row(0, np.asarray(slot_items, dtype=np.int64))
+
+    def apply(self, solver, slot_items: np.ndarray, prepared) -> np.ndarray:
+        ops, bvec = prepared
+        nx, ny = self.family.nx, self.family.ny
+        xs, st_list = solver.solve_batch(ops, bvec,
+                                         padded_rows=slot_items < 0)
+        done = np.zeros(len(slot_items), dtype=bool)
+        for w, i in enumerate(slot_items):
+            if i < 0:
+                continue
+            i = int(i)
+            self.outputs[i] = xs[w].reshape(nx, ny)
+            self.label_ok[i] = is_healthy(st_list[w])
+            self.item_iters[i] = st_list[w].iterations
+            self.stats.append(st_list[w])
+            done[w] = True
+        return done
+
+
 class SKRGenerator:
     """Resumable SKR data generator over one problem family (a thin
     frontend over `core/pipeline.run_resumable`)."""
@@ -460,7 +512,8 @@ class SKRGenerator:
     def generate(self, key: jax.Array, num: int,
                  progress_cb: Optional[Callable[[int, int], None]] = None,
                  fail_at: Optional[int] = None,
-                 fault: Optional[FaultPlan] = None) -> DataGenResult:
+                 fault: Optional[FaultPlan] = None,
+                 mismatch: str = "rotate") -> DataGenResult:
         """Generate `num` (input, solution) pairs.
 
         fail_at: injection hook for the fault-tolerance tests — raises after
@@ -469,12 +522,15 @@ class SKRGenerator:
         fault: full seeded `FaultPlan` (chaos tests) — NaN poisoning of
         chosen systems' RHS/operator/carry, preemption with optional
         checkpoint corruption; see core/robust.py.
+        mismatch: policy when a loaded checkpoint belongs to a run of a
+        different size — see `pipeline.run_resumable`.
         """
         work = SteadyWork(self.family, self.cfg)
         return pipeline.run_resumable(work, key, num, ckpt=self._ckpt,
                                       ckpt_every=self.cfg.ckpt_every,
                                       progress_cb=progress_cb,
-                                      fail_at=fail_at, fault=fault)
+                                      fail_at=fail_at, fault=fault,
+                                      mismatch=mismatch)
 
 
 def generate_dataset(family: ProblemFamily, key: jax.Array, num: int,

@@ -136,6 +136,49 @@ def sort_features(feats: np.ndarray, method: str = "greedy", **kw) -> np.ndarray
     raise KeyError(f"unknown sort method {method!r}")
 
 
+def nearest_features(feat: np.ndarray, heads: np.ndarray,
+                     mask: np.ndarray | None = None):
+    """One INCREMENTAL Algorithm-1 step for the online scheduler
+    (core/serve.py): Frobenius distance from a single feature row to every
+    candidate chain-head feature.
+
+    Returns ``(w, d)`` — the index of the nearest unmasked head and the
+    full distance vector (masked heads at +inf). ``w`` is -1 when no head
+    is eligible. Distances are actual norms (not squared) so they compare
+    directly against `typical_nn_distance`-calibrated budgets."""
+    feat = np.asarray(feat, dtype=np.float64).reshape(-1)
+    heads = np.asarray(heads, dtype=np.float64).reshape(-1, feat.shape[0])
+    d = np.sum(heads ** 2, axis=1) + feat @ feat - 2.0 * (heads @ feat)
+    d = np.sqrt(np.maximum(d, 0.0))
+    if mask is not None:
+        d = np.where(np.asarray(mask, dtype=bool), d, np.inf)
+    if d.size == 0 or not np.isfinite(d).any():
+        return -1, d
+    return int(np.argmin(d)), d
+
+
+def typical_nn_distance(feats: np.ndarray, sample: int = 256,
+                        seed: int = 0) -> float:
+    """Median nearest-neighbor Frobenius distance over a (sub)sampled
+    cloud — the natural scale for the streaming scheduler's similarity
+    budget: a request within ~this distance of a chain head is about as
+    similar as consecutive systems in a greedy-sorted offline order."""
+    feats = np.asarray(feats, dtype=np.float64)
+    n = feats.shape[0]
+    if n < 2:
+        return 0.0
+    rng = np.random.default_rng(seed)
+    idx = (np.arange(n) if n <= sample
+           else rng.choice(n, size=sample, replace=False))
+    sq = np.sum(feats ** 2, axis=1)
+    nn = np.empty(len(idx))
+    for j, i in enumerate(idx):
+        d = sq + sq[i] - 2.0 * (feats @ feats[i])
+        d[i] = np.inf
+        nn[j] = np.sqrt(max(float(d.min()), 0.0))
+    return float(np.median(nn))
+
+
 def chain_length(feats: np.ndarray, order: np.ndarray) -> float:
     """Total Frobenius path length — the quantity greedy sorting minimizes
     (lower ⇒ more consecutive similarity ⇒ better recycling)."""

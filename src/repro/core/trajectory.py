@@ -781,6 +781,90 @@ class TrajectoryWork(pipeline.WorkAdapter):
         )
 
 
+class TrajectoryStream(TrajectoryWork):
+    """Streaming work adapter for trajectories (core/serve.py): a slot
+    holds ONE trajectory mid-march, and slots drift OUT OF PHASE — each is
+    at its own implicit step — so every dispatch advances all occupied
+    slots one step at their own times via the family's per-slot-time
+    stepper (`TimeDepFamily.step_fn_streamed`, t batched over slots). An
+    item completes after `nt` dispatches.
+
+    Classic fixed-Δt θ-scheme families only: BDF2 / mass-matrix / adaptive
+    stepping need the generalized StepState march and route through the
+    offline phase-masked engine. Assembly of step s+1 consumes the field
+    solved at step s, so this adapter is NOT prefetchable. As with
+    `SteadyStream`, the offline requeue ladder does not run: an unhealthy
+    step flags the whole trajectory's `label_ok` and the march continues."""
+
+    stream_prefetchable = False   # step s+1 needs step s's solution
+
+    def begin_stream(self, slots: int):
+        if not self.family.classic:
+            raise NotImplementedError(
+                "streaming trajectory datagen supports classic fixed-dt "
+                "theta-scheme families; BDF2 / mass-matrix / adaptive "
+                "families route through the offline phase-masked engine")
+        fam = self.family
+        num = len(self.feats)
+        self.outputs = np.zeros((num, fam.nt + 1, fam.nx, fam.ny))
+        self.label_ok = np.zeros(num, dtype=bool)
+        self.stats = SequenceStats()
+        self._stepS = fam.step_fn_streamed()
+        self._u0_np = np.asarray(self.specs.u0)
+        self._u_np = np.zeros((slots, fam.nx, fam.ny))   # per-slot field
+        self._pos = np.zeros(slots, dtype=np.int64)      # per-slot next step
+
+    def start_item(self, w: int, i: int):
+        self._u_np[w] = self._u0_np[i]
+        self._pos[w] = 0
+        self.outputs[i, 0] = self._u0_np[i]
+        self.label_ok[i] = True
+
+    def assemble(self, slot_items: np.ndarray):
+        fam, cfg = self.family, self.cfg
+        idx = np.asarray(slot_items, dtype=np.int64)
+        live = idx >= 0
+        clamped = jnp.asarray(np.where(live, idx, 0))
+        lat = jax.tree_util.tree_map(lambda a: a[clamped], self.specs.latent)
+        u = jnp.asarray(self._u_np)
+        t_old = jnp.asarray(self._pos * fam.dt)
+        t_new = jnp.asarray((self._pos + 1) * fam.dt)
+        a, b = self._stepS(lat, u, t_old, t_new)
+        rhs = _inc_rhs(a, b, u) if cfg.rhs_mode == "increment" else b
+        rhs = jnp.where(jnp.asarray(live)[:, None, None], rhs, 0.0)
+        st5 = Stencil5(a)
+        pre = make_preconditioner_batched(cfg.precond, st5,
+                                          use_kernel=cfg.use_kernel)
+        ops = PreconditionedOp(StencilOp(st5.coeffs, cfg.use_kernel), pre)
+        return ops, rhs, u, live
+
+    def apply(self, solver, slot_items: np.ndarray, prepared) -> np.ndarray:
+        ops, rhs, u, live = prepared
+        fam, cfg = self.family, self.cfg
+        W = len(slot_items)
+        nx, ny = fam.nx, fam.ny
+        xs, st_list = solver.solve_batch(ops, rhs.reshape(W, -1),
+                                         padded_rows=~live)
+        delta = xs.reshape(W, nx, ny)
+        u_new = (np.asarray(u) + delta) if cfg.rhs_mode == "increment" \
+            else delta
+        done = np.zeros(W, dtype=bool)
+        for w, i in enumerate(slot_items):
+            if i < 0:
+                continue
+            i = int(i)
+            step = int(self._pos[w])
+            self._u_np[w] = u_new[w]
+            self.outputs[i, step + 1] = u_new[w]
+            self.stats.append(st_list[w])
+            if not is_healthy(st_list[w]):
+                self.label_ok[i] = False
+            self._pos[w] = step + 1
+            if step + 1 >= fam.nt:
+                done[w] = True
+        return done
+
+
 class TrajectoryGenerator:
     """Resumable trajectory data generator over one time-dependent family
     (the `SKRGenerator` of the trajectory subsystem — a thin frontend over
@@ -796,7 +880,8 @@ class TrajectoryGenerator:
     def generate(self, key: jax.Array, num: int,
                  progress_cb: Optional[Callable[[int, int], None]] = None,
                  fail_at: Optional[int] = None,
-                 fault: Optional[FaultPlan] = None) -> TrajResult:
+                 fault: Optional[FaultPlan] = None,
+                 mismatch: str = "rotate") -> TrajResult:
         """Generate `num` trajectories of nt+1 fields each.
 
         fail_at: fault-injection hook (unit = trajectories) — raises after
@@ -805,12 +890,15 @@ class TrajectoryGenerator:
         fault: full seeded `FaultPlan` (chaos tests): NaN poisoning of
         trajectory `i`'s assembly at save-step `fault.step`, preemption
         with optional checkpoint corruption; see core/robust.py.
+        mismatch: policy when a loaded checkpoint belongs to a run of a
+        different size — see `pipeline.run_resumable`.
         """
         work = TrajectoryWork(self.family, self.cfg)
         return pipeline.run_resumable(work, key, num, ckpt=self._ckpt,
                                       ckpt_every=self.cfg.ckpt_every,
                                       progress_cb=progress_cb,
-                                      fail_at=fail_at, fault=fault)
+                                      fail_at=fail_at, fault=fault,
+                                      mismatch=mismatch)
 
 
 def generate_trajectories(family: TimeDepFamily, key: jax.Array, num: int,

@@ -40,7 +40,7 @@ from repro.obs.trace import NULL_SPAN, Tracer
 __all__ = [
     "enable", "disable", "enabled", "span", "instant", "counter",
     "counter_add", "gauge_set", "tracer", "registry", "record_dispatch",
-    "krylov_capacity",
+    "record_stream", "krylov_capacity",
     "delta_enabled", "summary", "export_chrome_trace", "export_jsonl",
     "KrylovTelemetry", "TelemetryConfig", "drain_chain", "ring_order",
     "Tracer", "Registry",
@@ -141,6 +141,20 @@ def record_dispatch(live: int, total: int, iters=None, cycles: int = 0):
     t = _TRACER
     if t is not None:
         t.counter("lockstep_rows", {"live": live, "padded": total - live})
+
+
+def record_stream(queue_depth: int, occupied: int, slots: int):
+    """Streaming-scheduler occupancy hook (see Registry.record_stream);
+    also samples a Chrome counter track so queue depth and slot occupancy
+    render on the trace timeline next to `lockstep_rows`."""
+    r = _REGISTRY
+    if r is None:
+        return
+    r.record_stream(queue_depth, occupied, slots)
+    t = _TRACER
+    if t is not None:
+        t.counter("stream", {"queue": queue_depth, "occupied": occupied,
+                             "free": slots - occupied}, cat="serve")
 
 
 # --------------------------------------------------- device Krylov config

@@ -58,6 +58,16 @@ class Registry:
             self.gauge_set("lockstep.iter_imbalance",
                            mx / mean if mean > 0 else 1.0)
 
+    # ------------------------------------------- streaming occupancy
+    def record_stream(self, queue_depth: int, occupied: int, slots: int):
+        """One streaming-scheduler tick (core/serve.py): current request
+        queue depth and slot occupancy. Gauges carry the live values; the
+        tick counter gives the sample count."""
+        self.gauge_set("stream.queue_depth", queue_depth)
+        self.gauge_set("stream.slots_occupied", occupied)
+        self.gauge_set("stream.slots_total", slots)
+        self.counter_add("stream.ticks")
+
     def utilization(self) -> float:
         """Live fraction of all dispatched lockstep rows (1.0 = no padding;
         the streaming-scheduler target reads >0.8 here)."""

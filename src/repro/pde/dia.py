@@ -19,6 +19,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# leading-axis gather, staged so index normalization happens inside the
+# trace (transfer-guard-clean; caches on shapes, so per-wave index VALUES
+# never recompile)
+_gather = jax.jit(lambda a, i: a[i])
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -164,7 +169,13 @@ class Stencil5:
         """Batched indexing: coeffs may carry leading batch dims
         (B, 5, nx, ny); `take` selects chains/systems along the first one.
         `idx` may be an int or an index array (gathering a (B, 5, nx, ny)
-        stacked operator for the lockstep solver from a dataset batch)."""
+        stacked operator for the lockstep solver from a dataset batch).
+        Array gathers run jitted — this is the per-wave hot path of both
+        the offline prefetch and the streaming scheduler, and staging it
+        keeps index normalization off the eager dispatch path."""
+        if getattr(idx, "ndim", 0):
+            return Stencil5(coeffs=_gather(self.coeffs,
+                                           jnp.asarray(np.asarray(idx))))
         return Stencil5(coeffs=self.coeffs[idx])
 
     def diagonal(self) -> jax.Array:

@@ -410,6 +410,7 @@ class TimeDepFamily(ProblemFamily):
         self.adapt = adapt
         self._step1 = None
         self._stepB = None
+        self._stepS = None
         self._build1 = None
         self._buildB = None
         self._eval1 = None
@@ -487,6 +488,18 @@ class TimeDepFamily(ProblemFamily):
             self._stepB = jax.jit(jax.vmap(self.step_system,
                                            in_axes=(0, 0, None, None)))
         return self._stepB
+
+    def step_fn_streamed(self):
+        """Like `step_fn_batched` but with the time endpoints batched too
+        ((W,) t_old / t_new): the streaming scheduler's slots drift out of
+        phase (each slot is mid-trajectory at its own step), so one
+        dispatch must advance W slots at W different times. Cached on the
+        instance like the other steppers — per-run jit wrappers would
+        retrace every run."""
+        if self._stepS is None:
+            self._stepS = jax.jit(jax.vmap(self.step_system,
+                                           in_axes=(0, 0, 0, 0)))
+        return self._stepS
 
     # -- generalized stepping stack (mass / BDF2 / adaptive) --------------
     def mass(self) -> Optional[MassMatrix]:

@@ -494,6 +494,33 @@ class BatchedGCRODRSolver:
         self._inner = None
         self._inner64 = None
 
+    def swap_slot(self, w: int, carry: np.ndarray | None = None,
+                  carry_ok: bool = False):
+        """Mid-flight slot swap — the streaming scheduler's refill hook
+        (core/serve.py). When chain slot `w` retires and a NEW chain takes
+        the slot between dispatches, only the recycle carry is solver
+        state: operators and RHS arrive fresh each `solve_batch`, and jit
+        caches on shapes, so same-shape new buffer contents never
+        recompile. `carry=None` (the fresh-chain default) zeroes the
+        slot's carry and clears `carry_ok`; passing an (n, k) `carry`
+        adopts it (the scheduler's assignment decided the retiring chain's
+        subspace is still relevant). Applies to this solver AND the
+        mixed-precision inner/fallback mirrors so a later downcast cannot
+        resurrect the retired chain's subspace. Pure host numpy — zero
+        device syncs, so the `host_syncs <= 2 + cycles` budget is
+        untouched (pinned by tests/test_serve.py under transfer_guard)."""
+        for s in (self, self._inner, self._inner64):
+            if s is None or s.u_carry is None:
+                continue
+            if carry is None:
+                s.u_carry[w] = 0.0
+                ok = False
+            else:
+                s.u_carry[w] = np.asarray(carry, dtype=s.u_carry.dtype)
+                ok = bool(carry_ok)
+            if s.carry_ok is not None:
+                s.carry_ok[w] = ok
+
     def _dev(self, x):
         """Place one solver array: chain-sharded over the mesh when a
         ChainSharding is configured, default single-device otherwise."""

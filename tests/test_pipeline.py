@@ -142,6 +142,43 @@ def test_prefetch_is_transparent():
         np.testing.assert_array_equal(a.order, b.order)
 
 
+def test_lockstep_error_propagates_past_inflight_prefetch():
+    """Regression: an `execute_row` failure used to hang in the prefetch
+    executor's `__exit__`, which waits for the in-flight `prepare_row` of
+    the NEXT row — under a fault plan that could mask the real failure
+    behind an arbitrarily long (or deadlocked) assembly. The error must
+    surface immediately, while that prepare is still running."""
+    import threading
+    import time
+
+    release = threading.Event()    # holds the row-1 prepare hostage
+    running = threading.Event()    # row-1 prepare has actually started
+
+    class HangingWork:
+        def prepare_row(self, t, idx):
+            if t == 1:
+                running.set()
+                release.wait(timeout=30.0)
+            return t
+
+        def execute_row(self, solver, t, idx, prepared):
+            assert running.wait(timeout=10.0)   # prefetch is mid-assembly
+            raise RuntimeError("device fault on row 0")
+
+        def expand_row(self, solver, t, idx):
+            pass
+
+    t0 = time.monotonic()
+    try:
+        with pytest.raises(RuntimeError, match="device fault on row 0"):
+            pipeline._run_lockstep(HangingWork(), [np.arange(3)],
+                                   solver=None, prefetch=True)
+        elapsed = time.monotonic() - t0
+    finally:
+        release.set()              # drain the hostage thread
+    assert elapsed < 10.0          # the old code waited out the prepare
+
+
 # ----------------------------------------------------------- padding stats
 
 def test_padded_rows_excluded_from_sequence_stats():

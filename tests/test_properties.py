@@ -126,6 +126,46 @@ def test_phase_mask_monotone_shutdown(n, workers):
     assert not mask.any_active
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 10), st.integers(0, 2**31 - 1))
+def test_phase_mask_finished_excludes_never_live(workers, seed):
+    """`finished` counts genuine active→inactive retirements only:
+    never-live sharding fill slots must not inflate it (the old
+    `(~active).sum()` counted them), and double-finishing is idempotent."""
+    live = np.random.default_rng(seed).random(workers) < 0.6
+    mask = pipeline.PhaseMask(live)
+    assert mask.finished == 0
+    for w in range(workers):
+        mask.finish(w)
+        mask.finish(w)   # idempotent: a slot retires its chain once
+    assert mask.finished == int(live.sum())
+
+
+def test_phase_mask_refill_slot_table():
+    """Streaming slot table: refill reopens a retired slot under a new
+    chain id, finished counts once per retired chain across refills, and
+    refilling a LIVE slot is rejected."""
+    import pytest
+
+    mask = pipeline.PhaseMask(np.zeros(3, dtype=bool))
+    assert not mask.any_active and (mask.chain == -1).all()
+    mask.refill(1, 7)
+    assert mask.active[1] and mask.chain[1] == 7
+    np.testing.assert_array_equal(mask.padded_rows, [True, False, True])
+    with pytest.raises(ValueError):
+        mask.refill(1, 8)
+    mask.finish(1)
+    assert mask.finished == 1 and not mask.any_active
+    mask.refill(1, 8)
+    mask.refill(0, 9)
+    assert mask.chain[1] == 8 and mask.chain[0] == 9
+    mask.finish(1)
+    mask.finish(0)
+    assert mask.finished == 3      # one per retired chain, not per slot
+    mask.finish(2)                 # never-live slot: no-op for the count
+    assert mask.finished == 3
+
+
 # ------------------------------------------------- GRF sampling contract
 # (pde/grf.py: fold_in key derivation — the label-expansion waves rebuild
 #  any single draw from its index, so these properties are load-bearing)

@@ -264,6 +264,57 @@ def test_resume_after_corrupted_checkpoint_end_to_end(tmp_path):
     assert res.label_ok.all()
 
 
+def test_resume_size_mismatch_rotates_stale_checkpoint_aside(tmp_path):
+    """Regression: a checkpoint from a DIFFERENTLY-SIZED run used to be
+    silently discarded and then OVERWRITTEN by the new run's first save.
+    Default policy now warns loudly, moves every stale generation aside to
+    `.staleN.npz` (outside the rotation ladder), and starts fresh."""
+    fam = get_family("poisson", nx=12, ny=12)
+    cfg = dataclasses.replace(CFG, ckpt_every=2)
+    key = jax.random.PRNGKey(3)
+    gen = SKRGenerator(fam, cfg, ckpt_dir=str(tmp_path))
+    with pytest.raises(RuntimeError, match="injected datagen fault"):
+        gen.generate(key, 8, fail_at=5)      # leaves an 8-system checkpoint
+    assert os.path.exists(gen._ckpt.gen_path(0))
+
+    ref = generate_dataset(fam, key, 6, cfg)  # no checkpointing
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        res = SKRGenerator(fam, cfg, ckpt_dir=str(tmp_path)).generate(key, 6)
+    msgs = [str(w.message) for w in wlog]
+    assert any("8-system run" in m and "asked for 6" in m
+               and "stale snapshot preserved" in m for m in msgs)
+    stale = [f for f in os.listdir(tmp_path) if ".stale" in f]
+    assert stale                              # nothing was overwritten
+    np.testing.assert_allclose(res.solutions, ref.solutions,
+                               rtol=1e-6, atol=1e-9)
+
+
+def test_resume_size_mismatch_error_and_discard_modes(tmp_path):
+    fam = get_family("poisson", nx=12, ny=12)
+    cfg = dataclasses.replace(CFG, ckpt_every=2)
+    key = jax.random.PRNGKey(3)
+    gen = SKRGenerator(fam, cfg, ckpt_dir=str(tmp_path))
+    with pytest.raises(RuntimeError, match="injected datagen fault"):
+        gen.generate(key, 8, fail_at=5)
+
+    with pytest.raises(RuntimeError, match="8-system run"):
+        SKRGenerator(fam, cfg, ckpt_dir=str(tmp_path)).generate(
+            key, 6, mismatch="error")
+    # "error" must leave the stale checkpoint untouched AND loadable
+    assert gen._ckpt.load(required=("pos", "order")) is not None
+
+    # "discard" is the old behavior, now an explicit acknowledgment
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        res = SKRGenerator(fam, cfg, ckpt_dir=str(tmp_path)).generate(
+            key, 6, mismatch="discard")
+    assert any("discarding it" in str(w.message) for w in wlog)
+    assert res.solutions.shape[0] == 6
+    # the discard run's own saves replaced the stale snapshot in-ladder
+    assert not [f for f in os.listdir(tmp_path) if ".stale" in f]
+
+
 # ---------------------------------------------------------------------------
 # trajectory datagen under faults
 # ---------------------------------------------------------------------------

@@ -1,0 +1,270 @@
+"""Streaming datagen scheduler (core/serve.py) acceptance tests.
+
+Covers the ISSUE-10 contract: a seeded Poisson-arrival trace streamed
+through `StreamScheduler` must reproduce the offline `run_chunked` labels
+at tolerance for the same request set; deadline-expired requests are
+force-admitted to the least-bad chain; a refilled slot never inherits a
+foreign chain's recycle carry unless the assignment decision said so
+(adoption within the similarity budget); and the mid-flight refill path
+adds no host syncs beyond the lockstep engine's `2 + cycles` budget
+(checked under `jax.transfer_guard("disallow")`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import serve
+from repro.core.skr import SKRConfig, SteadyStream, generate_dataset_chunked
+from repro.core.trajectory import (TrajConfig, TrajectoryStream,
+                                   generate_trajectories_chunked)
+from repro.pde.registry import get_family, get_timedep_family
+from repro.solvers.batched import BatchedGCRODRSolver
+from repro.solvers.types import KrylovConfig
+
+KC = KrylovConfig(m=30, k=10, tol=1e-9, maxiter=6000)
+
+
+def _rel(a, b):
+    return np.abs(np.asarray(a) - np.asarray(b)).max() / \
+        max(np.abs(np.asarray(b)).max(), 1e-300)
+
+
+# --------------------------------------------- streamed == offline labels
+
+def test_streamed_matches_offline_steady():
+    """Poisson arrivals over steady systems: every request completes and
+    the streamed per-item solutions match the offline chunked labels at
+    tol (both converge to residual <= tol; the carries differ)."""
+    fam = get_family("poisson", nx=10, ny=10)
+    cfg = SKRConfig(krylov=KC, precond="jacobi")
+    num, key = 12, jax.random.PRNGKey(7)
+
+    offline = np.zeros((num, 10, 10))
+    for r in generate_dataset_chunked(fam, key, num, cfg, workers=3,
+                                      engine="batched"):
+        offline[r.order] = r.solutions
+
+    work = SteadyStream(fam, cfg)
+    work.sample(key, num)   # same key → identical sampled batch
+    reqs = serve.poisson_trace(num, rate=20.0, seed=0)
+    rep = serve.StreamScheduler(
+        work, serve.StreamConfig(slots=3, tick=0.1)).run(reqs)
+
+    assert len(rep.completed) == num
+    assert sorted(r.item for r in rep.completed) == list(range(num))
+    assert work.label_ok.all()
+    assert _rel(work.outputs, offline) < 1e-6
+    assert np.isfinite(rep.latencies()).all()
+    assert (rep.latencies() >= 0).all()
+    assert rep.rows_live == num     # every live row solved one request
+
+
+def test_streamed_matches_offline_trajectory():
+    """Same acceptance for the time-dependent workload: out-of-phase slots
+    stepped per-slot-time must reproduce the offline lockstep marches."""
+    fam = get_timedep_family("heat", nx=8, ny=8, nt=4)
+    cfg = TrajConfig(krylov=KC, precond="jacobi")
+    num, key = 6, jax.random.PRNGKey(3)
+
+    offline = np.zeros((num, fam.nt + 1, 8, 8))
+    for r in generate_trajectories_chunked(fam, key, num, cfg, workers=2,
+                                           engine="batched"):
+        offline[r.order] = r.trajectories
+
+    work = TrajectoryStream(fam, cfg)
+    work.sample(key, num)
+    reqs = serve.poisson_trace(num, rate=30.0, seed=1)
+    rep = serve.StreamScheduler(
+        work, serve.StreamConfig(slots=2, tick=0.05)).run(reqs)
+
+    assert len(rep.completed) == num
+    assert work.label_ok.all()
+    assert _rel(work.outputs, offline) < 1e-5
+    assert rep.rows_live == num * fam.nt   # nt dispatches per trajectory
+
+
+def test_trajectory_stream_rejects_non_classic():
+    fam = get_timedep_family("heat", nx=8, ny=8, nt=3, integrator="bdf2")
+    work = TrajectoryStream(fam, TrajConfig(krylov=KC, precond="jacobi"))
+    work.sample(jax.random.PRNGKey(0), 2)
+    with pytest.raises(NotImplementedError):
+        work.begin_stream(2)
+
+
+# ------------------------------------------------ deadline force-admission
+
+def _deadline_run(deadline):
+    """2 slots, 3 simultaneous trajectory requests, budget that never
+    matches: request 2 must wait for a slot (nt ticks) unless its deadline
+    expires first, in which case it is force-admitted to the least-bad
+    live chain. tick=1 makes the clock fully deterministic."""
+    fam = get_timedep_family("heat", nx=8, ny=8, nt=4)
+    cfg = TrajConfig(krylov=KC, precond="jacobi")
+    work = TrajectoryStream(fam, cfg)
+    work.sample(jax.random.PRNGKey(5), 3)
+    reqs = [serve.Request(item=0, arrival=0.0),
+            serve.Request(item=1, arrival=0.0),
+            serve.Request(item=2, arrival=0.0, deadline=deadline)]
+    rep = serve.StreamScheduler(work, serve.StreamConfig(
+        slots=2, tick=1.0, similarity_budget=-1.0)).run(reqs)
+    return rep, work, next(r for r in rep.completed if r.item == 2)
+
+
+def test_deadline_expiry_force_admits():
+    rep, work, r2 = _deadline_run(deadline=2.0)
+    assert rep.forced == 1
+    assert r2.forced
+    assert r2.admitted == 2.0            # the tick its deadline expired
+    # force-admission APPENDS to a live chain rather than opening a new one
+    assert rep.chains == 2
+    assert r2.chain in [r.chain for r in rep.completed if r.item != 2]
+    assert work.label_ok.all()           # forced items still solve to tol
+
+
+def test_no_deadline_waits_for_free_slot():
+    rep, work, r2 = _deadline_run(deadline=None)
+    assert rep.forced == 0
+    assert not r2.forced
+    assert r2.admitted == 4.0            # waited out a full nt=4 trajectory
+    assert rep.chains == 3               # fresh chain in the freed slot
+    assert work.label_ok.all()
+
+
+# ------------------------------------------------------- carry hygiene
+
+def _same_item_twice(similarity_budget, second_arrival):
+    """One slot, the SAME system requested twice: the second solve's
+    iteration count reveals whether the recycle carry survived admission
+    (append/adopt) or was cleared (fresh refill)."""
+    fam = get_family("poisson", nx=10, ny=10)
+    cfg = SKRConfig(krylov=KC, precond="jacobi")
+    work = SteadyStream(fam, cfg)
+    work.sample(jax.random.PRNGKey(11), 4)
+    reqs = [serve.Request(item=0, arrival=0.0),
+            serve.Request(item=0, arrival=second_arrival)]
+    rep = serve.StreamScheduler(work, serve.StreamConfig(
+        slots=1, tick=1.0, similarity_budget=similarity_budget)).run(reqs)
+    its = [s.iterations for s in work.stats.per_system]
+    assert len(its) == 2 and work.label_ok[0]
+    return rep, its
+
+
+def test_refill_clears_foreign_carry():
+    """A refill outside the similarity budget must NOT inherit the retired
+    chain's carry: the second solve of the identical system runs exactly
+    as cold as the first."""
+    rep, its = _same_item_twice(similarity_budget=-1.0, second_arrival=10.0)
+    assert rep.chains == 2
+    assert its[1] == its[0]
+
+
+def test_refill_adopts_carry_within_budget():
+    """A refill whose head is within budget of the slot's LAST chain head
+    adopts the carry — the warm second solve takes fewer iterations."""
+    rep, its = _same_item_twice(similarity_budget=1e6, second_arrival=10.0)
+    assert rep.chains == 2               # still a new chain, carry adopted
+    assert its[1] < its[0]
+
+
+def test_append_rides_chain_carry():
+    """Within-budget admission appends to the live chain: same warm-start
+    effect without opening a chain."""
+    rep, its = _same_item_twice(similarity_budget=1e6, second_arrival=0.0)
+    assert rep.chains == 1
+    assert its[1] < its[0]
+
+
+def test_swap_slot_mechanics():
+    """swap_slot unit contract: clear zeroes one slot's carry and drops its
+    carry_ok; adopt installs the given carry; other slots untouched; the
+    mixed-precision inner mirror swaps in lockstep."""
+    from tests.test_transfer_guard import _batched_ops
+
+    ops, b = _batched_ops(chains=3)
+    solver = BatchedGCRODRSolver(KrylovConfig(m=18, k=6, tol=1e-8,
+                                              maxiter=2000))
+    solver.solve_batch(ops, b)
+    assert solver.carry_ok.all()
+    keep = solver.u_carry[0].copy()
+    solver.swap_slot(1)
+    assert not solver.carry_ok[1]
+    assert (solver.u_carry[1] == 0.0).all()
+    assert solver.carry_ok[0] and solver.carry_ok[2]
+    np.testing.assert_array_equal(solver.u_carry[0], keep)
+    solver.swap_slot(2, carry=keep, carry_ok=True)
+    assert solver.carry_ok[2]
+    np.testing.assert_array_equal(solver.u_carry[2], keep)
+
+    # mixed precision: the fp32 inner solver mirrors the swap
+    import dataclasses
+    cfg32 = dataclasses.replace(KrylovConfig(m=18, k=6, tol=1e-8,
+                                             maxiter=2000),
+                                inner_dtype="float32")
+    mixed = BatchedGCRODRSolver(cfg32)
+    mixed.solve_batch(ops, b)
+    assert mixed._inner is not None and mixed._inner.u_carry is not None
+    mixed.swap_slot(1)
+    assert not mixed.carry_ok[1] and not mixed._inner.carry_ok[1]
+    assert (mixed._inner.u_carry[1] == 0.0).all()
+
+
+# --------------------------------------------------- transfer-guard budget
+
+def test_streaming_refill_keeps_sync_budget():
+    """A dispatch → mid-flight swap (clear + adopt) → dispatch sequence
+    must run clean under the transfer guard with the host-sync budget
+    unchanged: the refill is pure host numpy."""
+    from tests.test_transfer_guard import _batched_ops
+
+    ops, b = _batched_ops(chains=3)
+    solver = BatchedGCRODRSolver(KrylovConfig(m=18, k=6, tol=1e-8,
+                                              maxiter=2000))
+    with jax.transfer_guard("disallow"):
+        x, stats = solver.solve_batch(ops, b)
+        solver.swap_slot(1)                                  # fresh refill
+        solver.swap_slot(2, carry=solver.u_carry[0].copy(),  # adoption
+                         carry_ok=True)
+        x, stats = solver.solve_batch(ops, b)
+    assert all(s.converged for s in stats)
+    cycles = max(s.cycles for s in stats)
+    assert all(s.host_syncs <= 2 + cycles for s in stats if not s.padded)
+
+
+def test_streamed_scheduler_keeps_sync_budget():
+    """End-to-end: every solve dispatched by the streaming loop — including
+    waves issued right after mid-flight refills — stays inside the lockstep
+    engine's counted host-sync budget."""
+    fam = get_family("poisson", nx=10, ny=10)
+    cfg = SKRConfig(krylov=KC, precond="jacobi")
+    work = SteadyStream(fam, cfg)
+    work.sample(jax.random.PRNGKey(2), 8)
+    reqs = serve.poisson_trace(8, rate=50.0, seed=4)
+    rep = serve.StreamScheduler(
+        work, serve.StreamConfig(slots=2, tick=0.02)).run(reqs)
+    assert len(rep.completed) == 8
+    cycles = max(s.cycles for s in work.stats.per_system)
+    assert all(s.host_syncs <= 2 + cycles
+               for s in work.stats.per_system if not s.padded)
+
+
+# --------------------------------------------------- refill vs wave padding
+
+def test_midflight_refill_beats_wave_padding():
+    """On a backlogged trace the mid-flight scheduler keeps slots occupied
+    while the wave baseline drains each admitted set with padding — the
+    utilization gap is the whole point of the refill path."""
+    fam = get_timedep_family("heat", nx=8, ny=8, nt=3)
+    cfg = TrajConfig(krylov=KC, precond="jacobi")
+    num, key = 9, jax.random.PRNGKey(9)
+    utils = {}
+    for refill in ("midflight", "wave"):
+        work = TrajectoryStream(fam, cfg)
+        work.sample(key, num)
+        reqs = serve.poisson_trace(num, rate=100.0, seed=6)
+        rep = serve.StreamScheduler(work, serve.StreamConfig(
+            slots=3, tick=0.05, refill=refill,
+            similarity_budget=-1.0)).run(reqs)
+        assert len(rep.completed) == num
+        utils[refill] = rep.utilization
+    assert utils["midflight"] > utils["wave"]
+    assert utils["midflight"] > 0.8
